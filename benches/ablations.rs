@@ -1,0 +1,76 @@
+//! Ablation study over KernelFoundry's three mechanisms (§3): disable
+//! gradient-informed evolution, disable meta-prompting, and sweep the
+//! selection strategies — quantifying each component's contribution on
+//! the representative L2 set (not a paper table; the design-choice
+//! analysis DESIGN.md §4 calls out).
+
+use kernelfoundry::config::FoundryConfig;
+use kernelfoundry::coordinator::EvolutionEngine;
+use kernelfoundry::eval::ExecBackend;
+use kernelfoundry::experiments::ExperimentScale;
+use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::metrics::{aggregate, TaskResult};
+use kernelfoundry::selection::Strategy;
+use kernelfoundry::tasks::catalog;
+
+fn run_variant(label: &str, mutate: impl Fn(&mut FoundryConfig), iters: usize) {
+    let mut results: Vec<TaskResult> = Vec::new();
+    for task in catalog::kernelbench_l2() {
+        let mut config = FoundryConfig::paper_defaults();
+        config.evolution.max_generations = iters;
+        mutate(&mut config);
+        let mut engine = EvolutionEngine::new(
+            config,
+            task.clone(),
+            ExecBackend::HwSim(DeviceProfile::b580()),
+        );
+        results.push(engine.run(false).task_result());
+    }
+    let agg = aggregate(&results);
+    println!(
+        "{label:<42} correct {:.2}  fast2 {:>3.0}%  avg {:.3}  geom {:.3}",
+        agg.correct_rate,
+        agg.fast_2 * 100.0,
+        agg.avg_speedup,
+        agg.geom_speedup
+    );
+}
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let iters = scale.iterations(40);
+    println!("## ablations — repr. L2, B580, {iters} iterations\n");
+    let start = std::time::Instant::now();
+
+    run_variant("full system", |_| {}, iters);
+    run_variant(
+        "- gradient-informed evolution",
+        |c| c.gradients_enabled = false,
+        iters,
+    );
+    run_variant(
+        "- meta-prompt co-evolution",
+        |c| c.meta_prompt.enabled = false,
+        iters,
+    );
+    run_variant(
+        "- both (archive-only QD)",
+        |c| {
+            c.gradients_enabled = false;
+            c.meta_prompt.enabled = false;
+        },
+        iters,
+    );
+    for strat in [
+        Strategy::Uniform,
+        Strategy::FitnessProportionate,
+        Strategy::Island,
+    ] {
+        run_variant(
+            &format!("selection = {}", strat.name()),
+            move |c| c.evolution.selection = strat,
+            iters,
+        );
+    }
+    println!("\n[ablations completed in {:.1}s]", start.elapsed().as_secs_f64());
+}

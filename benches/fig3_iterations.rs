@@ -1,0 +1,16 @@
+//! Regenerates **Figure 3**: improvement over iterations (cumulative
+//! best speedup), Ours vs OpenEvolve, mean over the representative L2
+//! set. Emits the full per-iteration series as CSV for plotting.
+
+use kernelfoundry::experiments::{fig3_series, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let start = std::time::Instant::now();
+    let out = fig3_series(scale);
+    out.print();
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig3_iterations.csv", &out.per_task_csv).ok();
+    println!("(series CSV -> results/fig3_iterations.csv)");
+    println!("\n[fig3_iterations completed in {:.1}s]", start.elapsed().as_secs_f64());
+}

@@ -1,0 +1,124 @@
+//! L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf): archive ops,
+//! gradient estimation, behavioral classification, prompt assembly,
+//! hwsim evaluation, and the full evolution-loop overhead split.
+
+use kernelfoundry::archive::{Elite, MapElites};
+use kernelfoundry::classify;
+use kernelfoundry::config::FoundryConfig;
+use kernelfoundry::coordinator::EvolutionEngine;
+use kernelfoundry::eval::{EvalPipeline, ExecBackend};
+use kernelfoundry::gradient::GradientEstimator;
+use kernelfoundry::hwsim::{kernel_cost, DeviceProfile};
+use kernelfoundry::ir::{render_sycl, KernelGenome, MemoryPattern};
+use kernelfoundry::prompts::{EvolvablePrompt, PromptBuilder};
+use kernelfoundry::tasks::catalog;
+use kernelfoundry::transitions::{Outcome, Transition, TransitionTracker};
+use kernelfoundry::util::rng::Rng;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = start.elapsed().as_secs_f64();
+    let per = dt / iters as f64;
+    let rate = 1.0 / per;
+    println!("{name:<44} {:>12.3} µs/op {:>14.0} op/s", per * 1e6, rate);
+    rate
+}
+
+fn main() {
+    println!("## perf_hotpaths — L3 microbenchmarks\n");
+    let task = catalog::find_task("99_Matmul_GELU_Softmax").unwrap();
+    let dev = DeviceProfile::b580();
+    let mut rng = Rng::new(1);
+
+    // Archive insert + select.
+    let mut archive = MapElites::new(4);
+    let genome = KernelGenome::direct_translation(&task.id);
+    bench("archive::insert", 200_000, || {
+        let coords = [rng.below(4), rng.below(4), rng.below(4)];
+        archive.insert(Elite {
+            genome: genome.clone(),
+            coords,
+            fitness: rng.f64(),
+            speedup: 1.0,
+            runtime_ms: 1.0,
+            iteration: 0,
+        });
+    });
+
+    // Gradient estimation over a full buffer.
+    let mut tracker = TransitionTracker::new(256);
+    for i in 0..256 {
+        tracker.record(Transition {
+            parent_coords: [rng.below(4), rng.below(4), rng.below(4)],
+            child_coords: [rng.below(4), rng.below(4), rng.below(4)],
+            parent_fitness: rng.f64(),
+            child_fitness: rng.f64(),
+            outcome: Outcome::Improvement,
+            iteration: i,
+        });
+    }
+    let est = GradientEstimator::default();
+    bench("gradient::estimate (256-deep buffer)", 20_000, || {
+        let _ = est.estimate(&tracker, &archive, [1, 1, 1], 256);
+    });
+    bench("gradient::sampling_weights (full archive)", 2_000, || {
+        let _ = est.sampling_weights(&tracker, &archive, 256);
+    });
+
+    // Renderer + classifier.
+    let mut g = KernelGenome::direct_translation(&task.id);
+    g.mem = MemoryPattern::MultiLevel;
+    g.params.reg_block = 4;
+    g.params.prefetch = true;
+    let src = render_sycl(&g);
+    bench("ir::render_sycl", 50_000, || {
+        let _ = render_sycl(&g);
+    });
+    bench("classify::classify_source", 50_000, || {
+        let _ = classify::classify_source(&src);
+    });
+
+    // Prompt assembly.
+    let builder = PromptBuilder::default();
+    let evolvable = EvolvablePrompt::default();
+    bench("prompts::build (no history)", 20_000, || {
+        let _ = builder.build(&task, &evolvable, None, None, None, &[], "Intel Arc B580");
+    });
+
+    // hwsim cost model + full pipeline evaluation.
+    bench("hwsim::kernel_cost", 500_000, || {
+        let _ = kernel_cost(&task, &g, &dev);
+    });
+    let mut pipeline = EvalPipeline::new(task.clone(), ExecBackend::HwSim(dev.clone()), 3);
+    let clean = {
+        let mut c = g.clone();
+        c.params.slm_pad = true;
+        c
+    };
+    bench("eval::pipeline.evaluate (full record)", 2_000, || {
+        let _ = pipeline.evaluate(&clean);
+    });
+
+    // Whole-loop throughput: evaluations/second through the engine.
+    let mut config = FoundryConfig::paper_defaults();
+    config.evolution.max_generations = 20;
+    config.evolution.population = 8;
+    let start = Instant::now();
+    let mut engine = EvolutionEngine::new(config, task.clone(), ExecBackend::HwSim(dev));
+    let report = engine.run(false);
+    let dt = start.elapsed().as_secs_f64();
+    println!(
+        "\nevolution loop: {} evaluations in {:.2}s = {:.0} eval/s end-to-end",
+        report.evaluations,
+        dt,
+        report.evaluations as f64 / dt
+    );
+}

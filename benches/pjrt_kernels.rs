@@ -1,0 +1,40 @@
+//! Real-artifact benchmarks: every AOT-compiled Pallas variant timed
+//! through the PJRT CPU client with the App. B.2 harness — the L1/L2
+//! perf half of EXPERIMENTS.md §Perf. Skips cleanly when `make
+//! artifacts` has not run.
+
+use kernelfoundry::eval::{BenchConfig, Benchmarker};
+use kernelfoundry::runtime::{Manifest, PjrtRuntime};
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("pjrt_kernels: artifacts/ not built (run `make artifacts`); skipping");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let mut rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    println!("## pjrt_kernels — real artifact timings ({})\n", rt.platform());
+    println!("{:<28} {:<24} {:>12} {:>10}", "task", "artifact", "time [ms]", "vs ref");
+
+    let bench = Benchmarker::new(BenchConfig::quick());
+    for task in manifest.tasks() {
+        let reference = manifest.reference_for(&task).unwrap().clone();
+        rt.execute(&reference).expect("reference runs");
+        let mut time_of = |art: &kernelfoundry::runtime::ArtifactInfo| {
+            let art = art.clone();
+            let mut src = |iters: usize| rt.time_batch(&art, iters).unwrap_or(f64::INFINITY);
+            bench.run(&mut src).time_ms
+        };
+        let t_ref = time_of(&reference);
+        println!("{:<28} {:<24} {:>12.4} {:>9.2}x", task, reference.name, t_ref, 1.0);
+        for variant in manifest.variants_for(&task).into_iter().cloned().collect::<Vec<_>>() {
+            let t = time_of(&variant);
+            println!(
+                "{:<28} {:<24} {:>12.4} {:>9.2}x",
+                "", variant.name, t, t_ref / t
+            );
+        }
+    }
+}

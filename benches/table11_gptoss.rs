@@ -1,0 +1,17 @@
+//! Regenerates **Table 11** (App. G): the GPT-OSS-20B reproducibility
+//! run on the representative L2 set (SYCL, LNL profile, population 4).
+//! The weak open model should fail to find a correct kernel on a
+//! substantial fraction of tasks (the paper: 7 of 20).
+
+use kernelfoundry::experiments::{table11, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let start = std::time::Instant::now();
+    let out = table11(scale);
+    out.print();
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table11_gptoss.csv", &out.per_task_csv).ok();
+    println!("(CSV -> results/table11_gptoss.csv)");
+    println!("\n[table11_gptoss completed in {:.1}s]", start.elapsed().as_secs_f64());
+}

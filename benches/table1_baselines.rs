@@ -1,0 +1,22 @@
+//! Regenerates **Table 1** (+ per-task Tables 7 & 8): baseline
+//! comparison on CUDA-profile hardware (A6000) — Kernelsseum-like
+//! repeated prompting, AI-CUDA-Engineer-like single-objective evolution,
+//! Ours, and Ours + parameter optimization, over the representative
+//! KernelBench L1/L2 sets and robust-kbench.
+//!
+//! Set `KF_BENCH_SCALE=quick` for a reduced run.
+
+use kernelfoundry::experiments::{table1, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let start = std::time::Instant::now();
+    std::fs::create_dir_all("results").ok();
+    for (i, out) in table1(scale).iter().enumerate() {
+        out.print();
+        let name = format!("results/table1_{}.csv", ["l1", "l2", "rkb"][i]);
+        std::fs::write(&name, &out.per_task_csv).ok();
+        println!("(per-task CSV -> {name})");
+    }
+    println!("\n[table1_baselines completed in {:.1}s]", start.elapsed().as_secs_f64());
+}

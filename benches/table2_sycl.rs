@@ -1,0 +1,19 @@
+//! Regenerates **Table 2** (+ per-task Table 9): SYCL generation on the
+//! B580 profile — Ours on the filtered KernelBench set (n = 111) and
+//! Ours vs OpenEvolve on the representative L2 set at 10 and 40
+//! iterations.
+
+use kernelfoundry::experiments::{table2, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let start = std::time::Instant::now();
+    std::fs::create_dir_all("results").ok();
+    for (i, out) in table2(scale).iter().enumerate() {
+        out.print();
+        let name = format!("results/table2_{}.csv", ["filtered", "l2"][i]);
+        std::fs::write(&name, &out.per_task_csv).ok();
+        println!("(per-task CSV -> {name})");
+    }
+    println!("\n[table2_sycl completed in {:.1}s]", start.elapsed().as_secs_f64());
+}

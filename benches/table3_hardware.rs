@@ -1,0 +1,31 @@
+//! Regenerates **Table 3** (+ per-task Table 10): the §5.3
+//! hardware-awareness crossover — kernels optimized on LNL vs B580,
+//! benchmarked on both devices; reports hws, hws₁, hws₁.₅, avg/geom.
+
+use kernelfoundry::experiments::{run_crossover, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let start = std::time::Instant::now();
+    let result = run_crossover(scale);
+    println!("\n## Table 3 / Table 10 — hardware-awareness crossover (repr. L2)\n");
+    println!("{}", result.markdown());
+    println!(
+        "LNL-optimized:  hws1 {:>4.0}%  hws1.5 {:>4.0}%  avg {:.3}  geom {:.3}",
+        result.lnl.hws_1 * 100.0,
+        result.lnl.hws_15 * 100.0,
+        result.lnl.avg,
+        result.lnl.geom
+    );
+    println!(
+        "B580-optimized: hws1 {:>4.0}%  hws1.5 {:>4.0}%  avg {:.3}  geom {:.3}",
+        result.b580.hws_1 * 100.0,
+        result.b580.hws_15 * 100.0,
+        result.b580.avg,
+        result.b580.geom
+    );
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table3_crossover.csv", result.csv()).ok();
+    println!("(per-task CSV -> results/table3_crossover.csv)");
+    println!("\n[table3_hardware completed in {:.1}s]", start.elapsed().as_secs_f64());
+}

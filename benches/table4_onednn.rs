@@ -1,0 +1,17 @@
+//! Regenerates **Table 4**: speedup of generated SYCL kernels over the
+//! oneDNN-like vendor-library baseline on five operations, including the
+//! custom-task inputs (initial implementation for concat+layernorm, user
+//! guidance for the exp2 softmax).
+
+use kernelfoundry::experiments::{table4, ExperimentScale};
+
+fn main() {
+    let scale = ExperimentScale::from_env();
+    let start = std::time::Instant::now();
+    let out = table4(scale);
+    out.print();
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table4_onednn.csv", &out.per_task_csv).ok();
+    println!("(CSV -> results/table4_onednn.csv)");
+    println!("\n[table4_onednn completed in {:.1}s]", start.elapsed().as_secs_f64());
+}

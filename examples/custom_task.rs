@@ -1,0 +1,83 @@
+//! Custom task input (App. C): define a task from a YAML config plus a
+//! marker-annotated source file — the paper's "flexible user input layer
+//! that supports kernel generation for a wide range of real-world use
+//! cases beyond benchmarking".
+//!
+//! ```bash
+//! cargo run --release --example custom_task
+//! ```
+
+use kernelfoundry::config::FoundryConfig;
+use kernelfoundry::coordinator::EvolutionEngine;
+use kernelfoundry::eval::ExecBackend;
+use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::tasks::custom;
+
+const TASK_YAML: &str = "\
+name: my_fused_norm
+backward: false
+workload:
+  - op: norm
+    elems: 8388608
+    groups: 8192
+  - op: elementwise
+    elems: 8388608
+    flops_per_elem: 4
+    sfu_per_elem: 1
+tests:
+  command: pytest tests/test_my_fused_norm.py -q
+evolution:
+  max_generations: 16
+";
+
+const TASK_SOURCE: &str = "\
+### KF:REFERENCE ###
+def forward(x, gamma, beta):
+    h = torch.layer_norm(x, x.shape[-1:], gamma, beta)
+    return torch.nn.functional.gelu(h)
+### KF:INSTRUCTIONS ###
+Fuse the normalization and activation into a single pass; an online
+normalization formulation is acceptable if numerics stay within 1e-2
+relative error.
+### KF:INITIAL_KERNEL ###
+// starting point: coalesced but unfused translation
+### KF:END ###
+";
+
+fn main() {
+    // 1. Parse the App. C bundle.
+    let bundle = custom::load_strings(TASK_YAML, TASK_SOURCE).expect("valid custom task");
+    println!("== custom task: {} ==", bundle.spec.id);
+    println!("reference:\n{}", bundle.reference_code);
+    println!("user instructions: {:?}", bundle.spec.user_instructions);
+    println!("pytest hook: {:?}", bundle.test_command);
+
+    // 2. The task config's own hyperparameters override the defaults.
+    let mut config = FoundryConfig::paper_defaults();
+    config.apply_doc(&bundle.config);
+    config.evolution.population = 6;
+    println!(
+        "evolution: {} generations (from task.yaml)",
+        config.evolution.max_generations
+    );
+
+    // 3. Optimize — the initial kernel seeds the first prompt's parent.
+    let mut engine = EvolutionEngine::new(
+        config,
+        bundle.spec.clone(),
+        ExecBackend::HwSim(DeviceProfile::b580()),
+    );
+    if bundle.initial_kernel.is_some() {
+        let mut init = kernelfoundry::ir::KernelGenome::direct_translation(&bundle.spec.id);
+        init.mem = kernelfoundry::ir::MemoryPattern::Coalesced;
+        engine.initial_genome = Some(init);
+    }
+    let report = engine.run(true);
+    let best = report.best.expect("correct kernel");
+    println!(
+        "\nresult: {:.2}x over the eager baseline; the user instructions steered the model \
+         toward the online reformulation (cell {:?})",
+        best.speedup, best.coords
+    );
+    assert!(best.speedup > 1.0);
+}

@@ -1,0 +1,70 @@
+//! Distributed framework demo (§3.6, App. C, Fig. 4): compile workers +
+//! execution workers behind a backpressured queue, with the database
+//! recording every evaluation for reproducibility.
+//!
+//! ```bash
+//! cargo run --release --example distributed_run
+//! ```
+
+use kernelfoundry::dist::{ClusterConfig, Database, DbRow, WorkerPool};
+use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::ir::{Defect, DefectKind, KernelGenome, MemoryPattern};
+use kernelfoundry::tasks::catalog;
+use std::sync::atomic::Ordering;
+
+fn main() {
+    let task = catalog::find_task("85_Conv2d_GroupNorm_Scale_MaxPool_Clamp").unwrap();
+
+    // A candidate batch with a realistic defect mix.
+    let genomes: Vec<KernelGenome> = (0..64)
+        .map(|i| {
+            let mut g = KernelGenome::direct_translation(&task.id);
+            g.id = i;
+            g.mem = MemoryPattern::from_level((i % 4) as usize);
+            g.params.slm_pad = true;
+            g.params.vec_width = 4;
+            if i % 7 == 0 {
+                g.defects.push(Defect { kind: DefectKind::SyntaxError, severity: 1.0 });
+            }
+            g
+        })
+        .collect();
+
+    println!("== distributed evaluation: {} candidates ==", genomes.len());
+    for (nc, ne) in [(1usize, 1usize), (2, 2), (2, 4), (4, 8)] {
+        let pool = WorkerPool::new(ClusterConfig {
+            compile_workers: nc,
+            exec_workers: ne,
+            device: DeviceProfile::b580(),
+            queue_capacity: 32,
+            seed: 9,
+        });
+        let start = std::time::Instant::now();
+        let records = pool.evaluate_batch(&task, genomes.clone());
+        let dt = start.elapsed().as_secs_f64();
+        println!(
+            "  {nc} compile + {ne} exec workers: {:>6.2}s ({:>6.1} cand/s) — {} compiled, {} rejected pre-GPU",
+            dt,
+            records.len() as f64 / dt,
+            pool.metrics.compiled.load(Ordering::Relaxed),
+            pool.metrics.compile_rejected.load(Ordering::Relaxed),
+        );
+
+        // Database server: persist everything (App. C worker type 4).
+        if ne == 8 {
+            let db = Database::new();
+            for (i, rec) in records.iter().enumerate() {
+                db.insert(DbRow::from_record("demo-run", "distributed", i, rec));
+            }
+            let path = std::env::temp_dir().join("kernelfoundry_demo.jsonl");
+            db.save(&path).unwrap();
+            println!(
+                "  database: {} rows persisted to {} (inspect with `kernelfoundry report --db ...`)",
+                db.len(),
+                path.display()
+            );
+        }
+    }
+    println!("\nscaling exec workers shortens wall-clock while compile workers absorb rejects —");
+    println!("the Fig. 4 topology: only execution workers would need GPUs.");
+}

@@ -1,0 +1,45 @@
+//! Quickstart: optimize one KernelBench task end to end with the public
+//! API and inspect the result.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use kernelfoundry::config::FoundryConfig;
+use kernelfoundry::coordinator::EvolutionEngine;
+use kernelfoundry::eval::ExecBackend;
+use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::tasks::catalog;
+
+fn main() {
+    // 1. Pick a task (an L2 fusion pattern) and a target device profile.
+    let task = catalog::find_task("1_Conv2D_ReLU_BiasAdd").expect("task exists");
+    let device = DeviceProfile::b580();
+
+    // 2. Configure: paper defaults (Table 6), shortened for a demo.
+    let mut config = FoundryConfig::paper_defaults();
+    config.evolution.max_generations = 20;
+    config.evolution.population = 6;
+
+    // 3. Run the evolutionary loop (+ templated parameter optimization).
+    let mut engine = EvolutionEngine::new(config, task, ExecBackend::HwSim(device));
+    let report = engine.run(true);
+
+    // 4. Inspect.
+    println!("== quickstart: {} ==", report.task_id);
+    println!(
+        "evaluated {} candidates ({} compile errors, {} incorrect)",
+        report.evaluations, report.compile_errors, report.incorrect
+    );
+    let best = report.best.as_ref().expect("found a correct kernel");
+    println!(
+        "best: speedup {:.2}x over PyTorch-eager baseline (cell {:?}, model {})",
+        best.speedup, best.coords, best.genome.produced_by
+    );
+    println!("improvement curve (cumulative best speedup):");
+    for p in report.series.iter().step_by(4) {
+        println!("  iter {:>3}: {:.3}x  [{} cells occupied]", p.iteration, p.best_speedup, p.cells_occupied);
+    }
+    println!("\ngenerated SYCL kernel:\n{}", best.source);
+    assert!(best.speedup > 1.0);
+}

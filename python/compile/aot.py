@@ -1,0 +1,231 @@
+"""AOT compilation driver (Layer-2 -> artifacts).
+
+Lowers every kernel variant (x parameter grid) and the transformer-block
+forwards to HLO *text* + a manifest consumed by the rust runtime.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate links) rejects; the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Python runs ONCE at build time (`make artifacts`); the rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model
+from compile.kernels import fused as k_fused
+from compile.kernels import layernorm as k_ln
+from compile.kernels import matmul as k_mm
+from compile.kernels import reduction as k_red
+from compile.kernels import ref
+from compile.kernels import rope as k_rope
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    """jit -> lower -> stablehlo -> XlaComputation -> HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def build_registry():
+    """All artifacts: (name, task, role, params, fn, input shapes).
+
+    `role` is 'reference' (baseline + expected-output source) or
+    'variant'. Constants (weights, rotary tables) are closed over so the
+    rust side only feeds deterministic normal tensors.
+    """
+    entries = []
+
+    # ---- llama_rope (section 5.5) ----------------------------------------
+    B, H, S, D = 2, model.HEADS, model.SEQ, model.HEAD_DIM
+    cos, sin = k_rope.make_cos_sin(S, D)
+    qk = [[B, H, S, D], [B, H, S, D]]
+    entries.append(
+        ("rope_ref", "llama_rope", "reference", {},
+         lambda q, k: ref.rope(q, k, cos, sin), qk)
+    )
+    for bs in k_rope.SEQ_BLOCK_OPTIONS:
+        entries.append(
+            (f"rope_naive_bs{bs}", "llama_rope", "variant", {"bs": bs},
+             lambda q, k, bs=bs: k_rope.rope_naive(q, k, cos, sin, bs=bs), qk)
+        )
+        entries.append(
+            (f"rope_fused_bs{bs}", "llama_rope", "variant", {"bs": bs},
+             lambda q, k, bs=bs: k_rope.rope_fused(q, k, cos, sin, bs=bs), qk)
+        )
+
+    # ---- softmax (Table 4 / reformulation) --------------------------------
+    SM = [256, 512]
+    entries.append(
+        ("softmax_ref", "softmax_real", "reference", {},
+         lambda x: (ref.softmax(x),), [SM])
+    )
+    for br in [8, 16]:
+        entries.append(
+            (f"softmax_twopass_br{br}", "softmax_real", "variant",
+             {"br": br, "algo": "twopass"},
+             lambda x, br=br: (k_sm_twopass(x, br),), [SM])
+        )
+        entries.append(
+            (f"softmax_online_br{br}", "softmax_real", "variant",
+             {"br": br, "algo": "online"},
+             lambda x, br=br: (k_sm_online(x, br),), [SM])
+        )
+
+    # ---- matmul ------------------------------------------------------------
+    MM = [[256, 256], [256, 256]]
+    entries.append(
+        ("matmul_ref", "matmul_real", "reference", {},
+         lambda x, y: (ref.matmul(x, y),), MM)
+    )
+    for bm, bn in [(16, 16), (32, 32), (64, 64)]:
+        entries.append(
+            (f"matmul_bm{bm}_bn{bn}", "matmul_real", "variant",
+             {"bm": bm, "bn": bn},
+             lambda x, y, bm=bm, bn=bn: (k_mm.matmul(x, y, bm=bm, bn=bn),), MM)
+        )
+
+    # ---- concat + layernorm (Table 4 custom task) ---------------------------
+    LN = [256, 256]
+    gamma = jnp.ones((LN[1],), jnp.float32)
+    beta = jnp.zeros((LN[1],), jnp.float32)
+    entries.append(
+        ("concat_ln_ref", "concat_layernorm_real", "reference", {},
+         lambda x: (ref.concat_layernorm(x, gamma, beta),), [LN])
+    )
+    for br in [8, 16]:
+        entries.append(
+            (f"concat_ln_fused_br{br}", "concat_layernorm_real", "variant", {"br": br},
+             lambda x, br=br: (k_ln.concat_layernorm(x, gamma, beta, br=br),), [LN])
+        )
+
+    # ---- fused elementwise chain ---------------------------------------------
+    FE = [256, 512]
+    key = jax.random.PRNGKey(3)
+    bias = jax.random.normal(key, (FE[1],), jnp.float32)
+    scale = jax.random.normal(jax.random.PRNGKey(4), (FE[1],), jnp.float32)
+    entries.append(
+        ("fused_chain_ref", "fused_chain_real", "reference", {},
+         lambda x: (ref.bias_gelu_scale(x, bias, scale),), [FE])
+    )
+    entries.append(
+        ("fused_chain_naive", "fused_chain_real", "variant", {"fused": 0},
+         lambda x: (k_fused.bias_gelu_scale_naive(x, bias, scale),), [FE])
+    )
+    entries.append(
+        ("fused_chain_fused", "fused_chain_real", "variant", {"fused": 1},
+         lambda x: (k_fused.bias_gelu_scale_fused(x, bias, scale),), [FE])
+    )
+
+    # ---- sum reduction -----------------------------------------------------------
+    RD = [256, 1024]
+    entries.append(
+        ("sum_reduce_ref", "sum_reduction_real", "reference", {},
+         lambda x: (ref.sum_reduce(x),), [RD])
+    )
+    for br in [8, 16]:
+        entries.append(
+            (f"sum_reduce_br{br}", "sum_reduction_real", "variant", {"br": br},
+             lambda x, br=br: (k_red.sum_reduce(x, br),), [RD])
+        )
+
+    # ---- transformer block forward (section 5.5 model-level check) ---------------
+    params = model.init_params(0)
+    X = [model.BATCH, model.SEQ, model.HIDDEN]
+    entries.append(
+        ("block_fwd_ref", "block_fwd", "reference", {},
+         lambda x: model.block_forward_ref(x, params), [X])
+    )
+    entries.append(
+        ("block_fwd_fused", "block_fwd", "variant", {"rope": "fused"},
+         lambda x: model.block_forward_fused(x, params), [X])
+    )
+    return entries
+
+
+# Late-bound wrappers so the registry closure stays readable.
+def k_sm_twopass(x, br):
+    from compile.kernels import softmax as k_sm
+    return k_sm.softmax_twopass(x, br=br)
+
+
+def k_sm_online(x, br):
+    from compile.kernels import softmax as k_sm
+    return k_sm.softmax_online(x, br=br)
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources — lets `make artifacts` skip the
+    (slow) lowering when nothing changed."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    fingerprint = source_fingerprint()
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(manifest_path) and args.only is None:
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fingerprint:
+            print(f"artifacts up to date (fingerprint {fingerprint[:12]}); skipping")
+            return
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"fingerprint": fingerprint, "artifacts": {}}
+    for name, task, role, params, fn, shapes in build_registry():
+        if only and name not in only:
+            continue
+        example = [spec(s) for s in shapes]
+        print(f"lowering {name} ({task}, {role}) ...", flush=True)
+        text = to_hlo_text(fn, *example)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "task": task,
+            "role": role,
+            "params": params,
+            "inputs": [{"shape": s, "seed": i + 1} for i, s in enumerate(shapes)],
+        }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

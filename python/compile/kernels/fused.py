@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernels: fused elementwise chains (the L2 fusion
+pattern: bias + GELU + scale)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GELU_C = 0.7978845608028654
+
+
+def _bias_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = x_ref[...] + b_ref[...]
+
+
+def _gelu_kernel(x_ref, o_ref):
+    h = x_ref[...]
+    o_ref[...] = 0.5 * h * (1.0 + jnp.tanh(GELU_C * (h + 0.044715 * h**3)))
+
+
+def _scale_kernel(x_ref, s_ref, o_ref):
+    o_ref[...] = x_ref[...] * s_ref[...]
+
+
+def _fused_kernel(x_ref, b_ref, s_ref, o_ref):
+    h = x_ref[...] + b_ref[...]
+    g = 0.5 * h * (1.0 + jnp.tanh(GELU_C * (h + 0.044715 * h**3)))
+    o_ref[...] = g * s_ref[...]
+
+
+def _ew_call(kernel, out_rows, br, *args):
+    rows, cols = args[0].shape
+    assert rows % br == 0
+    n_in = len(args)
+    in_specs = []
+    for a in args:
+        if a.ndim == 2:
+            in_specs.append(pl.BlockSpec((br, cols), lambda i: (i, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((cols,), lambda i: (0,)))
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(*args)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def bias_gelu_scale_naive(x, bias, scale, br: int = 16):
+    """Direct translation: three kernel launches, two intermediate
+    tensors round-trip through memory."""
+    h = _ew_call(_bias_kernel, None, br, x, bias)
+    g = _ew_call(_gelu_kernel, None, br, h)
+    return _ew_call(_scale_kernel, None, br, g, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def bias_gelu_scale_fused(x, bias, scale, br: int = 16):
+    """Fused single-pass kernel."""
+    return _ew_call(_fused_kernel, None, br, x, bias, scale)
+
+
+ROW_BLOCK_OPTIONS = [8, 16, 32, 64]

@@ -1,0 +1,66 @@
+"""Layer-1 Pallas kernels: layernorm and the fused concat(x, LN(x)) op
+(the section 5.4 oneDNN comparison's custom-task kernel)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def layernorm(x, gamma, beta, br: int = 16, eps: float = 1e-5):
+    rows, cols = x.shape
+    assert rows % br == 0
+    kernel = functools.partial(_layernorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+def _concat_ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    # Fused single pass: read x once, write [x, LN(x)] — the traffic
+    # saving oneDNN's two separate primitives cannot achieve.
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    ln = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+    o_ref[...] = jnp.concatenate([x, ln], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def concat_layernorm(x, gamma, beta, br: int = 16, eps: float = 1e-5):
+    rows, cols = x.shape
+    assert rows % br == 0
+    kernel = functools.partial(_concat_ln_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, 2 * cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 2 * cols), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+ROW_BLOCK_OPTIONS = [8, 16, 32]

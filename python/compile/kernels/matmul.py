@@ -1,0 +1,48 @@
+"""Layer-1 Pallas kernel: tiled matmul.
+
+Hardware adaptation (DESIGN.md, Hardware-Adaptation section): the paper's
+SYCL SLM-tiled GEMM becomes a Pallas kernel whose BlockSpec expresses the
+HBM<->VMEM schedule. Block sizes are the templated parameters (section
+3.4) — `make_matmul(bm, bn)` is the dispatch grid the evaluation pipeline
+sweeps.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    # One (bm, bn) output tile per program; K is kept resident (the
+    # VMEM-friendly "small-K panel" schedule).
+    o_ref[...] = jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x, y, bm: int = 32, bn: int = 32):
+    """Tiled matmul via pallas_call; bm/bn are the tile parameters."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0, "shape must be divisible by tile"
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+#: Parameter grid exposed to the rust evaluation pipeline (section 3.4).
+TILE_OPTIONS = [(16, 16), (32, 32), (64, 64), (32, 64)]

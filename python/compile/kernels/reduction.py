@@ -1,0 +1,28 @@
+"""Layer-1 Pallas kernel: row-sum reduction (Table 4 sum-reduction op)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sum_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def sum_reduce(x, br: int = 16):
+    rows, cols = x.shape
+    assert rows % br == 0
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+ROW_BLOCK_OPTIONS = [8, 16, 32]

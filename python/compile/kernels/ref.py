@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for every Pallas kernel (Layer-1
+correctness ground truth).
+
+Each function is the mathematical definition the corresponding Pallas
+kernel must reproduce; pytest compares kernel outputs against these with
+the paper's strict relative-precision criterion (see tests).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Dense matmul in f32."""
+    return jnp.matmul(x, y)
+
+
+def softmax(x):
+    """Row-wise softmax over the last axis (numerically stable 2-pass)."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """Layer normalization over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def concat_layernorm(x, gamma, beta, eps=1e-5):
+    """Section 5.4 oneDNN comparison op: concat(x, layernorm(x))."""
+    return jnp.concatenate([x, layernorm(x, gamma, beta, eps)], axis=-1)
+
+
+def rotate_half(x):
+    """Llama rotate-half: (-x2, x1) on the last-dim halves."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def rope(q, k, cos, sin):
+    """apply_rotary_pos_emb (section 5.5): unsqueeze + rotate-half.
+
+    q, k: (B, H, S, D); cos, sin: (S, D) broadcast over batch and heads.
+    """
+    cos = cos[None, None, :, :]
+    sin = sin[None, None, :, :]
+    q_out = q * cos + rotate_half(q) * sin
+    k_out = k * cos + rotate_half(k) * sin
+    return q_out, k_out
+
+
+def bias_gelu_scale(x, bias, scale):
+    """L2-style fused elementwise chain: scale * gelu(x + bias)."""
+    h = x + bias
+    g = 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+    return g * scale
+
+
+def sum_reduce(x):
+    """Sum over the last axis."""
+    return jnp.sum(x, axis=-1)

@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernels: rotary positional embedding (section 5.5 case
+study: the Llama 3.2 apply_rotary_pos_emb bottleneck).
+
+Variants along the paper's optimization dimensions:
+
+* `rope_naive` — direct translation: two separate kernel launches (one
+  for q, one for k), materializing rotate_half.
+* `rope_fused` — single fused kernel over q and k with the rotate-half
+  expressed as in-register index arithmetic; seq-block parametric.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rope_one_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[...]
+    half = x.shape[-1] // 2
+    rot = jnp.concatenate([-x[..., half:], x[..., :half]], axis=-1)
+    o_ref[...] = x * cos_ref[...][None, None, :, :] + rot * sin_ref[...][None, None, :, :]
+
+
+def _rope_call(x, cos, sin, bs: int):
+    b, h, s, d = x.shape
+    assert s % bs == 0
+    return pl.pallas_call(
+        _rope_one_kernel,
+        grid=(s // bs,),
+        in_specs=[
+            pl.BlockSpec((b, h, bs, d), lambda i: (0, 0, i, 0)),
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, h, bs, d), lambda i: (0, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+        interpret=True,
+    )(x, cos, sin)
+
+
+@functools.partial(jax.jit, static_argnames=("bs",))
+def rope_naive(q, k, cos, sin, bs: int = 32):
+    """Two separate launches — the PyTorch-eager-like shape."""
+    return _rope_call(q, cos, sin, bs), _rope_call(k, cos, sin, bs)
+
+
+def _rope_fused_kernel(q_ref, k_ref, cos_ref, sin_ref, qo_ref, ko_ref):
+    cos = cos_ref[...][None, None, :, :]
+    sin = sin_ref[...][None, None, :, :]
+    for x_ref, o_ref in ((q_ref, qo_ref), (k_ref, ko_ref)):
+        x = x_ref[...]
+        half = x.shape[-1] // 2
+        rot = jnp.concatenate([-x[..., half:], x[..., :half]], axis=-1)
+        o_ref[...] = x * cos + rot * sin
+
+
+@functools.partial(jax.jit, static_argnames=("bs",))
+def rope_fused(q, k, cos, sin, bs: int = 32):
+    """Single fused launch for q and k: cos/sin read once, both outputs
+    written in one pass."""
+    b, h, s, d = q.shape
+    assert q.shape == k.shape and s % bs == 0
+    return pl.pallas_call(
+        _rope_fused_kernel,
+        grid=(s // bs,),
+        in_specs=[
+            pl.BlockSpec((b, h, bs, d), lambda i: (0, 0, i, 0)),
+            pl.BlockSpec((b, h, bs, d), lambda i: (0, 0, i, 0)),
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+            pl.BlockSpec((bs, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, h, bs, d), lambda i: (0, 0, i, 0)),
+            pl.BlockSpec((b, h, bs, d), lambda i: (0, 0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, cos, sin)
+
+
+def make_cos_sin(seq: int, dim: int, base: float = 10000.0):
+    """Llama-style rotary tables: cos/sin of shape (seq, dim)."""
+    inv_freq = 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    t = jnp.arange(seq, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv_freq)
+    emb = jnp.concatenate([freqs, freqs], axis=-1)
+    return jnp.cos(emb), jnp.sin(emb)
+
+
+SEQ_BLOCK_OPTIONS = [16, 32, 64]

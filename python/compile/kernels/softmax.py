@@ -1,0 +1,83 @@
+"""Layer-1 Pallas kernels: row softmax.
+
+Two algorithmic variants matching the paper's d_algo dimension:
+
+* `softmax_twopass` — the direct translation (d_algo level 0/1): max
+  pass, then exp/sum/normalize.
+* `softmax_online` — the reformulated algorithm (d_algo level 2): a
+  single streaming pass with running max and exp2-based rescaling, the
+  Flash-Attention-4-inspired formulation of section 5.4's user guidance.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LOG2E = 1.4426950408889634
+
+
+def _twopass_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _online_kernel(x_ref, o_ref, *, chunk: int):
+    """Streaming softmax: process the row in chunks, maintaining a
+    running max and a running sum rescaled via exp2."""
+    x = x_ref[...]
+    n = x.shape[-1]
+    n_chunks = n // chunk
+
+    def body(i, carry):
+        run_max, run_sum = carry
+        sl = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=-1)
+        new_max = jnp.maximum(run_max, jnp.max(sl, axis=-1, keepdims=True))
+        # exp2-based rescaling reduces SFU pressure vs exp (section 5.4).
+        run_sum = run_sum * jnp.exp2((run_max - new_max) * LOG2E) + jnp.sum(
+            jnp.exp2((sl - new_max) * LOG2E), axis=-1, keepdims=True
+        )
+        return new_max, run_sum
+
+    init = (
+        jnp.full(x.shape[:-1] + (1,), -jnp.inf, dtype=x.dtype),
+        jnp.zeros(x.shape[:-1] + (1,), dtype=x.dtype),
+    )
+    run_max, run_sum = jax.lax.fori_loop(0, n_chunks, body, init)
+    o_ref[...] = jnp.exp2((x - run_max) * LOG2E) / run_sum
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def softmax_twopass(x, br: int = 16):
+    rows, cols = x.shape
+    assert rows % br == 0
+    return pl.pallas_call(
+        _twopass_kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "chunk"))
+def softmax_online(x, br: int = 16, chunk: int = 64):
+    rows, cols = x.shape
+    assert rows % br == 0 and cols % chunk == 0
+    kernel = functools.partial(_online_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+ROW_BLOCK_OPTIONS = [8, 16, 32]
+CHUNK_OPTIONS = [32, 64, 128]

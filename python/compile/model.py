@@ -1,0 +1,94 @@
+"""Layer-2 JAX model: a small Llama-style transformer block.
+
+The section 5.5 case study targets apply_rotary_pos_emb inside the
+Llama 3.2 attention block. This module defines a scaled-down block whose
+forward pass can be lowered with either the *reference* RoPE (pure jnp,
+eager-shaped) or the *optimized* fused Pallas RoPE kernel — both lower to
+HLO text consumed by the rust runtime, which verifies model-level output
+identity and measures the forward-pass speedup.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fused as k_fused
+from compile.kernels import ref
+from compile.kernels import rope as k_rope
+
+# Scaled-down Llama-3.2-ish block dimensions (hidden 256, 4 heads,
+# head_dim 64, seq 128, batch 2) — small enough for CPU interpret mode.
+BATCH = 2
+HEADS = 4
+HEAD_DIM = 64
+SEQ = 128
+HIDDEN = HEADS * HEAD_DIM
+FFN = 2 * HIDDEN
+
+
+def init_params(seed: int = 0):
+    """Deterministic block parameters."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 8)
+    s = 0.02
+    return {
+        "wq": jax.random.normal(ks[0], (HIDDEN, HIDDEN), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (HIDDEN, HIDDEN), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (HIDDEN, HIDDEN), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (HIDDEN, HIDDEN), jnp.float32) * s,
+        "w1": jax.random.normal(ks[4], (HIDDEN, FFN), jnp.float32) * s,
+        "w2": jax.random.normal(ks[5], (FFN, HIDDEN), jnp.float32) * s,
+        "gamma": jnp.ones((HIDDEN,), jnp.float32),
+        "beta": jnp.zeros((HIDDEN,), jnp.float32),
+    }
+
+
+def _split_heads(x):
+    b, s, _ = x.shape
+    return x.reshape(b, s, HEADS, HEAD_DIM).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def block_forward(x, params, use_fused_rope: bool):
+    """One transformer block forward: LN -> RoPE attention -> MLP.
+
+    `use_fused_rope` switches between the reference rotate-half RoPE and
+    the fused Pallas kernel; outputs must be numerically identical.
+    """
+    cos, sin = k_rope.make_cos_sin(SEQ, HEAD_DIM)
+    h = ref.layernorm(x, params["gamma"], params["beta"])
+    q = _split_heads(h @ params["wq"])
+    k = _split_heads(h @ params["wk"])
+    v = _split_heads(h @ params["wv"])
+
+    if use_fused_rope:
+        q, k = k_rope.rope_fused(q, k, cos, sin, bs=32)
+    else:
+        q, k = ref.rope(q, k, cos, sin)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(HEAD_DIM))
+    attn = ref.softmax(scores.reshape(-1, SEQ)).reshape(scores.shape)
+    ctx = _merge_heads(jnp.einsum("bhqk,bhkd->bhqd", attn, v))
+    x = x + ctx @ params["wo"]
+
+    # MLP with the fused bias-gelu-scale kernel path exercised via jnp
+    # (kernel variants are AOT'd separately).
+    m = x @ params["w1"]
+    m = 0.5 * m * (1.0 + jnp.tanh(0.7978845608028654 * (m + 0.044715 * m**3)))
+    return x + m @ params["w2"]
+
+
+def block_forward_ref(x, params):
+    return (block_forward(x, params, use_fused_rope=False),)
+
+
+def block_forward_fused(x, params):
+    return (block_forward(x, params, use_fused_rope=True),)
+
+
+def example_input(seed: int = 1):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (BATCH, SEQ, HIDDEN), jnp.float32)

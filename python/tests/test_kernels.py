@@ -1,0 +1,187 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Uses hypothesis to sweep shapes and parameter grids (the paper's strict
+relative-precision criterion nu < 0.01 on >= 99% of elements, section 4,
+is asserted alongside plain allclose)."""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused as k_fused
+from compile.kernels import layernorm as k_ln
+from compile.kernels import matmul as k_mm
+from compile.kernels import reduction as k_red
+from compile.kernels import ref
+from compile.kernels import rope as k_rope
+from compile.kernels import softmax as k_sm
+
+SETTINGS = settings(max_examples=8, deadline=None)
+
+
+def nu_correct(expected, actual, nu_threshold=0.01, pass_fraction=0.99):
+    """The paper's section 4 criterion."""
+    e = np.asarray(expected, dtype=np.float64)
+    a = np.asarray(actual, dtype=np.float64)
+    nu = np.abs(e - a) / (np.abs(e) + 1e-8)
+    return (nu < nu_threshold).mean() >= pass_fraction
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+@SETTINGS
+@given(
+    m=st.sampled_from([32, 64, 128]),
+    n=st.sampled_from([32, 64]),
+    k=st.sampled_from([16, 64, 96]),
+    tile=st.sampled_from([(16, 16), (32, 32)]),
+)
+def test_matmul_matches_ref(m, n, k, tile):
+    bm, bn = tile
+    if m % bm or n % bn:
+        return
+    x, y = rand(1, (m, k)), rand(2, (k, n))
+    out = k_mm.matmul(x, y, bm=bm, bn=bn)
+    np.testing.assert_allclose(out, ref.matmul(x, y), rtol=2e-5, atol=1e-5)
+    assert nu_correct(ref.matmul(x, y), out)
+
+
+# ---------------------------------------------------------------- softmax
+
+@SETTINGS
+@given(
+    rows=st.sampled_from([16, 32, 64]),
+    cols=st.sampled_from([64, 128, 256]),
+    br=st.sampled_from([8, 16]),
+)
+def test_softmax_twopass(rows, cols, br):
+    if rows % br:
+        return
+    x = rand(3, (rows, cols)) * 4.0
+    out = k_sm.softmax_twopass(x, br=br)
+    np.testing.assert_allclose(out, ref.softmax(x), rtol=1e-5, atol=1e-6)
+
+
+@SETTINGS
+@given(
+    rows=st.sampled_from([16, 32]),
+    cols=st.sampled_from([64, 128, 256]),
+    chunk=st.sampled_from([32, 64]),
+)
+def test_softmax_online_reformulation(rows, cols, chunk):
+    if cols % chunk:
+        return
+    x = rand(4, (rows, cols)) * 6.0  # wide range stresses the rescaling
+    out = k_sm.softmax_online(x, br=8, chunk=chunk)
+    np.testing.assert_allclose(out, ref.softmax(x), rtol=1e-4, atol=1e-6)
+    assert nu_correct(ref.softmax(x), out)
+    rowsums = jnp.sum(out, axis=-1)
+    np.testing.assert_allclose(rowsums, jnp.ones_like(rowsums), rtol=1e-5)
+
+
+# ---------------------------------------------------------------- layernorm
+
+@SETTINGS
+@given(rows=st.sampled_from([16, 32, 64]), cols=st.sampled_from([64, 128]))
+def test_layernorm(rows, cols):
+    x = rand(5, (rows, cols))
+    gamma = rand(6, (cols,)) * 0.1 + 1.0
+    beta = rand(7, (cols,)) * 0.1
+    out = k_ln.layernorm(x, gamma, beta, br=8)
+    np.testing.assert_allclose(out, ref.layernorm(x, gamma, beta), rtol=1e-4, atol=1e-5)
+
+
+@SETTINGS
+@given(rows=st.sampled_from([16, 32]), cols=st.sampled_from([64, 128]))
+def test_concat_layernorm_fused(rows, cols):
+    x = rand(8, (rows, cols))
+    gamma = jnp.ones((cols,))
+    beta = jnp.zeros((cols,))
+    out = k_ln.concat_layernorm(x, gamma, beta, br=8)
+    expect = ref.concat_layernorm(x, gamma, beta)
+    assert out.shape == (rows, 2 * cols)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-5)
+    # First half is x verbatim (the concat's pass-through lane).
+    np.testing.assert_allclose(out[:, :cols], x, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- rope
+
+@SETTINGS
+@given(
+    seq=st.sampled_from([32, 64, 128]),
+    dim=st.sampled_from([32, 64]),
+    bs=st.sampled_from([16, 32]),
+)
+def test_rope_variants_match_ref(seq, dim, bs):
+    if seq % bs:
+        return
+    q = rand(9, (2, 2, seq, dim))
+    k = rand(10, (2, 2, seq, dim))
+    cos, sin = k_rope.make_cos_sin(seq, dim)
+    qr, kr = ref.rope(q, k, cos, sin)
+    qn, kn = k_rope.rope_naive(q, k, cos, sin, bs=bs)
+    qf, kf = k_rope.rope_fused(q, k, cos, sin, bs=bs)
+    for got, want in [(qn, qr), (kn, kr), (qf, qr), (kf, kr)]:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        assert nu_correct(want, got)
+
+
+def test_rope_preserves_norm():
+    """Rotary embedding is a rotation: per-pair norms are preserved."""
+    q = rand(11, (1, 1, 32, 64))
+    cos, sin = k_rope.make_cos_sin(32, 64)
+    qf, _ = k_rope.rope_fused(q, q, cos, sin, bs=16)
+    # Norm over the rotated pairs (d/2 pairs of (x1, x2)).
+    def pair_norms(x):
+        half = x.shape[-1] // 2
+        return x[..., :half] ** 2 + x[..., half:] ** 2
+    np.testing.assert_allclose(pair_norms(qf), pair_norms(q), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- fused chain
+
+@SETTINGS
+@given(rows=st.sampled_from([16, 32, 64]), cols=st.sampled_from([64, 128]))
+def test_fused_chain_equals_naive_and_ref(rows, cols):
+    x = rand(12, (rows, cols))
+    bias = rand(13, (cols,))
+    scale = rand(14, (cols,))
+    want = ref.bias_gelu_scale(x, bias, scale)
+    naive = k_fused.bias_gelu_scale_naive(x, bias, scale, br=8)
+    fused = k_fused.bias_gelu_scale_fused(x, bias, scale, br=8)
+    np.testing.assert_allclose(naive, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(fused, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(fused, naive, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------- reduction
+
+@SETTINGS
+@given(rows=st.sampled_from([16, 32, 64]), cols=st.sampled_from([128, 1024]))
+def test_sum_reduce(rows, cols):
+    x = rand(15, (rows, cols))
+    out = k_red.sum_reduce(x, br=8)
+    np.testing.assert_allclose(out, ref.sum_reduce(x), rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------- strict-nu motivating case
+
+def test_nu_criterion_rejects_absolute_tolerance_trap():
+    """Small outputs with large relative error pass abs-tol 1e-2 but must
+    fail the paper's nu criterion (section 4)."""
+    y = np.full(1000, 1e-3, dtype=np.float32)
+    yh = np.full(1000, 6e-3, dtype=np.float32)
+    assert np.allclose(y, yh, atol=1e-2)  # the loose KernelBench check
+    assert not nu_correct(y, yh)  # the paper's check

@@ -1,0 +1,275 @@
+//! MAP-Elites evolutionary archive (§3.2).
+//!
+//! Partitions the kernel solution space into a discrete grid over the
+//! behavioral coordinates `(d_mem, d_algo, d_sync)` (4 bins each → 64
+//! cells by default) and keeps the highest-fitness kernel (*elite*) per
+//! occupied cell. Insertion replaces the incumbent only on strict fitness
+//! improvement (or an empty cell), so "the archive cannot collapse because
+//! each cell evolves independently".
+
+use crate::classify::{cell_index, coords_of, Coords};
+use crate::ir::KernelGenome;
+use crate::util::json::Json;
+
+/// One archived elite: genome plus its evaluation outcome.
+#[derive(Debug, Clone)]
+pub struct Elite {
+    pub genome: KernelGenome,
+    pub coords: Coords,
+    pub fitness: f64,
+    pub speedup: f64,
+    pub runtime_ms: f64,
+    /// Iteration at which this elite entered the archive.
+    pub iteration: usize,
+}
+
+/// Result of an insertion attempt, mirroring the paper's transition
+/// outcomes (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InsertOutcome {
+    /// Candidate filled a previously-empty cell.
+    NewCell,
+    /// Candidate replaced the incumbent elite.
+    Improved,
+    /// Candidate was competitive (within tolerance) but did not update
+    /// the archive.
+    Neutral,
+    /// Candidate was strictly worse.
+    Rejected,
+}
+
+impl InsertOutcome {
+    pub fn updated_archive(self) -> bool {
+        matches!(self, InsertOutcome::NewCell | InsertOutcome::Improved)
+    }
+}
+
+/// The MAP-Elites grid.
+#[derive(Debug, Clone)]
+pub struct MapElites {
+    bins: usize,
+    cells: Vec<Option<Elite>>,
+    /// Relative fitness tolerance for classifying "neutral" outcomes.
+    neutral_tolerance: f64,
+    insertions: usize,
+    attempts: usize,
+}
+
+impl MapElites {
+    pub fn new(bins: usize) -> MapElites {
+        MapElites {
+            bins,
+            cells: vec![None; bins * bins * bins],
+            neutral_tolerance: 0.02,
+            insertions: 0,
+            attempts: 0,
+        }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.bins
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Attempt to insert a candidate. Replaces the incumbent iff the cell
+    /// is empty or the candidate's fitness is strictly higher.
+    pub fn insert(&mut self, elite: Elite) -> InsertOutcome {
+        self.attempts += 1;
+        let idx = cell_index(elite.coords, self.bins);
+        match &self.cells[idx] {
+            None => {
+                self.cells[idx] = Some(elite);
+                self.insertions += 1;
+                InsertOutcome::NewCell
+            }
+            Some(incumbent) => {
+                if elite.fitness > incumbent.fitness {
+                    self.cells[idx] = Some(elite);
+                    self.insertions += 1;
+                    InsertOutcome::Improved
+                } else if elite.fitness >= incumbent.fitness * (1.0 - self.neutral_tolerance) {
+                    InsertOutcome::Neutral
+                } else {
+                    InsertOutcome::Rejected
+                }
+            }
+        }
+    }
+
+    pub fn get(&self, coords: Coords) -> Option<&Elite> {
+        self.cells[cell_index(coords, self.bins)].as_ref()
+    }
+
+    pub fn occupied(&self) -> impl Iterator<Item = &Elite> {
+        self.cells.iter().filter_map(|c| c.as_ref())
+    }
+
+    pub fn occupied_coords(&self) -> Vec<Coords> {
+        self.cells
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.is_some())
+            .map(|(i, _)| coords_of(i, self.bins))
+            .collect()
+    }
+
+    /// Coordinates of empty cells (exploration targets for ∇E).
+    pub fn empty_coords(&self) -> Vec<Coords> {
+        self.cells
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.is_none())
+            .map(|(i, _)| coords_of(i, self.bins))
+            .collect()
+    }
+
+    pub fn n_occupied(&self) -> usize {
+        self.cells.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// Coverage: fraction of cells occupied.
+    pub fn coverage(&self) -> f64 {
+        self.n_occupied() as f64 / self.n_cells() as f64
+    }
+
+    /// QD-score: sum of elite fitnesses (standard quality-diversity metric).
+    pub fn qd_score(&self) -> f64 {
+        self.occupied().map(|e| e.fitness).sum()
+    }
+
+    /// The globally best elite.
+    pub fn best(&self) -> Option<&Elite> {
+        self.occupied()
+            .max_by(|a, b| a.fitness.partial_cmp(&b.fitness).unwrap())
+    }
+
+    /// Maximum fitness in the archive (0.0 when empty) — `f_max` in eq. 3.
+    pub fn f_max(&self) -> f64 {
+        self.occupied().map(|e| e.fitness).fold(0.0, f64::max)
+    }
+
+    /// Cells whose elite fitness is below `threshold` — together with the
+    /// empty cells these form the ∇E target set `E` (eq. 3).
+    pub fn low_quality_coords(&self, threshold: f64) -> Vec<(Coords, f64)> {
+        self.cells
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.as_ref().map(|e| (i, e.fitness)))
+            .filter(|(_, f)| *f < threshold)
+            .map(|(i, f)| (coords_of(i, self.bins), f))
+            .collect()
+    }
+
+    pub fn stats(&self) -> ArchiveStats {
+        ArchiveStats {
+            occupied: self.n_occupied(),
+            total_cells: self.n_cells(),
+            qd_score: self.qd_score(),
+            best_fitness: self.f_max(),
+            best_speedup: self.best().map(|e| e.speedup).unwrap_or(0.0),
+            insertions: self.insertions,
+            attempts: self.attempts,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let elites: Vec<Json> = self
+            .occupied()
+            .map(|e| {
+                let mut o = Json::obj();
+                o.set("coords", e.coords.to_vec())
+                    .set("fitness", e.fitness)
+                    .set("speedup", e.speedup)
+                    .set("runtime_ms", e.runtime_ms)
+                    .set("iteration", e.iteration)
+                    .set("genome", e.genome.to_json());
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("bins", self.bins).set("elites", Json::Arr(elites));
+        o
+    }
+}
+
+/// Snapshot summary of archive health.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArchiveStats {
+    pub occupied: usize,
+    pub total_cells: usize,
+    pub qd_score: f64,
+    pub best_fitness: f64,
+    pub best_speedup: f64,
+    pub insertions: usize,
+    pub attempts: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn elite(coords: Coords, fitness: f64) -> Elite {
+        Elite {
+            genome: KernelGenome::direct_translation("t"),
+            coords,
+            fitness,
+            speedup: fitness * 2.0,
+            runtime_ms: 1.0,
+            iteration: 0,
+        }
+    }
+
+    #[test]
+    fn empty_cell_accepts() {
+        let mut a = MapElites::new(4);
+        assert_eq!(a.insert(elite([0, 0, 0], 0.5)), InsertOutcome::NewCell);
+        assert_eq!(a.n_occupied(), 1);
+    }
+
+    #[test]
+    fn replacement_requires_strict_improvement() {
+        let mut a = MapElites::new(4);
+        a.insert(elite([1, 2, 3], 0.6));
+        assert_eq!(a.insert(elite([1, 2, 3], 0.6)), InsertOutcome::Neutral);
+        assert_eq!(a.insert(elite([1, 2, 3], 0.598)), InsertOutcome::Neutral);
+        assert_eq!(a.insert(elite([1, 2, 3], 0.3)), InsertOutcome::Rejected);
+        assert_eq!(a.get([1, 2, 3]).unwrap().fitness, 0.6);
+        assert_eq!(a.insert(elite([1, 2, 3], 0.7)), InsertOutcome::Improved);
+        assert_eq!(a.get([1, 2, 3]).unwrap().fitness, 0.7);
+    }
+
+    #[test]
+    fn cells_are_independent() {
+        let mut a = MapElites::new(4);
+        a.insert(elite([0, 0, 0], 0.9));
+        // A much worse kernel in a different cell is still accepted.
+        assert_eq!(a.insert(elite([3, 3, 3], 0.11)), InsertOutcome::NewCell);
+        assert_eq!(a.n_occupied(), 2);
+    }
+
+    #[test]
+    fn qd_metrics() {
+        let mut a = MapElites::new(4);
+        a.insert(elite([0, 0, 0], 0.5));
+        a.insert(elite([1, 0, 0], 0.7));
+        assert_eq!(a.n_occupied(), 2);
+        assert!((a.qd_score() - 1.2).abs() < 1e-12);
+        assert_eq!(a.f_max(), 0.7);
+        assert_eq!(a.best().unwrap().coords, [1, 0, 0]);
+        assert!((a.coverage() - 2.0 / 64.0).abs() < 1e-12);
+        assert_eq!(a.empty_coords().len(), 62);
+    }
+
+    #[test]
+    fn low_quality_listing() {
+        let mut a = MapElites::new(4);
+        a.insert(elite([0, 0, 0], 0.2));
+        a.insert(elite([2, 2, 2], 0.9));
+        let low = a.low_quality_coords(0.5);
+        assert_eq!(low.len(), 1);
+        assert_eq!(low[0].0, [0, 0, 0]);
+    }
+}

@@ -1,0 +1,316 @@
+//! Configuration system.
+//!
+//! [`FoundryConfig`] carries every Table 6 hyperparameter plus the
+//! experiment-level knobs (task set, device, language, models). Loadable
+//! from YAML (the App. C custom-task config format) or JSON, with CLI
+//! overrides.
+
+use crate::selection::Strategy;
+use crate::util::json::Json;
+use crate::util::yamlite;
+
+/// Evolution hyperparameters (Table 6 "Evolution" block).
+#[derive(Debug, Clone)]
+pub struct EvolutionConfig {
+    /// Max generations (Table 6: 40, varies by experiment).
+    pub max_generations: usize,
+    /// Population per generation (Table 6: 8).
+    pub population: usize,
+    /// Selection strategy (Table 6: curiosity-driven).
+    pub selection: Strategy,
+    /// Archive dimensions (Table 6: 4 — 3 behavioral + fitness).
+    pub archive_dims: usize,
+    /// Bins per dimension (Table 6: 4).
+    pub bins: usize,
+    /// Transition buffer capacity.
+    pub transition_capacity: usize,
+    /// Island count / migration period for island selection.
+    pub islands: usize,
+    pub migration_period: usize,
+}
+
+impl Default for EvolutionConfig {
+    fn default() -> EvolutionConfig {
+        EvolutionConfig {
+            max_generations: 40,
+            population: 8,
+            selection: Strategy::Curiosity,
+            archive_dims: 4,
+            bins: 4,
+            transition_capacity: 256,
+            islands: 4,
+            migration_period: 5,
+        }
+    }
+}
+
+/// Evaluation hyperparameters (Table 6 "Evaluation" block).
+#[derive(Debug, Clone)]
+pub struct EvaluationConfig {
+    /// Warmup iterations (Table 6: 10).
+    pub warmup_iterations: usize,
+    /// Timing iterations (Table 6: 100).
+    pub timing_iterations: usize,
+    /// Target speedup for fitness normalization (Table 6: 2.0×).
+    pub target_speedup: f64,
+}
+
+impl Default for EvaluationConfig {
+    fn default() -> EvaluationConfig {
+        EvaluationConfig {
+            warmup_iterations: 10,
+            timing_iterations: 100,
+            target_speedup: 2.0,
+        }
+    }
+}
+
+/// Meta-prompting hyperparameters (Table 6 "Meta-prompting" block).
+#[derive(Debug, Clone)]
+pub struct MetaPromptConfig {
+    /// Prompt update frequency in generations (Table 6: every 10).
+    pub update_every: usize,
+    /// Max prompt mutations per update (Table 6: 3).
+    pub max_mutations: usize,
+    /// Prompt archive size (Table 6: 16).
+    pub archive_size: usize,
+    /// Master switch (ablations / OpenEvolve baseline disable it).
+    pub enabled: bool,
+}
+
+impl Default for MetaPromptConfig {
+    fn default() -> MetaPromptConfig {
+        MetaPromptConfig {
+            update_every: 10,
+            max_mutations: 3,
+            archive_size: 16,
+            enabled: true,
+        }
+    }
+}
+
+/// LLM hyperparameters (Table 6 "LLM" block). Temperature/top-p are
+/// carried for fidelity; the simulated models derive their stochasticity
+/// from capability profiles.
+#[derive(Debug, Clone)]
+pub struct LlmConfig {
+    pub temperature: f64,
+    pub max_tokens: usize,
+    pub top_p: f64,
+    /// Ensemble member names (capability profiles).
+    pub models: Vec<String>,
+    /// Optional stronger model for the first iteration (App. B.4).
+    pub first_iteration_model: Option<String>,
+}
+
+impl Default for LlmConfig {
+    fn default() -> LlmConfig {
+        LlmConfig {
+            temperature: 0.3,
+            max_tokens: 8000,
+            top_p: 1.0,
+            models: vec!["gpt-4.1".to_string(), "gpt-5-mini".to_string()],
+            first_iteration_model: Some("sonnet-4.5".to_string()),
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default)]
+pub struct FoundryConfig {
+    pub evolution: EvolutionConfig,
+    pub evaluation: EvaluationConfig,
+    pub meta_prompt: MetaPromptConfig,
+    pub llm: LlmConfig,
+    /// Target device profile name (lnl / b580 / a6000).
+    pub device: String,
+    /// Kernel language (sycl / cuda / triton).
+    pub language: String,
+    /// Gradient-informed selection + hints (ablations disable).
+    pub gradients_enabled: bool,
+    /// Templated parameter-optimization iterations after evolution
+    /// (§5.1: 2 iterations, best@8).
+    pub param_opt_iterations: usize,
+    pub param_opt_population: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl FoundryConfig {
+    pub fn paper_defaults() -> FoundryConfig {
+        FoundryConfig {
+            device: "b580".to_string(),
+            language: "sycl".to_string(),
+            gradients_enabled: true,
+            param_opt_iterations: 2,
+            param_opt_population: 8,
+            seed: 20260710,
+            ..Default::default()
+        }
+    }
+
+    /// Apply a parsed config document (YAML or JSON value) on top of the
+    /// current values; unknown keys are ignored, present keys override.
+    pub fn apply_doc(&mut self, doc: &Json) {
+        let geti = |v: Option<&Json>| v.and_then(|x| x.as_usize());
+        let getf = |v: Option<&Json>| v.and_then(|x| x.as_f64());
+        let gets = |v: Option<&Json>| v.and_then(|x| x.as_str()).map(String::from);
+        let getb = |v: Option<&Json>| v.and_then(|x| x.as_bool());
+
+        if let Some(e) = doc.get("evolution") {
+            if let Some(v) = geti(e.get("max_generations")) {
+                self.evolution.max_generations = v;
+            }
+            if let Some(v) = geti(e.get("population")) {
+                self.evolution.population = v;
+            }
+            if let Some(s) = gets(e.get("selection")) {
+                if let Some(st) = Strategy::parse(&s) {
+                    self.evolution.selection = st;
+                }
+            }
+            if let Some(v) = geti(e.get("bins")) {
+                self.evolution.bins = v;
+            }
+            if let Some(v) = geti(e.get("islands")) {
+                self.evolution.islands = v;
+            }
+            if let Some(v) = geti(e.get("migration_period")) {
+                self.evolution.migration_period = v;
+            }
+        }
+        if let Some(e) = doc.get("evaluation") {
+            if let Some(v) = getf(e.get("target_speedup")) {
+                self.evaluation.target_speedup = v;
+            }
+            if let Some(v) = geti(e.get("warmup_iterations")) {
+                self.evaluation.warmup_iterations = v;
+            }
+            if let Some(v) = geti(e.get("timing_iterations")) {
+                self.evaluation.timing_iterations = v;
+            }
+        }
+        if let Some(e) = doc.get("meta_prompting") {
+            if let Some(v) = geti(e.get("update_every")) {
+                self.meta_prompt.update_every = v;
+            }
+            if let Some(v) = geti(e.get("max_mutations")) {
+                self.meta_prompt.max_mutations = v;
+            }
+            if let Some(v) = geti(e.get("archive_size")) {
+                self.meta_prompt.archive_size = v;
+            }
+            if let Some(v) = getb(e.get("enabled")) {
+                self.meta_prompt.enabled = v;
+            }
+        }
+        if let Some(e) = doc.get("llm") {
+            if let Some(v) = getf(e.get("temperature")) {
+                self.llm.temperature = v;
+            }
+            if let Some(v) = geti(e.get("max_tokens")) {
+                self.llm.max_tokens = v;
+            }
+            if let Some(models) = e.get("models").and_then(|m| m.as_arr()) {
+                self.llm.models = models
+                    .iter()
+                    .filter_map(|m| m.as_str().map(String::from))
+                    .collect();
+            }
+            if let Some(s) = gets(e.get("first_iteration_model")) {
+                self.llm.first_iteration_model = Some(s);
+            }
+        }
+        if let Some(s) = gets(doc.get("device")) {
+            self.device = s;
+        }
+        if let Some(s) = gets(doc.get("language")) {
+            self.language = s;
+        }
+        if let Some(b) = getb(doc.get("gradients_enabled")) {
+            self.gradients_enabled = b;
+        }
+        if let Some(v) = geti(doc.get("param_opt_iterations")) {
+            self.param_opt_iterations = v;
+        }
+        if let Some(v) = doc.get("seed").and_then(|x| x.as_i64()) {
+            self.seed = v as u64;
+        }
+    }
+
+    pub fn from_yaml(text: &str) -> Result<FoundryConfig, yamlite::YamlError> {
+        let doc = yamlite::parse(text)?;
+        let mut c = FoundryConfig::paper_defaults();
+        c.apply_doc(&doc);
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut evo = Json::obj();
+        evo.set("max_generations", self.evolution.max_generations)
+            .set("population", self.evolution.population)
+            .set("selection", self.evolution.selection.name())
+            .set("bins", self.evolution.bins);
+        let mut o = Json::obj();
+        o.set("evolution", evo)
+            .set("device", self.device.as_str())
+            .set("language", self.language.as_str())
+            .set("seed", self.seed as f64)
+            .set("target_speedup", self.evaluation.target_speedup);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 6 defaults, verbatim.
+    #[test]
+    fn table6_defaults() {
+        let c = FoundryConfig::paper_defaults();
+        assert_eq!(c.evolution.max_generations, 40);
+        assert_eq!(c.evolution.population, 8);
+        assert_eq!(c.evolution.selection, Strategy::Curiosity);
+        assert_eq!(c.evolution.archive_dims, 4);
+        assert_eq!(c.evolution.bins, 4);
+        assert_eq!(c.evaluation.warmup_iterations, 10);
+        assert_eq!(c.evaluation.timing_iterations, 100);
+        assert_eq!(c.evaluation.target_speedup, 2.0);
+        assert_eq!(c.meta_prompt.update_every, 10);
+        assert_eq!(c.meta_prompt.max_mutations, 3);
+        assert_eq!(c.meta_prompt.archive_size, 16);
+        assert_eq!(c.llm.temperature, 0.3);
+        assert_eq!(c.llm.max_tokens, 8000);
+        assert_eq!(c.llm.top_p, 1.0);
+        assert_eq!(c.param_opt_iterations, 2);
+    }
+
+    #[test]
+    fn yaml_overrides() {
+        let yaml = "\
+evolution:
+  max_generations: 10
+  population: 4
+  selection: island
+device: lnl
+llm:
+  models: [o3-mini]
+gradients_enabled: false
+";
+        let c = FoundryConfig::from_yaml(yaml).unwrap();
+        assert_eq!(c.evolution.max_generations, 10);
+        assert_eq!(c.evolution.population, 4);
+        assert_eq!(c.evolution.selection, Strategy::Island);
+        assert_eq!(c.device, "lnl");
+        assert_eq!(c.llm.models, vec!["o3-mini"]);
+        assert!(!c.gradients_enabled);
+        // Untouched values keep defaults.
+        assert_eq!(c.meta_prompt.update_every, 10);
+    }
+
+    #[test]
+    fn bad_yaml_is_error() {
+        assert!(FoundryConfig::from_yaml("nonsense without colon\n").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! The evolutionary coordinator (§3.1): ties archive, gradients,
+//! selection, prompts, code models and the evaluation pipeline into the
+//! select → variate → evaluate → insert loop, with meta-prompt
+//! co-evolution every N generations and the §3.4 parameter-optimization
+//! phase.
+
+pub mod baselines;
+pub mod engine;
+pub mod report;
+
+pub use baselines::{openevolve_like, repeated_prompting, single_objective_evolve};
+pub use engine::EvolutionEngine;
+pub use report::{IterationPoint, RunReport};

@@ -1,0 +1,136 @@
+//! Run reports: everything a bench table or figure needs from one run.
+
+use crate::archive::ArchiveStats;
+use crate::eval::EvalRecord;
+use crate::metrics::TaskResult;
+use crate::util::json::Json;
+
+/// One point of the Figure-3 improvement curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterationPoint {
+    pub iteration: usize,
+    /// Cumulative best speedup so far (0 until a correct kernel exists).
+    pub best_speedup: f64,
+    pub best_fitness: f64,
+    /// Archive occupancy after this iteration.
+    pub cells_occupied: usize,
+}
+
+/// Result of one evolutionary run on one task.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub task_id: String,
+    pub method: String,
+    /// Best correct kernel found (None if the run never produced one).
+    pub best: Option<EvalRecord>,
+    /// Per-iteration cumulative-best curve (Fig. 3).
+    pub series: Vec<IterationPoint>,
+    pub archive: Option<ArchiveStats>,
+    /// Iteration index of the first correct kernel (§5.5 reports this).
+    pub first_correct_iteration: Option<usize>,
+    /// Total candidates evaluated.
+    pub evaluations: usize,
+    pub compile_errors: usize,
+    pub incorrect: usize,
+}
+
+impl RunReport {
+    pub fn best_speedup(&self) -> f64 {
+        self.best.as_ref().map(|b| b.speedup).unwrap_or(0.0)
+    }
+
+    pub fn correct(&self) -> bool {
+        self.best.is_some()
+    }
+
+    /// Convert to the metrics layer's per-task atom.
+    pub fn task_result(&self) -> TaskResult {
+        TaskResult {
+            task_id: self.task_id.clone(),
+            correct: self.correct(),
+            speedup: self.best_speedup(),
+            time_ms: self.best.as_ref().map(|b| b.time_ms).unwrap_or(0.0),
+        }
+    }
+
+    /// Cumulative best speedup at iteration `i` (series lookup with
+    /// clamping) — used for the "after 10 iterations" columns of Table 2.
+    pub fn best_at_iteration(&self, i: usize) -> f64 {
+        self.series
+            .iter()
+            .take_while(|p| p.iteration <= i)
+            .map(|p| p.best_speedup)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let series: Vec<Json> = self
+            .series
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("iteration", p.iteration)
+                    .set("best_speedup", p.best_speedup)
+                    .set("cells", p.cells_occupied);
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("task_id", self.task_id.as_str())
+            .set("method", self.method.as_str())
+            .set("correct", self.correct())
+            .set("best_speedup", self.best_speedup())
+            .set("evaluations", self.evaluations)
+            .set("compile_errors", self.compile_errors)
+            .set("incorrect", self.incorrect)
+            .set("series", Json::Arr(series));
+        if let Some(i) = self.first_correct_iteration {
+            o.set("first_correct_iteration", i);
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with_series(points: &[(usize, f64)]) -> RunReport {
+        RunReport {
+            task_id: "t".into(),
+            method: "ours".into(),
+            best: None,
+            series: points
+                .iter()
+                .map(|(i, s)| IterationPoint {
+                    iteration: *i,
+                    best_speedup: *s,
+                    best_fitness: 0.0,
+                    cells_occupied: 0,
+                })
+                .collect(),
+            archive: None,
+            first_correct_iteration: None,
+            evaluations: 0,
+            compile_errors: 0,
+            incorrect: 0,
+        }
+    }
+
+    #[test]
+    fn best_at_iteration_clamps() {
+        let r = report_with_series(&[(0, 0.5), (1, 1.2), (2, 1.2), (3, 2.0)]);
+        assert_eq!(r.best_at_iteration(0), 0.5);
+        assert_eq!(r.best_at_iteration(1), 1.2);
+        assert_eq!(r.best_at_iteration(2), 1.2);
+        assert_eq!(r.best_at_iteration(99), 2.0);
+    }
+
+    #[test]
+    fn json_roundtrips_core_fields() {
+        let r = report_with_series(&[(0, 1.0)]);
+        let j = r.to_json();
+        assert_eq!(j.get("task_id").unwrap().as_str(), Some("t"));
+        assert_eq!(j.get("correct").unwrap().as_bool(), Some(false));
+    }
+}

@@ -1,0 +1,224 @@
+//! Kernel-runtime benchmarking methodology (App. B.2).
+//!
+//! "First, we run a fixed number of initial trials to determine the rough
+//! runtime of the kernel. This initial measurement informs the number of
+//! warmup trials and main trials, which are set based on a minimal total
+//! *time* rather than a fixed amount of trials. … for very fast kernels
+//! the synchronize operation has significant overhead. We reduce this
+//! overhead by running an inner loop within the main trials, such that
+//! multiple trials are executed before each synchronize."
+//!
+//! Defaults match App. B.2: minimum warmup time 1 s, minimum warmup
+//! iterations 10, inner-loop minimum time 0.01 s, minimum main
+//! iterations 10, minimum main measurement time 1 s.
+
+use crate::util::stats::{self, Summary};
+
+/// A timing source the harness can drive: one call = `inner_iters` kernel
+/// executions followed by a synchronize; returns wall-clock milliseconds.
+/// Implemented by the hwsim NoisyClock and by the PJRT runtime.
+pub trait TimingSource {
+    fn run_batch(&mut self, inner_iters: usize) -> f64;
+}
+
+impl<F: FnMut(usize) -> f64> TimingSource for F {
+    fn run_batch(&mut self, inner_iters: usize) -> f64 {
+        self(inner_iters)
+    }
+}
+
+/// App. B.2 configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Initial trials used to estimate rough runtime.
+    pub initial_trials: usize,
+    /// Minimum total warmup time, ms.
+    pub min_warmup_ms: f64,
+    pub min_warmup_iters: usize,
+    /// Minimum time per inner loop (amortizing synchronize), ms.
+    pub min_inner_ms: f64,
+    pub min_main_iters: usize,
+    /// Minimum total main measurement time, ms.
+    pub min_main_ms: f64,
+    /// Safety cap on total iterations (keeps simulated benches bounded).
+    pub max_total_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> BenchConfig {
+        BenchConfig {
+            initial_trials: 3,
+            min_warmup_ms: 1000.0,
+            min_warmup_iters: 10,
+            min_inner_ms: 10.0,
+            min_main_iters: 10,
+            min_main_ms: 1000.0,
+            max_total_iters: 100_000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A fast-running profile for unit tests and large sweeps.
+    pub fn quick() -> BenchConfig {
+        BenchConfig {
+            initial_trials: 2,
+            min_warmup_ms: 1.0,
+            min_warmup_iters: 2,
+            min_inner_ms: 0.5,
+            min_main_iters: 5,
+            min_main_ms: 2.0,
+            max_total_iters: 10_000,
+        }
+    }
+}
+
+/// Result of one benchmark run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    /// Best estimate of per-iteration kernel time, ms (median of batch
+    /// means).
+    pub time_ms: f64,
+    pub summary: Summary,
+    pub warmup_iters: usize,
+    pub main_iters: usize,
+    pub inner_iters: usize,
+}
+
+/// The App. B.2 adaptive benchmark harness.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Benchmarker {
+    pub config: BenchConfig,
+}
+
+impl Benchmarker {
+    pub fn new(config: BenchConfig) -> Benchmarker {
+        Benchmarker { config }
+    }
+
+    pub fn run<T: TimingSource>(&self, source: &mut T) -> BenchResult {
+        let c = &self.config;
+
+        // Phase 1: initial trials → rough per-iteration runtime.
+        let mut rough = 0.0;
+        for _ in 0..c.initial_trials {
+            rough += source.run_batch(1);
+        }
+        let rough_ms = (rough / c.initial_trials as f64).max(1e-6);
+
+        // Phase 2: derive adaptive counts from time budgets.
+        let inner_iters = ((c.min_inner_ms / rough_ms).ceil() as usize).clamp(1, 10_000);
+        let warmup_iters = ((c.min_warmup_ms / rough_ms).ceil() as usize)
+            .max(c.min_warmup_iters)
+            .min(c.max_total_iters);
+        let main_batches = (((c.min_main_ms / rough_ms).ceil() as usize)
+            .max(c.min_main_iters)
+            .min(c.max_total_iters)
+            / inner_iters)
+            .max(c.min_main_iters);
+
+        // Phase 3: warmup (results discarded).
+        let mut remaining = warmup_iters;
+        while remaining > 0 {
+            let batch = remaining.min(inner_iters);
+            source.run_batch(batch);
+            remaining -= batch;
+        }
+
+        // Phase 4: main trials — inner loop before each synchronize.
+        let mut samples = Vec::with_capacity(main_batches);
+        for _ in 0..main_batches {
+            let total = source.run_batch(inner_iters);
+            samples.push(total / inner_iters as f64);
+        }
+
+        let summary = stats::summarize(&samples);
+        BenchResult {
+            time_ms: summary.median,
+            summary,
+            warmup_iters,
+            main_iters: main_batches * inner_iters,
+            inner_iters,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::{DeviceProfile, NoisyClock};
+
+    struct SimSource {
+        clock: NoisyClock,
+        true_ms: f64,
+        calls: usize,
+    }
+
+    impl TimingSource for SimSource {
+        fn run_batch(&mut self, inner_iters: usize) -> f64 {
+            self.calls += 1;
+            self.clock.observe_batch(self.true_ms, inner_iters)
+        }
+    }
+
+    fn source(true_ms: f64) -> SimSource {
+        SimSource {
+            clock: NoisyClock::new(7, &DeviceProfile::b580()),
+            true_ms,
+            calls: 0,
+        }
+    }
+
+    #[test]
+    fn recovers_true_time_for_fast_kernels() {
+        // 5 µs kernel: sync overhead (12 µs) dominates naive measurement;
+        // the inner loop must recover the true time within ~20 %.
+        let mut s = source(0.005);
+        let r = Benchmarker::new(BenchConfig::quick()).run(&mut s);
+        assert!(
+            (r.time_ms - 0.005).abs() / 0.005 < 0.25,
+            "measured {} true 0.005",
+            r.time_ms
+        );
+        assert!(r.inner_iters > 1, "fast kernel must batch iterations");
+    }
+
+    #[test]
+    fn slow_kernels_use_fewer_iterations() {
+        let mut fast = source(0.01);
+        let mut slow = source(10.0);
+        let b = Benchmarker::new(BenchConfig::quick());
+        let rf = b.run(&mut fast);
+        let rs = b.run(&mut slow);
+        assert!(rf.main_iters > rs.main_iters);
+        assert!(rf.warmup_iters >= rs.warmup_iters);
+        assert_eq!(rs.inner_iters, 1, "slow kernels need no inner loop");
+        assert!((rs.time_ms - 10.0).abs() / 10.0 < 0.1);
+    }
+
+    #[test]
+    fn minimums_respected() {
+        let c = BenchConfig::quick();
+        let mut s = source(100.0); // much slower than all budgets
+        let r = Benchmarker::new(c).run(&mut s);
+        assert!(r.warmup_iters >= c.min_warmup_iters);
+        assert!(r.main_iters >= c.min_main_iters);
+    }
+
+    #[test]
+    fn default_config_matches_appendix_b2() {
+        let c = BenchConfig::default();
+        assert_eq!(c.min_warmup_ms, 1000.0);
+        assert_eq!(c.min_warmup_iters, 10);
+        assert_eq!(c.min_inner_ms, 10.0);
+        assert_eq!(c.min_main_iters, 10);
+        assert_eq!(c.min_main_ms, 1000.0);
+    }
+
+    #[test]
+    fn measurement_is_low_variance() {
+        let mut s = source(0.5);
+        let r = Benchmarker::new(BenchConfig::quick()).run(&mut s);
+        assert!(r.summary.std / r.summary.mean < 0.1, "cv too high");
+    }
+}

@@ -1,0 +1,181 @@
+//! Strict kernel correctness validation (§4 "Metrics").
+//!
+//! The paper replaces KernelBench's loose absolute tolerance (1e-2) with
+//! a relative-precision criterion: ν = |y − ŷ| / (|y| + ε), and declares
+//! a kernel correct when ν < 0.01 for at least 99 % of output elements.
+//! A second measure is the cosine similarity of the flattened outputs.
+
+/// Relative precision threshold (ν < NU_THRESHOLD counts as exact enough).
+pub const NU_THRESHOLD: f64 = 0.01;
+/// Required fraction of elements satisfying the ν criterion.
+pub const PASS_FRACTION: f64 = 0.99;
+/// Division-by-zero guard.
+pub const EPSILON: f64 = 1e-8;
+
+/// Outcome of a correctness check.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CorrectnessReport {
+    /// Fraction of elements with ν < threshold.
+    pub pass_fraction: f64,
+    /// Maximum relative error observed.
+    pub max_nu: f64,
+    /// Mean relative error.
+    pub mean_nu: f64,
+    /// Cosine similarity of flattened outputs.
+    pub cosine: f64,
+    /// The §4 verdict: pass_fraction ≥ 99 %.
+    pub correct: bool,
+}
+
+/// Per-element relative precision ν = |y − ŷ| / (|y| + ε).
+pub fn nu_criterion(expected: f64, actual: f64) -> f64 {
+    (expected - actual).abs() / (expected.abs() + EPSILON)
+}
+
+/// Cosine similarity of two flattened tensors; 0.0 when either is a zero
+/// vector or lengths mismatch.
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f64 {
+    if a.len() != b.len() || a.is_empty() {
+        return 0.0;
+    }
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in a.iter().zip(b.iter()) {
+        dot += *x as f64 * *y as f64;
+        na += *x as f64 * *x as f64;
+        nb += *y as f64 * *y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Full §4 correctness check: expected vs actual output tensors.
+pub fn check_correctness(expected: &[f32], actual: &[f32]) -> CorrectnessReport {
+    if expected.len() != actual.len() || expected.is_empty() {
+        return CorrectnessReport {
+            pass_fraction: 0.0,
+            max_nu: f64::INFINITY,
+            mean_nu: f64::INFINITY,
+            cosine: 0.0,
+            correct: false,
+        };
+    }
+    let mut passed = 0usize;
+    let mut max_nu = 0.0f64;
+    let mut sum_nu = 0.0f64;
+    for (e, a) in expected.iter().zip(actual.iter()) {
+        if !a.is_finite() {
+            max_nu = f64::INFINITY;
+            sum_nu = f64::INFINITY;
+            continue;
+        }
+        let nu = nu_criterion(*e as f64, *a as f64);
+        if nu < NU_THRESHOLD {
+            passed += 1;
+        }
+        max_nu = max_nu.max(nu);
+        sum_nu += nu;
+    }
+    let pass_fraction = passed as f64 / expected.len() as f64;
+    CorrectnessReport {
+        pass_fraction,
+        max_nu,
+        mean_nu: sum_nu / expected.len() as f64,
+        cosine: cosine_similarity(expected, actual),
+        correct: pass_fraction >= PASS_FRACTION,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_outputs_pass() {
+        let y = vec![1.0f32, -2.0, 3.5, 0.0];
+        let r = check_correctness(&y, &y);
+        assert!(r.correct);
+        assert_eq!(r.pass_fraction, 1.0);
+        assert!((r.cosine - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_relative_error_passes() {
+        let y: Vec<f32> = (1..1000).map(|i| i as f32).collect();
+        let yh: Vec<f32> = y.iter().map(|v| v * 1.005).collect(); // 0.5% error
+        let r = check_correctness(&y, &yh);
+        assert!(r.correct);
+        assert!(r.max_nu < NU_THRESHOLD);
+    }
+
+    #[test]
+    fn large_relative_error_fails() {
+        let y: Vec<f32> = (1..1000).map(|i| i as f32).collect();
+        let yh: Vec<f32> = y.iter().map(|v| v * 1.05).collect(); // 5% error
+        let r = check_correctness(&y, &yh);
+        assert!(!r.correct);
+    }
+
+    /// The motivating case from §4: small output values pass the loose
+    /// KernelBench *absolute* tolerance (1e-2) while being relatively
+    /// wrong — the ν-criterion rejects them.
+    #[test]
+    fn nu_rejects_what_absolute_tolerance_accepts() {
+        let y: Vec<f32> = vec![0.001; 500];
+        let yh: Vec<f32> = vec![0.006; 500]; // |y−ŷ| = 0.005 < 1e-2 (abs passes)
+        assert!((y[0] - yh[0]).abs() < 1e-2);
+        let r = check_correctness(&y, &yh);
+        assert!(!r.correct, "ν must reject 5× relative error");
+        assert!(r.max_nu > 1.0);
+    }
+
+    /// Hardware imprecision: up to 1 % of elements may fail (§4 "errors
+    /// should be allowed in a small fraction of cases").
+    #[test]
+    fn one_percent_outliers_tolerated() {
+        let mut y: Vec<f32> = vec![1.0; 1000];
+        let mut yh = y.clone();
+        // 9 bad elements out of 1000 (0.9%).
+        for i in 0..9 {
+            yh[i * 100] = 2.0;
+        }
+        let r = check_correctness(&y, &yh);
+        assert!(r.correct, "pass fraction {}", r.pass_fraction);
+        // 11 bad elements (1.1%) fails.
+        y = vec![1.0; 1000];
+        yh = y.clone();
+        for i in 0..11 {
+            yh[i * 90] = 2.0;
+        }
+        assert!(!check_correctness(&y, &yh).correct);
+    }
+
+    #[test]
+    fn nan_output_fails() {
+        let y = vec![1.0f32; 16];
+        let mut yh = y.clone();
+        yh[3] = f32::NAN;
+        yh[4] = f32::INFINITY;
+        let r = check_correctness(&y, &yh);
+        assert!(r.pass_fraction < 1.0);
+        assert!(r.max_nu.is_infinite());
+    }
+
+    #[test]
+    fn cosine_detects_angular_divergence() {
+        let a = vec![1.0f32, 0.0, 0.0];
+        let b = vec![0.0f32, 1.0, 0.0];
+        assert!(cosine_similarity(&a, &b).abs() < 1e-9);
+        let c = vec![-1.0f32, 0.0, 0.0];
+        assert!((cosine_similarity(&a, &c) + 1.0).abs() < 1e-9);
+        assert_eq!(cosine_similarity(&a, &[]), 0.0);
+        assert_eq!(cosine_similarity(&[0.0, 0.0], &[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn mismatched_lengths_fail() {
+        assert!(!check_correctness(&[1.0, 2.0], &[1.0]).correct);
+        assert!(!check_correctness(&[], &[]).correct);
+    }
+}

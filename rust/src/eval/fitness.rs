@@ -1,0 +1,67 @@
+//! Fitness function (§3.2).
+//!
+//! ```text
+//! f(k) = 0                      if compilation fails
+//!        0.1                    if compiles but incorrect
+//!        0.5 + 0.5 · s_norm     if correct
+//! ```
+//! with `s_norm = min(1, speedup / target)` and a default target of 2×
+//! over the PyTorch baseline.
+
+pub const FITNESS_COMPILE_FAIL: f64 = 0.0;
+pub const FITNESS_INCORRECT: f64 = 0.1;
+pub const DEFAULT_TARGET_SPEEDUP: f64 = 2.0;
+
+/// Compute fitness for a correct kernel from its speedup.
+pub fn fitness_correct(speedup: f64, target: f64) -> f64 {
+    let s_norm = (speedup / target).min(1.0).max(0.0);
+    0.5 + 0.5 * s_norm
+}
+
+/// Full fitness: compile status + correctness + speedup.
+pub fn fitness(compiled: bool, correct: bool, speedup: f64, target: f64) -> f64 {
+    if !compiled {
+        FITNESS_COMPILE_FAIL
+    } else if !correct {
+        FITNESS_INCORRECT
+    } else {
+        fitness_correct(speedup, target)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fitness_cases() {
+        assert_eq!(fitness(false, false, 0.0, 2.0), 0.0);
+        assert_eq!(fitness(true, false, 5.0, 2.0), 0.1);
+        // Correct, zero speedup: floor of 0.5.
+        assert_eq!(fitness(true, true, 0.0, 2.0), 0.5);
+        // Correct at target: 1.0.
+        assert_eq!(fitness(true, true, 2.0, 2.0), 1.0);
+        // Saturates above target.
+        assert_eq!(fitness(true, true, 10.0, 2.0), 1.0);
+        // Midpoint.
+        assert!((fitness(true, true, 1.0, 2.0) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correctness_dominates_performance() {
+        // An incorrect 50× "speedup" (reward hacking) scores below a
+        // correct kernel with no speedup at all.
+        assert!(fitness(true, false, 50.0, 2.0) < fitness(true, true, 0.1, 2.0));
+    }
+
+    #[test]
+    fn monotone_in_speedup_below_target() {
+        let mut prev = -1.0;
+        for i in 0..20 {
+            let s = i as f64 * 0.1;
+            let f = fitness_correct(s, 2.0);
+            assert!(f >= prev);
+            prev = f;
+        }
+    }
+}

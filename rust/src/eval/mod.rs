@@ -1,0 +1,19 @@
+//! Compilation & evaluation pipeline (§3.1, §3.4, §4 metrics, App. B).
+//!
+//! Candidates flow through: compile (legality + render + syntax check) →
+//! correctness validation (strict ν-criterion + cosine similarity, §4) →
+//! performance measurement (App. B.2 adaptive methodology) → behavioral
+//! classification → fitness (§3.2). Templated kernels are detected and
+//! every parameter instantiation is evaluated independently (§3.4).
+
+pub mod benchmark;
+pub mod correctness;
+pub mod fitness;
+pub mod pipeline;
+pub mod profiler;
+
+pub use benchmark::{BenchConfig, BenchResult, Benchmarker};
+pub use correctness::{check_correctness, cosine_similarity, nu_criterion, CorrectnessReport};
+pub use fitness::{fitness, FITNESS_COMPILE_FAIL, FITNESS_INCORRECT};
+pub use pipeline::{EvalOutcome, EvalPipeline, EvalRecord, ExecBackend, RealBackend, RealRun};
+pub use profiler::{profiler_feedback, ProfileReport};

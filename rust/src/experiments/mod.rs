@@ -1,0 +1,17 @@
+//! Experiment harnesses: one function per paper table / figure.
+//!
+//! Each harness regenerates its table's rows (markdown + CSV) from live
+//! runs of the framework; `cargo bench` targets and the CLI subcommands
+//! are thin wrappers over these. Columns marked "paper-reported" carry
+//! the authors' published numbers (measured on their hardware) for
+//! side-by-side display, exactly as the paper prints non-comparable
+//! baselines.
+
+pub mod crossover;
+pub mod tables;
+
+pub use crossover::{run_crossover, CrossoverResult};
+pub use tables::{
+    fig3_series, run_method_on_tasks, table1, table11, table2, table4, ExperimentScale, Method,
+    MethodRun,
+};

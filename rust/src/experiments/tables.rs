@@ -1,0 +1,467 @@
+//! Tables 1, 2, 4, 11 and Figure 3 harnesses.
+
+use crate::config::FoundryConfig;
+use crate::coordinator::{
+    openevolve_like, repeated_prompting, single_objective_evolve, EvolutionEngine, RunReport,
+};
+use crate::eval::ExecBackend;
+use crate::hwsim::{vendor_cost, DeviceProfile};
+use crate::metrics::{self, aggregate, aggregate_row, Aggregate, TaskResult};
+use crate::tasks::{catalog, TaskSpec};
+
+/// Scale knob: `Quick` for CI smoke runs, `Paper` for the full protocol
+/// (40 iterations, paper population sizes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExperimentScale {
+    Quick,
+    Paper,
+}
+
+impl ExperimentScale {
+    pub fn from_env() -> ExperimentScale {
+        match std::env::var("KF_BENCH_SCALE").as_deref() {
+            Ok("quick") => ExperimentScale::Quick,
+            _ => ExperimentScale::Paper,
+        }
+    }
+
+    pub fn iterations(&self, paper: usize) -> usize {
+        match self {
+            ExperimentScale::Quick => (paper / 4).max(4),
+            ExperimentScale::Paper => paper,
+        }
+    }
+
+    pub fn population(&self, paper: usize) -> usize {
+        match self {
+            ExperimentScale::Quick => (paper / 2).max(2),
+            ExperimentScale::Paper => paper,
+        }
+    }
+}
+
+/// A method under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    RepeatedPrompting,
+    SingleObjectiveEvolve,
+    OpenEvolve,
+    Ours,
+    OursParamOpt,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::RepeatedPrompting => "Kernelsseum-like (repeated prompting)",
+            Method::SingleObjectiveEvolve => "AI CUDA Engineer-like (re-eval)",
+            Method::OpenEvolve => "OpenEvolve",
+            Method::Ours => "Ours",
+            Method::OursParamOpt => "Ours + parameter optim.",
+        }
+    }
+}
+
+/// One method's per-task reports + aggregate.
+#[derive(Debug, Clone)]
+pub struct MethodRun {
+    pub method: Method,
+    pub reports: Vec<RunReport>,
+    pub results: Vec<TaskResult>,
+    pub aggregate: Aggregate,
+}
+
+/// Run one method over a task set.
+pub fn run_method_on_tasks(
+    method: Method,
+    tasks: &[TaskSpec],
+    config: &FoundryConfig,
+    device: &DeviceProfile,
+    iterations: usize,
+) -> MethodRun {
+    let mut reports = Vec::with_capacity(tasks.len());
+    for task in tasks {
+        let backend = ExecBackend::HwSim(device.clone());
+        let report = match method {
+            Method::RepeatedPrompting => {
+                repeated_prompting(config, task, backend, iterations)
+            }
+            Method::SingleObjectiveEvolve => {
+                single_objective_evolve(config, task, backend, iterations)
+            }
+            Method::OpenEvolve => openevolve_like(config, task, backend, iterations),
+            Method::Ours | Method::OursParamOpt => {
+                let mut c = config.clone();
+                c.evolution.max_generations = iterations;
+                let mut engine = EvolutionEngine::new(c, task.clone(), backend);
+                engine.run(method == Method::OursParamOpt)
+            }
+        };
+        reports.push(report);
+    }
+    let results: Vec<TaskResult> = reports.iter().map(|r| r.task_result()).collect();
+    let aggregate = aggregate(&results);
+    MethodRun {
+        method,
+        reports,
+        results,
+        aggregate,
+    }
+}
+
+/// Rendered experiment output: headline markdown table + per-task CSV.
+pub struct TableOutput {
+    pub title: String,
+    pub markdown: String,
+    pub per_task_csv: String,
+}
+
+impl TableOutput {
+    pub fn print(&self) {
+        println!("\n## {}\n\n{}", self.title, self.markdown);
+    }
+}
+
+const T1_HEADERS: [&str; 7] = [
+    "Method",
+    "LLMs",
+    "Correct rate",
+    "fast_1",
+    "fast_2",
+    "Avg. speedup",
+    "Geom. speedup",
+];
+
+/// **Table 1**: baseline comparison on CUDA (A6000 profile) — repr. L1,
+/// repr. L2, robust-kbench; Ours uses o3-mini on KernelBench (matching
+/// the paper's model constraint) and the GPT-{o3, o4-mini, 4.1} ensemble
+/// on robust-kbench.
+pub fn table1(scale: ExperimentScale) -> Vec<TableOutput> {
+    let device = DeviceProfile::a6000();
+    let iters = scale.iterations(40);
+
+    let mut outputs = Vec::new();
+    let sets: [(&str, Vec<TaskSpec>, Vec<String>, Option<&str>, usize); 3] = [
+        (
+            "Table 1a — KernelBench repr. set L1 (n = 20, CUDA, A6000)",
+            catalog::kernelbench_l1(),
+            vec!["o3-mini".to_string()],
+            None,
+            scale.population(4),
+        ),
+        (
+            "Table 1b — KernelBench repr. set L2 (n = 20, CUDA, A6000)",
+            catalog::kernelbench_l2(),
+            vec!["o3-mini".to_string()],
+            None,
+            scale.population(4),
+        ),
+        (
+            "Table 1c — Robust-kbench (n = 12, CUDA, A6000)",
+            catalog::robust_kbench(),
+            vec!["gpt-o3".to_string(), "gpt-o4-mini".to_string(), "gpt-4.1".to_string()],
+            None,
+            scale.population(8),
+        ),
+    ];
+
+    for (title, tasks, models, first, population) in sets {
+        let mut config = FoundryConfig::paper_defaults();
+        config.language = "cuda".to_string();
+        config.device = "a6000".to_string();
+        config.llm.models = models.clone();
+        config.llm.first_iteration_model = first.map(String::from);
+        config.evolution.population = population;
+
+        let llms = models.join(", ");
+        let mut rows: Vec<Vec<String>> = Vec::new();
+        let mut csv_rows: Vec<Vec<String>> = Vec::new();
+
+        // Paper-reported reference rows (authors' hardware; not comparable).
+        rows.push(paper_row(title));
+
+        let mut per_task: Vec<(Method, Vec<TaskResult>)> = Vec::new();
+        for method in [
+            Method::RepeatedPrompting,
+            Method::SingleObjectiveEvolve,
+            Method::Ours,
+            Method::OursParamOpt,
+        ] {
+            let run = run_method_on_tasks(method, &tasks, &config, &device, iters);
+            rows.push(aggregate_row(method.label(), &llms, &run.aggregate));
+            per_task.push((method, run.results.clone()));
+        }
+
+        // Per-task CSV (Tables 7/8 appendix form).
+        for (i, task) in tasks.iter().enumerate() {
+            let mut row = vec![task.id.clone()];
+            for (_, results) in &per_task {
+                row.push(format!("{:.3}", results[i].speedup));
+            }
+            csv_rows.push(row);
+        }
+        let csv_headers: Vec<&str> = std::iter::once("task")
+            .chain(per_task.iter().map(|(m, _)| m.label()))
+            .collect();
+
+        outputs.push(TableOutput {
+            title: title.to_string(),
+            markdown: metrics::render_table(&T1_HEADERS, &rows),
+            per_task_csv: metrics::render_csv(&csv_headers, &csv_rows),
+        });
+    }
+    outputs
+}
+
+fn paper_row(title: &str) -> Vec<String> {
+    // The paper's published aggregate for the corresponding set
+    // (original hardware: H100/L40S — displayed for reference only).
+    let (label, correct, f1, f2, avg, geom) = if title.contains("L1") {
+        ("AI CUDA Engineer (paper-reported, H100)", 1.0, 70, 20, 1.422, 1.222)
+    } else if title.contains("L2") {
+        ("AI CUDA Engineer (paper-reported, H100)", 1.0, 100, 10, 1.589, 1.524)
+    } else {
+        ("Robust-kbench (paper-reported, H100)", 1.0, 92, 50, 15.622, 2.591)
+    };
+    vec![
+        label.to_string(),
+        "—".to_string(),
+        format!("{correct:.2}"),
+        format!("{f1} %"),
+        format!("{f2} %"),
+        format!("{avg:.3}"),
+        format!("{geom:.3}"),
+    ]
+}
+
+/// **Table 2**: SYCL generation on B580 — Ours on the filtered set
+/// (n = 111) and Ours vs OpenEvolve on repr. L2 at 10 and 40 iterations.
+pub fn table2(scale: ExperimentScale) -> Vec<TableOutput> {
+    let device = DeviceProfile::b580();
+    let mut config = FoundryConfig::paper_defaults();
+    config.llm.models = vec!["gpt-4.1".to_string(), "gpt-5-mini".to_string()];
+    config.llm.first_iteration_model = Some("sonnet-4.5".to_string());
+    config.evolution.population = scale.population(8);
+    let iters40 = scale.iterations(40);
+    let iters10 = scale.iterations(10);
+
+    let mut outputs = Vec::new();
+
+    // Block 1: filtered KernelBench, n = 111.
+    let filtered = catalog::filtered_kernelbench();
+    let ours_filtered =
+        run_method_on_tasks(Method::OursParamOpt, &filtered, &config, &device, iters40);
+    let mut rows = vec![aggregate_row(
+        "Ours (SYCL)",
+        "GPT-{4.1, 5-mini}, Sonnet-4.5",
+        &ours_filtered.aggregate,
+    )];
+    rows.push(vec![
+        "Robust-kbench (paper-reported, CUDA)".into(),
+        "GPT-{o3, o4-mini, 4.1}, Sonnet-3.7".into(),
+        "—".into(),
+        "—".into(),
+        "—".into(),
+        "1.49".into(),
+        "1.38".into(),
+    ]);
+    let csv: Vec<Vec<String>> = ours_filtered
+        .results
+        .iter()
+        .map(|r| vec![r.task_id.clone(), format!("{}", r.correct), format!("{:.3}", r.speedup)])
+        .collect();
+    outputs.push(TableOutput {
+        title: format!("Table 2a — KernelBench filtered (n = {}), SYCL, B580", filtered.len()),
+        markdown: metrics::render_table(&T1_HEADERS, &rows),
+        per_task_csv: metrics::render_csv(&["task", "correct", "speedup"], &csv),
+    });
+
+    // Block 2: Ours vs OpenEvolve on repr. L2 at 10 / 40 iterations.
+    let l2 = catalog::kernelbench_l2();
+    let ours40 = run_method_on_tasks(Method::OursParamOpt, &l2, &config, &device, iters40);
+    let open40 = run_method_on_tasks(Method::OpenEvolve, &l2, &config, &device, iters40);
+    let mut rows = Vec::new();
+    let mut add = |label: &str, agg: &Aggregate| {
+        rows.push(aggregate_row(label, "GPT-{4.1, 5-mini}, Sonnet-4.5", agg));
+    };
+    add("OpenEvolve (40 iters)", &open40.aggregate);
+    add("Ours (40 iters + param. optim.)", &ours40.aggregate);
+    // 10-iteration columns come from the same runs' series (cumulative
+    // best at iteration 10) — matching how the paper reports both.
+    let at10 = |run: &MethodRun| -> Aggregate {
+        let results: Vec<TaskResult> = run
+            .reports
+            .iter()
+            .map(|r| TaskResult {
+                task_id: r.task_id.clone(),
+                correct: r.best_at_iteration(iters10.saturating_sub(1)) > 0.0,
+                speedup: r.best_at_iteration(iters10.saturating_sub(1)),
+                time_ms: 0.0,
+            })
+            .collect();
+        aggregate(&results)
+    };
+    add("OpenEvolve (10 iters)", &at10(&open40));
+    add("Ours (10 iters)", &at10(&ours40));
+
+    let csv: Vec<Vec<String>> = l2
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            vec![
+                t.id.clone(),
+                format!("{:.3}", ours40.results[i].speedup),
+                format!("{:.3}", open40.results[i].speedup),
+            ]
+        })
+        .collect();
+    outputs.push(TableOutput {
+        title: "Table 2b — repr. set L2 (n = 20), SYCL, B580 (per-task = Table 9)".to_string(),
+        markdown: metrics::render_table(&T1_HEADERS, &rows),
+        per_task_csv: metrics::render_csv(&["task", "ours", "openevolve"], &csv),
+    });
+    outputs
+}
+
+/// **Table 4**: comparison to the oneDNN-like vendor library on B580.
+pub fn table4(scale: ExperimentScale) -> TableOutput {
+    let device = DeviceProfile::b580();
+    let mut config = FoundryConfig::paper_defaults();
+    config.evolution.population = scale.population(8);
+    let iters = scale.iterations(40);
+
+    let tasks = catalog::onednn_tasks();
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for task in &tasks {
+        let backend = ExecBackend::HwSim(device.clone());
+        let mut c = config.clone();
+        c.evolution.max_generations = iters;
+        let mut engine = EvolutionEngine::new(c, task.clone(), backend);
+        if task.has_initial_impl {
+            // §5.4: concat+LN starts from a provided naive implementation.
+            let mut init = crate::ir::KernelGenome::direct_translation(&task.id);
+            init.mem = crate::ir::MemoryPattern::Coalesced;
+            engine.initial_genome = Some(init);
+        }
+        let report = engine.run(true);
+        // Speedup vs the vendor library, not vs eager.
+        let vendor_ms = vendor_cost(task, &device);
+        let speedup = report
+            .best
+            .as_ref()
+            .map(|b| vendor_ms / b.time_ms)
+            .unwrap_or(0.0);
+        rows.push(vec![
+            task.id.clone(),
+            if task.has_initial_impl { "X" } else { "" }.to_string(),
+            if task.user_instructions.is_some() { "X" } else { "" }.to_string(),
+            format!("{speedup:.2}"),
+        ]);
+        csv.push(vec![task.id.clone(), format!("{speedup:.4}")]);
+    }
+    TableOutput {
+        title: "Table 4 — speedup vs oneDNN-like vendor library (SYCL, B580)".to_string(),
+        markdown: metrics::render_table(
+            &["Operation", "Initial impl.", "User instructions", "Speedup"],
+            &rows,
+        ),
+        per_task_csv: metrics::render_csv(&["task", "speedup_vs_vendor"], &csv),
+    }
+}
+
+/// **Figure 3**: improvement over iterations (cumulative best speedup),
+/// Ours vs OpenEvolve, averaged over the repr. L2 set. Returns CSV.
+pub fn fig3_series(scale: ExperimentScale) -> TableOutput {
+    let device = DeviceProfile::b580();
+    let mut config = FoundryConfig::paper_defaults();
+    config.evolution.population = scale.population(8);
+    let iters = scale.iterations(40);
+    let l2 = catalog::kernelbench_l2();
+    let ours = run_method_on_tasks(Method::Ours, &l2, &config, &device, iters);
+    let open = run_method_on_tasks(Method::OpenEvolve, &l2, &config, &device, iters);
+
+    let mut csv_rows = Vec::new();
+    for i in 0..iters {
+        let avg = |run: &MethodRun| {
+            let v: Vec<f64> = run.reports.iter().map(|r| r.best_at_iteration(i)).collect();
+            crate::util::stats::mean(&v)
+        };
+        csv_rows.push(vec![
+            format!("{i}"),
+            format!("{:.4}", avg(&ours)),
+            format!("{:.4}", avg(&open)),
+        ]);
+    }
+    let md_rows: Vec<Vec<String>> = csv_rows
+        .iter()
+        .step_by((iters / 10).max(1))
+        .cloned()
+        .collect();
+    TableOutput {
+        title: "Figure 3 — improvement over iterations (cumulative best, mean over repr. L2)"
+            .to_string(),
+        markdown: metrics::render_table(&["iteration", "ours", "openevolve"], &md_rows),
+        per_task_csv: metrics::render_csv(&["iteration", "ours", "openevolve"], &csv_rows),
+    }
+}
+
+/// **Table 11**: GPT-OSS-20B reproducibility run (repr. L2, SYCL, LNL,
+/// population 4). A third or so of the tasks should fail to yield any
+/// correct kernel.
+pub fn table11(scale: ExperimentScale) -> TableOutput {
+    let device = DeviceProfile::lnl();
+    let mut config = FoundryConfig::paper_defaults();
+    config.llm.models = vec!["gpt-oss-20b".to_string()];
+    config.llm.first_iteration_model = None;
+    config.evolution.population = scale.population(4);
+    let iters = scale.iterations(40);
+
+    let l2 = catalog::kernelbench_l2();
+    let run = run_method_on_tasks(Method::Ours, &l2, &config, &device, iters);
+    let rows: Vec<Vec<String>> = run
+        .results
+        .iter()
+        .map(|r| {
+            vec![
+                r.task_id.clone(),
+                if r.correct {
+                    format!("{:.3}", r.speedup)
+                } else {
+                    "-".to_string()
+                },
+            ]
+        })
+        .collect();
+    let failed = run.results.iter().filter(|r| !r.correct).count();
+    TableOutput {
+        title: format!(
+            "Table 11 — GPT-OSS-20B on repr. L2 (SYCL, LNL): {failed}/{} tasks without a correct kernel",
+            run.results.len()
+        ),
+        markdown: metrics::render_table(&["Operation", "Speedup"], &rows),
+        per_task_csv: metrics::render_csv(
+            &["task", "speedup"],
+            &rows,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_table4_runs() {
+        let out = table4(ExperimentScale::Quick);
+        assert!(out.markdown.contains("concat_layernorm"));
+        assert!(out.per_task_csv.lines().count() == 6); // header + 5 ops
+    }
+
+    #[test]
+    fn scale_knobs() {
+        assert_eq!(ExperimentScale::Quick.iterations(40), 10);
+        assert_eq!(ExperimentScale::Paper.iterations(40), 40);
+        assert_eq!(ExperimentScale::Quick.population(8), 4);
+    }
+}

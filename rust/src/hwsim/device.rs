@@ -1,0 +1,190 @@
+//! Device profiles for the simulated GPUs.
+
+use crate::ir::legality::DeviceLimits;
+
+/// Static description of a (simulated) GPU.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Marketing-style description included in prompts ("hardware
+    /// specification" section of App. E.1).
+    pub description: &'static str,
+    /// Peak memory bandwidth, GB/s.
+    pub peak_bw_gbs: f64,
+    /// Peak f32 throughput, GFLOP/s.
+    pub peak_gflops: f64,
+    /// Special-function (exp/div/rsqrt) throughput, Gop/s.
+    pub sfu_gops: f64,
+    /// Shared local memory per work-group, bytes.
+    pub slm_bytes: u64,
+    pub max_work_group: u64,
+    pub sub_group_width: u32,
+    /// Per-kernel-launch overhead, microseconds.
+    pub launch_us: f64,
+    /// Per-op framework dispatch overhead for the eager baseline, µs.
+    pub eager_dispatch_us: f64,
+    /// torch.autograd bookkeeping multiplier on backward baselines
+    /// (App. B.2 discussion: backward baseline measured through
+    /// torch.autograd.grad carries significant overhead).
+    pub autograd_overhead: f64,
+    /// Device-optimal tile edge (log2 sweet spot for SLM tiling).
+    pub optimal_tile: u32,
+    /// Device-optimal work-group size.
+    pub optimal_wg: u32,
+    /// Preferred vector load width.
+    pub preferred_vec: u32,
+    /// Parameter sensitivity: σ of the log2-gaussian efficiency curve
+    /// around the optima. Smaller = more sensitive to wrong parameters
+    /// (integrated GPUs with small caches are less forgiving).
+    pub param_sigma: f64,
+    /// Multiplicative penalty on SLM-tiled kernels without padding
+    /// (bank conflicts).
+    pub bank_conflict_penalty: f64,
+    /// Relative measurement noise (lognormal sigma).
+    pub noise_sigma: f64,
+}
+
+impl DeviceProfile {
+    /// Intel Arc 140V integrated GPU (Lunar Lake), §4 "LNL".
+    pub fn lnl() -> DeviceProfile {
+        DeviceProfile {
+            name: "lnl",
+            description: "Intel Arc 140V (Lunar Lake iGPU): 8 Xe2 cores, 64 EUs, \
+                          shared LPDDR5X-8533 (~136 GB/s), 128 KiB SLM/WG, \
+                          sub-group width 16, unified memory",
+            peak_bw_gbs: 136.0,
+            peak_gflops: 3900.0,
+            sfu_gops: 244.0,
+            slm_bytes: 128 * 1024,
+            max_work_group: 1024,
+            sub_group_width: 16,
+            launch_us: 9.0,
+            eager_dispatch_us: 28.0,
+            autograd_overhead: 9.0,
+            optimal_tile: 16,
+            optimal_wg: 128,
+            preferred_vec: 4,
+            param_sigma: 0.9,
+            bank_conflict_penalty: 0.90,
+            noise_sigma: 0.030,
+        }
+    }
+
+    /// Intel Arc B580 discrete GPU (Battlemage), §4 "BMG"/"B580".
+    pub fn b580() -> DeviceProfile {
+        DeviceProfile {
+            name: "b580",
+            description: "Intel Arc B580 (Battlemage dGPU): 20 Xe2 cores, 160 EUs, \
+                          12 GiB GDDR6 (456 GB/s), 128 KiB SLM/WG, sub-group \
+                          width 16, PCIe host transfer",
+            peak_bw_gbs: 456.0,
+            peak_gflops: 13700.0,
+            sfu_gops: 856.0,
+            slm_bytes: 128 * 1024,
+            max_work_group: 1024,
+            sub_group_width: 16,
+            launch_us: 6.0,
+            eager_dispatch_us: 18.0,
+            autograd_overhead: 11.0,
+            optimal_tile: 32,
+            optimal_wg: 256,
+            preferred_vec: 8,
+            param_sigma: 1.6,
+            bank_conflict_penalty: 0.82,
+            noise_sigma: 0.020,
+        }
+    }
+
+    /// NVIDIA RTX A6000 (Ampere), used for the CUDA baseline comparison.
+    pub fn a6000() -> DeviceProfile {
+        DeviceProfile {
+            name: "a6000",
+            description: "NVIDIA RTX A6000 (Ampere): 84 SMs, 48 GiB GDDR6 \
+                          (768 GB/s), 100 KiB smem/SM, warp width 32",
+            peak_bw_gbs: 768.0,
+            peak_gflops: 38700.0,
+            sfu_gops: 4840.0,
+            slm_bytes: 100 * 1024,
+            max_work_group: 1024,
+            sub_group_width: 32,
+            launch_us: 5.0,
+            eager_dispatch_us: 14.0,
+            autograd_overhead: 10.0,
+            optimal_tile: 32,
+            optimal_wg: 256,
+            preferred_vec: 4,
+            param_sigma: 1.3,
+            bank_conflict_penalty: 0.85,
+            noise_sigma: 0.020,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        match name {
+            "lnl" | "arc140v" => Some(DeviceProfile::lnl()),
+            "b580" | "bmg" => Some(DeviceProfile::b580()),
+            "a6000" => Some(DeviceProfile::a6000()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<DeviceProfile> {
+        vec![DeviceProfile::lnl(), DeviceProfile::b580(), DeviceProfile::a6000()]
+    }
+
+    /// Legality limits slice for the `ir` layer.
+    pub fn limits(&self) -> DeviceLimits {
+        DeviceLimits {
+            max_work_group_size: self.max_work_group,
+            slm_bytes: self.slm_bytes,
+            sub_group_sizes: &[8, 16, 32],
+        }
+    }
+
+    /// log2-gaussian efficiency of a parameter value vs the device
+    /// optimum: 1.0 at the optimum, falling off with `param_sigma`.
+    pub fn param_match(&self, value: u32, optimum: u32) -> f64 {
+        let d = (value.max(1) as f64).log2() - (optimum as f64).log2();
+        (-d * d / (2.0 * self.param_sigma * self.param_sigma)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(DeviceProfile::by_name("lnl").unwrap().name, "lnl");
+        assert_eq!(DeviceProfile::by_name("bmg").unwrap().name, "b580");
+        assert!(DeviceProfile::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn profiles_are_distinct() {
+        let lnl = DeviceProfile::lnl();
+        let b580 = DeviceProfile::b580();
+        assert!(b580.peak_bw_gbs > 2.0 * lnl.peak_bw_gbs);
+        assert_ne!(lnl.optimal_tile, b580.optimal_tile);
+        assert_ne!(lnl.optimal_wg, b580.optimal_wg);
+        assert!(lnl.param_sigma < b580.param_sigma, "iGPU is less forgiving");
+    }
+
+    #[test]
+    fn param_match_peaks_at_optimum() {
+        let d = DeviceProfile::b580();
+        assert!((d.param_match(32, 32) - 1.0).abs() < 1e-12);
+        assert!(d.param_match(16, 32) < 1.0);
+        assert!(d.param_match(16, 32) > d.param_match(8, 32));
+        // Symmetric in log space.
+        assert!((d.param_match(16, 32) - d.param_match(64, 32)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lnl_more_sensitive_than_b580() {
+        let lnl = DeviceProfile::lnl();
+        let b580 = DeviceProfile::b580();
+        // Same relative parameter error hurts more on the iGPU.
+        assert!(lnl.param_match(64, 16) < b580.param_match(128, 32));
+    }
+}

@@ -1,0 +1,22 @@
+//! Analytical GPU performance model.
+//!
+//! Substitute for the paper's physical GPUs (Intel Arc 140V "LNL", Intel
+//! Arc B580 "BMG", NVIDIA RTX A6000) per the substitution rule in
+//! DESIGN.md §2. A roofline model with feature-dependent efficiencies:
+//! kernel time is the max of memory, compute and special-function time at
+//! efficiencies determined by the genome's behavioral features and
+//! parameter match to the device, plus launch/sync overheads and
+//! measurement noise.
+//!
+//! Absolute times are not claimed to match the paper's hardware — the
+//! *shape* of the results (who wins, by what factor, where device-specific
+//! optima diverge) is what this model reproduces. Device-specific
+//! parameter sweet spots (tile size, work-group size, vector width) differ
+//! between profiles, which is what makes the §5.3 hardware-awareness
+//! crossover experiment non-trivial.
+
+pub mod device;
+pub mod model;
+
+pub use device::DeviceProfile;
+pub use model::{baseline_cost, kernel_cost, vendor_cost, Bottleneck, KernelCost, NoisyClock};

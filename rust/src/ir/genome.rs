@@ -1,0 +1,434 @@
+//! The kernel genome: structured candidate-kernel description.
+
+use crate::util::json::Json;
+
+/// Memory-access pattern — the first behavioral dimension (§3.2).
+///
+/// Levels mirror the paper's `d_mem` bins exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MemoryPattern {
+    /// 0: scalar, strided, or uncoalesced access.
+    Scalar,
+    /// 1: coalesced / vectorized (vec4, aligned loads).
+    Coalesced,
+    /// 2: shared/local memory with explicit tiling.
+    TiledSlm,
+    /// 3: multi-level hierarchy (SLM + register blocking + prefetch).
+    MultiLevel,
+}
+
+impl MemoryPattern {
+    pub fn level(self) -> usize {
+        match self {
+            MemoryPattern::Scalar => 0,
+            MemoryPattern::Coalesced => 1,
+            MemoryPattern::TiledSlm => 2,
+            MemoryPattern::MultiLevel => 3,
+        }
+    }
+
+    pub fn from_level(level: usize) -> MemoryPattern {
+        match level {
+            0 => MemoryPattern::Scalar,
+            1 => MemoryPattern::Coalesced,
+            2 => MemoryPattern::TiledSlm,
+            _ => MemoryPattern::MultiLevel,
+        }
+    }
+}
+
+/// Algorithmic structure — the second behavioral dimension (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum AlgoStructure {
+    /// 0: direct PyTorch translation (one kernel per op).
+    DirectTranslation,
+    /// 1: fused operations (single pass over data).
+    Fused,
+    /// 2: reformulated algorithm (online normalization, flash pattern).
+    Reformulated,
+    /// 3: novel / asymptotically improved algorithm.
+    Novel,
+}
+
+impl AlgoStructure {
+    pub fn level(self) -> usize {
+        match self {
+            AlgoStructure::DirectTranslation => 0,
+            AlgoStructure::Fused => 1,
+            AlgoStructure::Reformulated => 2,
+            AlgoStructure::Novel => 3,
+        }
+    }
+
+    pub fn from_level(level: usize) -> AlgoStructure {
+        match level {
+            0 => AlgoStructure::DirectTranslation,
+            1 => AlgoStructure::Fused,
+            2 => AlgoStructure::Reformulated,
+            _ => AlgoStructure::Novel,
+        }
+    }
+}
+
+/// Parallelism coordination — the third behavioral dimension (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SyncStrategy {
+    /// 0: no synchronization (embarrassingly parallel).
+    None,
+    /// 1: work-group barriers.
+    WorkGroupBarrier,
+    /// 2: sub-group primitives (shuffles, reductions, broadcasts).
+    SubGroup,
+    /// 3: global coordination (atomics, multi-pass with sync).
+    Global,
+}
+
+impl SyncStrategy {
+    pub fn level(self) -> usize {
+        match self {
+            SyncStrategy::None => 0,
+            SyncStrategy::WorkGroupBarrier => 1,
+            SyncStrategy::SubGroup => 2,
+            SyncStrategy::Global => 3,
+        }
+    }
+
+    pub fn from_level(level: usize) -> SyncStrategy {
+        match level {
+            0 => SyncStrategy::None,
+            1 => SyncStrategy::WorkGroupBarrier,
+            2 => SyncStrategy::SubGroup,
+            _ => SyncStrategy::Global,
+        }
+    }
+}
+
+/// Hardware-dependent tunable parameters (§3.4).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ParamSet {
+    /// Work-group shape (x is the contiguous dimension).
+    pub wg_x: u32,
+    pub wg_y: u32,
+    /// Tile sizes for SLM tiling / register blocking.
+    pub tile_m: u32,
+    pub tile_n: u32,
+    pub tile_k: u32,
+    /// Vector load width in elements (1, 2, 4, 8).
+    pub vec_width: u32,
+    /// Inner-loop unroll factor.
+    pub unroll: u32,
+    /// Per-thread register-blocking factor (1 = none).
+    pub reg_block: u32,
+    /// Software prefetching of the next tile.
+    pub prefetch: bool,
+    /// +1 padding on SLM arrays to avoid bank conflicts.
+    pub slm_pad: bool,
+}
+
+impl Default for ParamSet {
+    fn default() -> ParamSet {
+        ParamSet {
+            wg_x: 16,
+            wg_y: 1,
+            tile_m: 16,
+            tile_n: 16,
+            tile_k: 16,
+            vec_width: 1,
+            unroll: 1,
+            reg_block: 1,
+            prefetch: false,
+            slm_pad: false,
+        }
+    }
+}
+
+impl ParamSet {
+    /// SLM bytes implied by the tiling parameters (two f32 input tiles,
+    /// padded if requested) — checked against the device budget.
+    pub fn slm_bytes(&self) -> u64 {
+        let pad = if self.slm_pad { 1 } else { 0 };
+        let tile_a = (self.tile_m as u64) * (self.tile_k as u64 + pad);
+        let tile_b = (self.tile_k as u64) * (self.tile_n as u64 + pad);
+        (tile_a + tile_b) * 4
+    }
+
+    pub fn work_group_size(&self) -> u64 {
+        self.wg_x as u64 * self.wg_y as u64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("wg_x", self.wg_x).set("wg_y", self.wg_y);
+        o.set("tile_m", self.tile_m)
+            .set("tile_n", self.tile_n)
+            .set("tile_k", self.tile_k);
+        o.set("vec_width", self.vec_width)
+            .set("unroll", self.unroll)
+            .set("reg_block", self.reg_block);
+        o.set("prefetch", self.prefetch).set("slm_pad", self.slm_pad);
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Option<ParamSet> {
+        Some(ParamSet {
+            wg_x: v.get("wg_x")?.as_usize()? as u32,
+            wg_y: v.get("wg_y")?.as_usize()? as u32,
+            tile_m: v.get("tile_m")?.as_usize()? as u32,
+            tile_n: v.get("tile_n")?.as_usize()? as u32,
+            tile_k: v.get("tile_k")?.as_usize()? as u32,
+            vec_width: v.get("vec_width")?.as_usize()? as u32,
+            unroll: v.get("unroll")?.as_usize()? as u32,
+            reg_block: v.get("reg_block")?.as_usize()? as u32,
+            prefetch: v.get("prefetch")?.as_bool()?,
+            slm_pad: v.get("slm_pad")?.as_bool()?,
+        })
+    }
+}
+
+/// A templated kernel's tunable-parameter specification (§3.4): the list
+/// of dispatch options the generated `forward` enumerates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TemplateSpec {
+    /// Candidate (wg_x, wg_y) pairs.
+    pub wg_options: Vec<(u32, u32)>,
+    /// Candidate (tile_m, tile_n, tile_k) triples.
+    pub tile_options: Vec<(u32, u32, u32)>,
+    /// Candidate vector widths.
+    pub vec_options: Vec<u32>,
+}
+
+impl TemplateSpec {
+    /// All parameter instantiations the dispatcher enumerates.
+    pub fn instantiations(&self, base: &ParamSet) -> Vec<ParamSet> {
+        let mut out = Vec::new();
+        let wgs = if self.wg_options.is_empty() {
+            vec![(base.wg_x, base.wg_y)]
+        } else {
+            self.wg_options.clone()
+        };
+        let tiles = if self.tile_options.is_empty() {
+            vec![(base.tile_m, base.tile_n, base.tile_k)]
+        } else {
+            self.tile_options.clone()
+        };
+        let vecs = if self.vec_options.is_empty() {
+            vec![base.vec_width]
+        } else {
+            self.vec_options.clone()
+        };
+        for &(wx, wy) in &wgs {
+            for &(tm, tn, tk) in &tiles {
+                for &vw in &vecs {
+                    let mut p = base.clone();
+                    p.wg_x = wx;
+                    p.wg_y = wy;
+                    p.tile_m = tm;
+                    p.tile_n = tn;
+                    p.tile_k = tk;
+                    p.vec_width = vw;
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn n_instantiations(&self) -> usize {
+        self.wg_options.len().max(1) * self.tile_options.len().max(1) * self.vec_options.len().max(1)
+    }
+}
+
+/// Kinds of injected defects — the simulated code model's error channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DefectKind {
+    /// Source does not compile (syntax error, bad template instantiation).
+    SyntaxError,
+    /// Wrong numerics of a given relative magnitude (bad index math,
+    /// missing edge-case handling).
+    NumericBug,
+    /// SLM accessed across work-items without a barrier: data race.
+    MissingBarrier,
+    /// Out-of-bounds access guard missing — fails validation.
+    OutOfBounds,
+}
+
+/// A defect with severity in (0, 1]; for `NumericBug` the severity scales
+/// the relative output error used by the ν-criterion check.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Defect {
+    pub kind: DefectKind,
+    pub severity: f64,
+}
+
+/// A candidate kernel: the unit the evolutionary loop manipulates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelGenome {
+    /// Task this kernel implements.
+    pub task_id: String,
+    pub mem: MemoryPattern,
+    pub algo: AlgoStructure,
+    pub sync: SyncStrategy,
+    pub params: ParamSet,
+    /// Number of fused producer ops folded into this kernel (0 = each op
+    /// is its own kernel, as in a direct translation).
+    pub fused_ops: u32,
+    /// Present when the model emitted a templated kernel (§3.4).
+    pub template: Option<TemplateSpec>,
+    /// Latent defects injected by the code model's error channel.
+    pub defects: Vec<Defect>,
+    /// Monotonic id assigned at creation (0 = unassigned).
+    pub id: u64,
+    /// Id of the parent elite this genome was mutated from (None for a
+    /// fresh generation).
+    pub parent_id: Option<u64>,
+    /// Which model of the ensemble produced it (for reporting).
+    pub produced_by: String,
+}
+
+impl KernelGenome {
+    /// A level-0 "direct PyTorch translation" starting point for a task.
+    pub fn direct_translation(task_id: &str) -> KernelGenome {
+        KernelGenome {
+            task_id: task_id.to_string(),
+            mem: MemoryPattern::Scalar,
+            algo: AlgoStructure::DirectTranslation,
+            sync: SyncStrategy::None,
+            params: ParamSet::default(),
+            fused_ops: 0,
+            template: None,
+            defects: Vec::new(),
+            id: 0,
+            parent_id: None,
+            produced_by: String::new(),
+        }
+    }
+
+    /// The genome's intended behavioral coordinates. The archive uses the
+    /// *classifier's* coordinates (derived from rendered source); in a
+    /// defect-free render the two agree — covered by tests.
+    pub fn intended_coords(&self) -> [usize; 3] {
+        [self.mem.level(), self.algo.level(), self.sync.level()]
+    }
+
+    /// Whether the genome uses SLM (and therefore requires work-group
+    /// coordination to be race-free).
+    pub fn uses_slm(&self) -> bool {
+        matches!(self.mem, MemoryPattern::TiledSlm | MemoryPattern::MultiLevel)
+    }
+
+    pub fn has_defect(&self, kind: DefectKind) -> bool {
+        self.defects.iter().any(|d| d.kind == kind)
+    }
+
+    /// Structural distance between two genomes (for diversity metrics):
+    /// L1 over behavior levels plus a parameter-difference term.
+    pub fn distance(&self, other: &KernelGenome) -> f64 {
+        let a = self.intended_coords();
+        let b = other.intended_coords();
+        let behav: usize = a.iter().zip(b.iter()).map(|(x, y)| x.abs_diff(*y)).sum();
+        let p = &self.params;
+        let q = &other.params;
+        let param = (p.wg_x != q.wg_x) as u32
+            + (p.wg_y != q.wg_y) as u32
+            + (p.tile_m != q.tile_m) as u32
+            + (p.tile_n != q.tile_n) as u32
+            + (p.tile_k != q.tile_k) as u32
+            + (p.vec_width != q.vec_width) as u32
+            + (p.unroll != q.unroll) as u32
+            + (p.reg_block != q.reg_block) as u32;
+        behav as f64 + 0.25 * param as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("task_id", self.task_id.as_str())
+            .set("mem", self.mem.level())
+            .set("algo", self.algo.level())
+            .set("sync", self.sync.level())
+            .set("fused_ops", self.fused_ops)
+            .set("id", self.id as f64)
+            .set("produced_by", self.produced_by.as_str())
+            .set("params", self.params.to_json())
+            .set("templated", self.template.is_some())
+            .set("defects", self.defects.len());
+        if let Some(p) = self.parent_id {
+            o.set("parent_id", p as f64);
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_roundtrips() {
+        for l in 0..4 {
+            assert_eq!(MemoryPattern::from_level(l).level(), l);
+            assert_eq!(AlgoStructure::from_level(l).level(), l);
+            assert_eq!(SyncStrategy::from_level(l).level(), l);
+        }
+    }
+
+    #[test]
+    fn direct_translation_is_origin_cell() {
+        let g = KernelGenome::direct_translation("t");
+        assert_eq!(g.intended_coords(), [0, 0, 0]);
+        assert!(!g.uses_slm());
+    }
+
+    #[test]
+    fn slm_bytes_accounts_padding() {
+        let mut p = ParamSet {
+            tile_m: 16,
+            tile_n: 16,
+            tile_k: 16,
+            ..ParamSet::default()
+        };
+        let unpadded = p.slm_bytes();
+        p.slm_pad = true;
+        assert!(p.slm_bytes() > unpadded);
+        assert_eq!(unpadded, (16 * 16 + 16 * 16) * 4);
+    }
+
+    #[test]
+    fn template_instantiations_cartesian() {
+        let spec = TemplateSpec {
+            wg_options: vec![(16, 1), (32, 1)],
+            tile_options: vec![(16, 16, 16), (32, 32, 16), (8, 8, 8)],
+            vec_options: vec![1, 4],
+        };
+        let base = ParamSet::default();
+        assert_eq!(spec.instantiations(&base).len(), 12);
+        assert_eq!(spec.n_instantiations(), 12);
+    }
+
+    #[test]
+    fn distance_zero_for_identical() {
+        let g = KernelGenome::direct_translation("t");
+        assert_eq!(g.distance(&g), 0.0);
+        let mut h = g.clone();
+        h.mem = MemoryPattern::TiledSlm;
+        h.params.vec_width = 4;
+        assert!(g.distance(&h) > 2.0);
+    }
+
+    #[test]
+    fn params_json_roundtrip() {
+        let p = ParamSet {
+            wg_x: 32,
+            wg_y: 8,
+            tile_m: 64,
+            tile_n: 32,
+            tile_k: 16,
+            vec_width: 4,
+            unroll: 2,
+            reg_block: 4,
+            prefetch: true,
+            slm_pad: true,
+        };
+        let q = ParamSet::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, q);
+    }
+}

@@ -1,0 +1,144 @@
+//! Genome legality rules — the "does this even launch" checks a real
+//! driver/compiler would enforce, evaluated against a device profile at
+//! compile time (device limits) and used by the mutation engine to avoid
+//! proposing obviously-invalid kernels.
+
+use super::genome::KernelGenome;
+
+/// Device limits relevant to legality (a slice of `hwsim::DeviceProfile`,
+/// duplicated here to keep `ir` free of a dependency on `hwsim`).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceLimits {
+    pub max_work_group_size: u64,
+    pub slm_bytes: u64,
+    pub sub_group_sizes: &'static [u32],
+}
+
+impl Default for DeviceLimits {
+    fn default() -> DeviceLimits {
+        DeviceLimits {
+            max_work_group_size: 1024,
+            slm_bytes: 64 * 1024,
+            sub_group_sizes: &[8, 16, 32],
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum LegalityError {
+    #[error("work-group size {got} exceeds device maximum {max}")]
+    WorkGroupTooLarge { got: u64, max: u64 },
+    #[error("SLM footprint {got} B exceeds device budget {max} B")]
+    SlmOverflow { got: u64, max: u64 },
+    #[error("vector width {0} is not a power of two in 1..=8")]
+    BadVecWidth(u32),
+    #[error("unroll factor {0} out of range 1..=16")]
+    BadUnroll(u32),
+    #[error("register blocking {0} out of range 1..=8")]
+    BadRegBlock(u32),
+    #[error("work-group dimension is zero")]
+    ZeroDim,
+    #[error("tile dimension is zero")]
+    ZeroTile,
+}
+
+/// Check a genome against device limits. The first violation is returned
+/// (a real compiler stops at the first hard error too).
+pub fn check_legality(
+    genome: &KernelGenome,
+    limits: &DeviceLimits,
+) -> Result<(), LegalityError> {
+    let p = &genome.params;
+    if p.wg_x == 0 || p.wg_y == 0 {
+        return Err(LegalityError::ZeroDim);
+    }
+    if p.tile_m == 0 || p.tile_n == 0 || p.tile_k == 0 {
+        return Err(LegalityError::ZeroTile);
+    }
+    let wg = p.work_group_size();
+    if wg > limits.max_work_group_size {
+        return Err(LegalityError::WorkGroupTooLarge {
+            got: wg,
+            max: limits.max_work_group_size,
+        });
+    }
+    if genome.uses_slm() {
+        let slm = p.slm_bytes();
+        if slm > limits.slm_bytes {
+            return Err(LegalityError::SlmOverflow {
+                got: slm,
+                max: limits.slm_bytes,
+            });
+        }
+    }
+    if !p.vec_width.is_power_of_two() || p.vec_width > 8 {
+        return Err(LegalityError::BadVecWidth(p.vec_width));
+    }
+    if p.unroll == 0 || p.unroll > 16 {
+        return Err(LegalityError::BadUnroll(p.unroll));
+    }
+    if p.reg_block == 0 || p.reg_block > 8 {
+        return Err(LegalityError::BadRegBlock(p.reg_block));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::genome::{KernelGenome, MemoryPattern};
+
+    #[test]
+    fn default_genome_is_legal() {
+        let g = KernelGenome::direct_translation("t");
+        assert!(check_legality(&g, &DeviceLimits::default()).is_ok());
+    }
+
+    #[test]
+    fn oversized_work_group_rejected() {
+        let mut g = KernelGenome::direct_translation("t");
+        g.params.wg_x = 64;
+        g.params.wg_y = 64; // 4096 > 1024
+        assert!(matches!(
+            check_legality(&g, &DeviceLimits::default()),
+            Err(LegalityError::WorkGroupTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn slm_overflow_only_when_slm_used() {
+        let mut g = KernelGenome::direct_translation("t");
+        g.params.tile_m = 256;
+        g.params.tile_n = 256;
+        g.params.tile_k = 64;
+        // Scalar kernel: tiles unused, no SLM check.
+        assert!(check_legality(&g, &DeviceLimits::default()).is_ok());
+        g.mem = MemoryPattern::TiledSlm;
+        assert!(matches!(
+            check_legality(&g, &DeviceLimits::default()),
+            Err(LegalityError::SlmOverflow { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_scalar_params_rejected() {
+        let mut g = KernelGenome::direct_translation("t");
+        g.params.vec_width = 3;
+        assert_eq!(
+            check_legality(&g, &DeviceLimits::default()),
+            Err(LegalityError::BadVecWidth(3))
+        );
+        g.params.vec_width = 4;
+        g.params.unroll = 0;
+        assert_eq!(
+            check_legality(&g, &DeviceLimits::default()),
+            Err(LegalityError::BadUnroll(0))
+        );
+        g.params.unroll = 2;
+        g.params.reg_block = 9;
+        assert_eq!(
+            check_legality(&g, &DeviceLimits::default()),
+            Err(LegalityError::BadRegBlock(9))
+        );
+    }
+}

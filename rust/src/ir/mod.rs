@@ -1,0 +1,25 @@
+//! Kernel intermediate representation.
+//!
+//! A [`KernelGenome`] is the structured description of one candidate GPU
+//! kernel: which memory-access strategy it uses, how the algorithm is
+//! organized, how work-items coordinate, and its hardware-dependent
+//! parameters (work-group shape, tile sizes, vector width, unroll factor,
+//! register blocking, prefetching, SLM padding).
+//!
+//! The genome plays the role of the *source code the LLM writes* in the
+//! paper: the simulated code model ([`crate::simllm`]) mutates genomes,
+//! the renderer ([`render`]) turns them into real SYCL C++ source text,
+//! and the behavioral classifier ([`crate::classify`]) re-derives the
+//! MAP-Elites coordinates from that text by static pattern matching —
+//! exactly the §3.2 pipeline.
+
+pub mod genome;
+pub mod legality;
+pub mod render;
+
+pub use genome::{
+    AlgoStructure, Defect, DefectKind, KernelGenome, MemoryPattern, ParamSet, SyncStrategy,
+    TemplateSpec,
+};
+pub use legality::{check_legality, LegalityError};
+pub use render::render_sycl;

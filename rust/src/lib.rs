@@ -1,0 +1,38 @@
+//! # KernelFoundry (reproduction)
+//!
+//! A Rust + JAX + Pallas reproduction of *KernelFoundry: Hardware-aware
+//! evolutionary GPU kernel optimization* (Wiedemann et al., CS.DC 2026).
+//!
+//! The crate implements the paper's full system — MAP-Elites quality-
+//! diversity search with kernel-specific behavioral descriptors,
+//! gradient-informed evolution, meta-prompt co-evolution, templated
+//! parameter tuning, the distributed evaluation framework, and the
+//! rigorous benchmarking methodology — plus every substrate it depends on
+//! (simulated LLM code model, SYCL-like kernel IR + renderer, hardware
+//! performance simulator, KernelBench-like task suites, PJRT runtime for
+//! real AOT-compiled Pallas kernels).
+//!
+//! See `DESIGN.md` for the paper→module map and the substitution table.
+
+pub mod archive;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod classify;
+pub mod dist;
+pub mod eval;
+pub mod experiments;
+pub mod gradient;
+pub mod prompts;
+pub mod runtime;
+pub mod selection;
+pub mod simllm;
+pub mod tasks;
+pub mod transitions;
+pub mod hwsim;
+pub mod ir;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,264 @@
+//! KernelFoundry CLI launcher.
+//!
+//! ```text
+//! kernelfoundry run        --task <id> --device b580 --iters 40 [--param-opt]
+//! kernelfoundry bench      --table 1|2|3|4|11|fig3  [--out results/]
+//! kernelfoundry serve      --compile-workers N --exec-workers M (distributed demo)
+//! kernelfoundry tasks      [--suite l1|l2|rkb|onednn]
+//! kernelfoundry report     --db runs.jsonl
+//! ```
+
+use kernelfoundry::config::FoundryConfig;
+use kernelfoundry::coordinator::EvolutionEngine;
+use kernelfoundry::dist::{ClusterConfig, Database, DbRow, WorkerPool};
+use kernelfoundry::eval::ExecBackend;
+use kernelfoundry::experiments::{self, ExperimentScale};
+use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::tasks::catalog;
+use kernelfoundry::util::cli::Command;
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((sub, rest)) = args.split_first() else {
+        print_usage();
+        return ExitCode::FAILURE;
+    };
+    let result = match sub.as_str() {
+        "run" => cmd_run(rest),
+        "bench" => cmd_bench(rest),
+        "serve" => cmd_serve(rest),
+        "tasks" => cmd_tasks(rest),
+        "report" => cmd_report(rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}'\n")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(msg) => {
+            eprintln!("{msg}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "kernelfoundry {} — hardware-aware evolutionary GPU kernel optimization (reproduction)\n\n\
+         subcommands:\n  run      optimize kernels for one task\n  bench    regenerate a paper table/figure\n  serve    distributed worker-pool demo\n  tasks    list benchmark tasks\n  report   summarize a results database\n\nuse <subcommand> --help for options",
+        kernelfoundry::version()
+    );
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("run", "run KernelFoundry on one task")
+        .opt("task", "99_Matmul_GELU_Softmax", "task id (see `tasks`)")
+        .opt("device", "b580", "device profile: lnl | b580 | a6000")
+        .opt("iters", "40", "generations")
+        .opt("population", "8", "candidates per generation")
+        .opt("seed", "20260710", "RNG seed")
+        .opt("models", "gpt-4.1,gpt-5-mini", "ensemble model profiles")
+        .opt("config", "", "YAML config file (overrides defaults)")
+        .flag("param-opt", "run the templated parameter-optimization phase")
+        .flag("cuda", "generate CUDA instead of SYCL")
+        .flag("verbose", "debug logging");
+    let p = cmd.parse(args)?;
+    if p.has_flag("verbose") {
+        kernelfoundry::util::log::set_level(kernelfoundry::util::log::Level::Debug);
+    }
+
+    let mut config = FoundryConfig::paper_defaults();
+    if let Some(path) = p.get("config").filter(|s| !s.is_empty()) {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        config = FoundryConfig::from_yaml(&text).map_err(|e| e.to_string())?;
+    }
+    config.evolution.max_generations = p.get_usize("iters").unwrap_or(40);
+    config.evolution.population = p.get_usize("population").unwrap_or(8);
+    config.seed = p.get_u64("seed").unwrap_or(config.seed);
+    config.device = p.get("device").unwrap_or("b580").to_string();
+    if p.has_flag("cuda") {
+        config.language = "cuda".to_string();
+    }
+    if let Some(models) = p.get("models") {
+        config.llm.models = models.split(',').map(String::from).collect();
+    }
+
+    let task_id = p.get("task").unwrap();
+    let task = catalog::find_task(task_id).ok_or_else(|| format!("unknown task '{task_id}'"))?;
+    let device = DeviceProfile::by_name(&config.device)
+        .ok_or_else(|| format!("unknown device '{}'", config.device))?;
+
+    println!(
+        "== KernelFoundry: task {} on {} ({} iters x pop {})",
+        task.id, device.name, config.evolution.max_generations, config.evolution.population
+    );
+    let mut engine = EvolutionEngine::new(config, task, ExecBackend::HwSim(device));
+    let report = engine.run(p.has_flag("param-opt"));
+    println!(
+        "evaluations: {} (compile errors {}, incorrect {})",
+        report.evaluations, report.compile_errors, report.incorrect
+    );
+    if let Some(best) = &report.best {
+        println!(
+            "best kernel: fitness {:.3}, speedup {:.3}x ({:.4} ms vs baseline {:.4} ms), cell {:?}, by {}",
+            best.fitness, best.speedup, best.time_ms, best.baseline_ms, best.coords, best.genome.produced_by
+        );
+        println!("archive: {:?}", report.archive.unwrap());
+        println!("\n--- best kernel source ---\n{}", best.source);
+    } else {
+        println!("no correct kernel found");
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("bench", "regenerate a paper table or figure")
+        .opt("table", "1", "which: 1 | 2 | 3 | 4 | 11 | fig3 | all")
+        .opt("out", "results", "output directory for CSVs")
+        .flag("quick", "reduced-scale run");
+    let p = cmd.parse(args)?;
+    let scale = if p.has_flag("quick") {
+        ExperimentScale::Quick
+    } else {
+        ExperimentScale::from_env()
+    };
+    let out_dir = Path::new(p.get("out").unwrap());
+    std::fs::create_dir_all(out_dir).map_err(|e| e.to_string())?;
+    let which = p.get("table").unwrap();
+
+    let save = |name: &str, csv: &str| {
+        let path = out_dir.join(name);
+        std::fs::write(&path, csv).ok();
+        println!("(per-task CSV: {})", path.display());
+    };
+
+    if which == "1" || which == "all" {
+        for (i, t) in experiments::table1(scale).iter().enumerate() {
+            t.print();
+            save(&format!("table1_{}.csv", ["l1", "l2", "rkb"][i]), &t.per_task_csv);
+        }
+    }
+    if which == "2" || which == "all" {
+        for (i, t) in experiments::table2(scale).iter().enumerate() {
+            t.print();
+            save(&format!("table2_{}.csv", ["filtered", "l2"][i]), &t.per_task_csv);
+        }
+    }
+    if which == "3" || which == "all" {
+        let r = experiments::run_crossover(scale);
+        println!(
+            "\n## Table 3 / Table 10 — hardware-awareness crossover\n\n{}",
+            r.markdown()
+        );
+        save("table3_crossover.csv", &r.csv());
+    }
+    if which == "4" || which == "all" {
+        let t = experiments::table4(scale);
+        t.print();
+        save("table4_onednn.csv", &t.per_task_csv);
+    }
+    if which == "11" || which == "all" {
+        let t = experiments::table11(scale);
+        t.print();
+        save("table11_gptoss.csv", &t.per_task_csv);
+    }
+    if which == "fig3" || which == "all" {
+        let t = experiments::fig3_series(scale);
+        t.print();
+        save("fig3_iterations.csv", &t.per_task_csv);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("serve", "distributed worker-pool demo")
+        .opt("task", "1_Conv2D_ReLU_BiasAdd", "task id")
+        .opt("compile-workers", "2", "compilation workers (no GPU)")
+        .opt("exec-workers", "4", "execution workers (one device each)")
+        .opt("batch", "32", "candidates per batch")
+        .opt("device", "b580", "device profile");
+    let p = cmd.parse(args)?;
+    let task = catalog::find_task(p.get("task").unwrap())
+        .ok_or_else(|| "unknown task".to_string())?;
+    let device = DeviceProfile::by_name(p.get("device").unwrap()).ok_or("unknown device")?;
+    let pool = WorkerPool::new(ClusterConfig {
+        compile_workers: p.get_usize("compile-workers").unwrap_or(2),
+        exec_workers: p.get_usize("exec-workers").unwrap_or(4),
+        device,
+        queue_capacity: 64,
+        seed: 1,
+    });
+    let n = p.get_usize("batch").unwrap_or(32);
+    let genomes: Vec<_> = (0..n)
+        .map(|i| {
+            let mut g = kernelfoundry::ir::KernelGenome::direct_translation(&task.id);
+            g.id = i as u64;
+            g.mem = kernelfoundry::ir::MemoryPattern::from_level(i % 4);
+            g.params.slm_pad = true;
+            g
+        })
+        .collect();
+    let start = std::time::Instant::now();
+    let records = pool.evaluate_batch(&task, genomes);
+    let dt = start.elapsed().as_secs_f64();
+    let correct = records.iter().filter(|r| r.correct()).count();
+    println!(
+        "cluster evaluated {} candidates in {:.2}s ({:.1}/s): {} correct, {} compile-rejected (never reached a GPU worker)",
+        records.len(),
+        dt,
+        records.len() as f64 / dt,
+        correct,
+        pool.metrics.compile_rejected.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    Ok(())
+}
+
+fn cmd_tasks(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("tasks", "list benchmark tasks")
+        .opt("suite", "all", "l1 | l2 | rkb | onednn | custom | all");
+    let p = cmd.parse(args)?;
+    let tasks = match p.get("suite").unwrap() {
+        "l1" => catalog::kernelbench_l1(),
+        "l2" => catalog::kernelbench_l2(),
+        "rkb" => catalog::robust_kbench(),
+        "onednn" => catalog::onednn_tasks(),
+        "custom" => vec![catalog::llama_rope_task()],
+        _ => catalog::all_tasks(),
+    };
+    println!("{:<55} {:>6} {:>14} {:>12}", "task", "ops", "flops", "suite");
+    for t in &tasks {
+        println!(
+            "{:<55} {:>6} {:>14} {:>12}",
+            t.id,
+            t.n_ops(),
+            t.total_flops(),
+            t.suite.name()
+        );
+    }
+    println!("({} tasks)", tasks.len());
+    Ok(())
+}
+
+fn cmd_report(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("report", "summarize a results database")
+        .opt("db", "runs.jsonl", "JSONL database path")
+        .opt("method", "kernelfoundry", "method to summarize");
+    let p = cmd.parse(args)?;
+    let db = Database::new();
+    let n = db
+        .load(Path::new(p.get("db").unwrap()))
+        .map_err(|e| e.to_string())?;
+    println!("loaded {n} rows");
+    let best: Vec<DbRow> = db.best_per_task(p.get("method").unwrap());
+    for row in &best {
+        println!(
+            "{:<55} fitness {:.3} speedup {:.3} cell {:?} by {}",
+            row.task_id, row.fitness, row.speedup, row.coords, row.produced_by
+        );
+    }
+    Ok(())
+}

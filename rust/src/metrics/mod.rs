@@ -1,0 +1,192 @@
+//! Evaluation metrics (§4) and table rendering.
+//!
+//! * correctness rate — fraction of tasks with a compiling, numerically
+//!   correct kernel;
+//! * fast_p — fraction of tasks with speedup > p;
+//! * average and geometric-mean speedup;
+//! * hws / hws_p — the §5.3 hardware-speedup metric for the crossover
+//!   experiment.
+
+use crate::util::stats;
+
+/// Per-task outcome of one method, the atom of all result tables.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task_id: String,
+    pub correct: bool,
+    /// Speedup over the baseline (0 when no correct kernel).
+    pub speedup: f64,
+    /// Best kernel runtime, ms.
+    pub time_ms: f64,
+}
+
+/// Aggregate metrics for a method over a task set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Aggregate {
+    pub n: usize,
+    pub correct_rate: f64,
+    pub fast_1: f64,
+    pub fast_2: f64,
+    pub avg_speedup: f64,
+    pub geom_speedup: f64,
+}
+
+/// fast_p: proportion of tasks with speedup strictly greater than p (§4).
+pub fn fast_p(results: &[TaskResult], p: f64) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().filter(|r| r.correct && r.speedup > p).count() as f64 / results.len() as f64
+}
+
+/// Aggregate a method's per-task results. Averages follow the paper's
+/// convention: speedups are averaged over tasks with a correct kernel.
+pub fn aggregate(results: &[TaskResult]) -> Aggregate {
+    let speeds: Vec<f64> = results
+        .iter()
+        .filter(|r| r.correct)
+        .map(|r| r.speedup)
+        .collect();
+    Aggregate {
+        n: results.len(),
+        correct_rate: if results.is_empty() {
+            0.0
+        } else {
+            results.iter().filter(|r| r.correct).count() as f64 / results.len() as f64
+        },
+        fast_1: fast_p(results, 1.0),
+        fast_2: fast_p(results, 2.0),
+        avg_speedup: stats::mean(&speeds),
+        geom_speedup: stats::geomean(&speeds),
+    }
+}
+
+/// §5.3 hardware-speedup: hws(k^A) = t_A(k^B) / t_A(k^A) — how much
+/// faster the kernel optimized *for* device A runs on A than the kernel
+/// optimized on B does.
+pub fn hws(time_native_ms: f64, time_foreign_ms: f64) -> f64 {
+    if time_native_ms <= 0.0 {
+        return 0.0;
+    }
+    time_foreign_ms / time_native_ms
+}
+
+/// Aggregate hws over tasks: (hws_1, hws_1.5, avg, geom).
+#[derive(Debug, Clone, Copy)]
+pub struct HwsAggregate {
+    pub hws_1: f64,
+    pub hws_15: f64,
+    pub avg: f64,
+    pub geom: f64,
+}
+
+pub fn aggregate_hws(values: &[f64]) -> HwsAggregate {
+    let n = values.len().max(1) as f64;
+    HwsAggregate {
+        hws_1: values.iter().filter(|v| **v > 1.0).count() as f64 / n,
+        hws_15: values.iter().filter(|v| **v > 1.5).count() as f64 / n,
+        avg: stats::mean(values),
+        geom: stats::geomean(values),
+    }
+}
+
+/// Render a markdown table (paper-style rows).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str("| ");
+    out.push_str(&headers.join(" | "));
+    out.push_str(" |\n|");
+    for _ in headers {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str("| ");
+        out.push_str(&row.join(" | "));
+        out.push_str(" |\n");
+    }
+    out
+}
+
+/// Render a CSV document.
+pub fn render_csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&headers.join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Format an aggregate as a paper-style table row.
+pub fn aggregate_row(label: &str, llms: &str, agg: &Aggregate) -> Vec<String> {
+    vec![
+        label.to_string(),
+        llms.to_string(),
+        format!("{:.2}", agg.correct_rate),
+        format!("{:.0} %", agg.fast_1 * 100.0),
+        format!("{:.0} %", agg.fast_2 * 100.0),
+        format!("{:.3}", agg.avg_speedup),
+        format!("{:.3}", agg.geom_speedup),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(id: &str, correct: bool, speedup: f64) -> TaskResult {
+        TaskResult {
+            task_id: id.to_string(),
+            correct,
+            speedup,
+            time_ms: 1.0,
+        }
+    }
+
+    #[test]
+    fn fast_p_counts_strictly_greater() {
+        let rs = vec![r("a", true, 1.0), r("b", true, 1.01), r("c", true, 2.5), r("d", false, 9.0)];
+        assert_eq!(fast_p(&rs, 1.0), 0.5); // b and c
+        assert_eq!(fast_p(&rs, 2.0), 0.25); // c only; incorrect d never counts
+    }
+
+    #[test]
+    fn aggregate_matches_hand_computation() {
+        let rs = vec![r("a", true, 1.0), r("b", true, 4.0), r("c", false, 0.0)];
+        let a = aggregate(&rs);
+        assert_eq!(a.n, 3);
+        assert!((a.correct_rate - 2.0 / 3.0).abs() < 1e-12);
+        assert!((a.avg_speedup - 2.5).abs() < 1e-12);
+        assert!((a.geom_speedup - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hws_definition() {
+        // Native kernel 1 ms, foreign 1.5 ms → hws = 1.5.
+        assert!((hws(1.0, 1.5) - 1.5).abs() < 1e-12);
+        let agg = aggregate_hws(&[1.5, 0.9, 2.0, 1.2]);
+        assert_eq!(agg.hws_1, 0.75);
+        assert_eq!(agg.hws_15, 0.25); // strictly greater than 1.5
+        assert!((agg.avg - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tables_render() {
+        let md = render_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        let csv = render_csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(csv, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn empty_inputs_safe() {
+        let a = aggregate(&[]);
+        assert_eq!(a.n, 0);
+        assert_eq!(a.correct_rate, 0.0);
+        assert_eq!(fast_p(&[], 1.0), 0.0);
+    }
+}

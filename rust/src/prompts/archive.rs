@@ -1,0 +1,160 @@
+//! Prompt archive (§3.5): evolved prompts live in their own archive with
+//! fitness defined by the best kernel performance achieved using each
+//! prompt variant.
+
+use super::evolvable::EvolvablePrompt;
+
+/// One archived prompt variant.
+#[derive(Debug, Clone)]
+pub struct PromptEntry {
+    pub id: u64,
+    pub prompt: EvolvablePrompt,
+    /// Best kernel fitness achieved with this prompt (0 until used).
+    pub fitness: f64,
+    /// How many generations used this prompt.
+    pub uses: usize,
+    /// Parent prompt id (None for the seed prompt).
+    pub parent: Option<u64>,
+}
+
+/// Bounded archive of prompt variants (default capacity 16, Table 6).
+#[derive(Debug, Clone)]
+pub struct PromptArchive {
+    entries: Vec<PromptEntry>,
+    capacity: usize,
+    next_id: u64,
+}
+
+impl PromptArchive {
+    pub fn new(capacity: usize) -> PromptArchive {
+        let mut a = PromptArchive {
+            entries: Vec::new(),
+            capacity: capacity.max(1),
+            next_id: 0,
+        };
+        a.add(EvolvablePrompt::default(), None);
+        a
+    }
+
+    /// Add a prompt variant; evicts the worst (lowest fitness, breaking
+    /// ties by fewest uses) when full. Returns the new id.
+    pub fn add(&mut self, prompt: EvolvablePrompt, parent: Option<u64>) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        if self.entries.len() >= self.capacity {
+            // Never evict the current best.
+            let best = self.best_id();
+            if let Some((idx, _)) = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| Some(e.id) != best)
+                .min_by(|(_, a), (_, b)| {
+                    a.fitness
+                        .partial_cmp(&b.fitness)
+                        .unwrap()
+                        .then(a.uses.cmp(&b.uses))
+                })
+            {
+                self.entries.remove(idx);
+            }
+        }
+        self.entries.push(PromptEntry {
+            id,
+            prompt,
+            fitness: 0.0,
+            uses: 0,
+            parent,
+        });
+        id
+    }
+
+    /// Credit a prompt with a kernel result (fitness is max over kernels
+    /// generated under it).
+    pub fn credit(&mut self, id: u64, kernel_fitness: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.id == id) {
+            e.fitness = e.fitness.max(kernel_fitness);
+        }
+    }
+
+    pub fn note_use(&mut self, id: u64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.id == id) {
+            e.uses += 1;
+        }
+    }
+
+    pub fn get(&self, id: u64) -> Option<&PromptEntry> {
+        self.entries.iter().find(|e| e.id == id)
+    }
+
+    pub fn best(&self) -> &PromptEntry {
+        self.entries
+            .iter()
+            .max_by(|a, b| a.fitness.partial_cmp(&b.fitness).unwrap())
+            .expect("archive never empty")
+    }
+
+    fn best_id(&self) -> Option<u64> {
+        self.entries
+            .iter()
+            .max_by(|a, b| a.fitness.partial_cmp(&b.fitness).unwrap())
+            .map(|e| e.id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &PromptEntry> {
+        self.entries.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_with_default_prompt() {
+        let a = PromptArchive::new(16);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.best().fitness, 0.0);
+    }
+
+    #[test]
+    fn credit_takes_max() {
+        let mut a = PromptArchive::new(16);
+        let id = a.add(EvolvablePrompt::default(), Some(0));
+        a.credit(id, 0.7);
+        a.credit(id, 0.5);
+        assert_eq!(a.get(id).unwrap().fitness, 0.7);
+    }
+
+    #[test]
+    fn eviction_spares_best() {
+        let mut a = PromptArchive::new(3);
+        let b = a.add(EvolvablePrompt::default(), None);
+        let c = a.add(EvolvablePrompt::default(), None);
+        a.credit(b, 0.9); // best
+        a.credit(c, 0.2);
+        // Archive full (3 entries); adding evicts the worst non-best.
+        let d = a.add(EvolvablePrompt::default(), None);
+        assert_eq!(a.len(), 3);
+        assert!(a.get(b).is_some(), "best must survive");
+        assert!(a.get(d).is_some(), "new entry inserted");
+        assert_eq!(a.best().id, b);
+    }
+
+    #[test]
+    fn uses_tracked() {
+        let mut a = PromptArchive::new(4);
+        let id = a.best().id;
+        a.note_use(id);
+        a.note_use(id);
+        assert_eq!(a.get(id).unwrap().uses, 2);
+    }
+}

@@ -1,0 +1,270 @@
+//! Main-prompt assembly (App. E.1) and the templated-kernel prompt
+//! (App. E.2).
+
+use super::evolvable::EvolvablePrompt;
+use crate::eval::EvalRecord;
+use crate::ir::KernelGenome;
+use crate::tasks::TaskSpec;
+
+/// An assembled prompt: the full text served to the code model, plus the
+/// structured context the simulated model consumes (an LLM would parse
+/// the same information out of the text — the structured copy avoids a
+/// brittle NL parser while the text remains authoritative for the
+/// meta-prompter and logs).
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    pub text: String,
+    pub task_id: String,
+    /// Parent kernel to mutate (None → generate from scratch).
+    pub parent: Option<KernelGenome>,
+    /// Gradient-derived natural-language mutation hints (§3.3).
+    pub hints: Vec<String>,
+    /// Current evolvable regions (strategy/pitfall content steers the
+    /// model's mutation distribution).
+    pub evolvable: EvolvablePrompt,
+    /// Console log of the last tested kernel.
+    pub last_log: String,
+    /// Hardware specification paragraph.
+    pub hardware: String,
+    /// User instructions from custom tasks (App. C).
+    pub user_instructions: Option<String>,
+    /// Whether this is the App. E.2 templated-kernel request.
+    pub templated_request: bool,
+    /// Task properties the model can see from the reference code.
+    pub n_ops: usize,
+    pub supports_reformulation: bool,
+}
+
+/// Builds App. E.1 / E.2 prompts.
+pub struct PromptBuilder {
+    pub language: String,
+    pub reference_language: String,
+}
+
+impl Default for PromptBuilder {
+    fn default() -> PromptBuilder {
+        PromptBuilder {
+            language: "SYCL".to_string(),
+            reference_language: "PyTorch".to_string(),
+        }
+    }
+}
+
+impl PromptBuilder {
+    pub fn cuda() -> PromptBuilder {
+        PromptBuilder {
+            language: "CUDA".to_string(),
+            reference_language: "PyTorch".to_string(),
+        }
+    }
+
+    /// Assemble the main generation prompt (App. E.1).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        &self,
+        task: &TaskSpec,
+        evolvable: &EvolvablePrompt,
+        parent: Option<&EvalRecord>,
+        top: Option<&EvalRecord>,
+        last: Option<&EvalRecord>,
+        hints: &[String],
+        hardware: &str,
+    ) -> Prompt {
+        let mut text = String::with_capacity(8192);
+        text.push_str(&format!(
+            "You are a {lang} programming expert specializing in GPU kernel optimization. \
+             Given a reference {ref_lang} implementation, your objective is to create a \
+             performant kernel with identical functionality. The code you generate will be \
+             pasted into an existing project and loaded using \
+             torch.utils.cpp_extension.load().\n\n",
+            lang = self.language,
+            ref_lang = self.reference_language
+        ));
+
+        text.push_str("### Reference code / Task:\n");
+        text.push_str(&format!(
+            "# task: {} ({} ops{})\n",
+            task.id,
+            task.n_ops(),
+            if task.backward { ", includes backward" } else { "" }
+        ));
+        for op in &task.ops {
+            text.push_str(&format!("#   op: {}\n", op.name()));
+        }
+        if let Some(instr) = &task.user_instructions {
+            text.push_str(&format!("\n### User instructions:\n{instr}\n"));
+        }
+
+        if let Some(top) = top {
+            text.push_str(&format!(
+                "\n### Top performing kernel (runtime: {:.4} ms):\n```cpp\n{}\n```\n",
+                top.time_ms, top.source
+            ));
+        }
+        if let Some(last) = last {
+            text.push_str(&format!(
+                "\n### Last tested kernel (runtime: {:.4} ms):\n```cpp\n{}\n```\n\
+                 Console output from running this kernel:\n```\n{}\n```\n",
+                last.time_ms, last.source, last.log
+            ));
+        }
+        if let Some(parent) = parent {
+            text.push_str(&format!(
+                "\n### Parent kernel to improve (archive elite, fitness {:.3}):\n```cpp\n{}\n```\n",
+                parent.fitness, parent.source
+            ));
+        }
+
+        text.push_str(&format!(
+            "\n### Hardware specification:\nYour code will run on the following hardware:\n{hardware}\n\
+             Please consider the hardware specifications when improving the code.\n"
+        ));
+
+        text.push_str(
+            "\n### Main Instructions:\n\
+             - Provide a functional kernel that matches the reference implementation.\n\
+             - Use constructs to efficiently run the code on GPU.\n\
+             - Provide the complete code in a code block.\n",
+        );
+
+        if !hints.is_empty() {
+            text.push_str("\n### Mutation hints (derived from evolutionary gradients):\n");
+            for h in hints {
+                text.push_str(&format!("- {h}\n"));
+            }
+        }
+
+        text.push_str("\n### Optimization strategies:\n");
+        text.push_str(&evolvable.render());
+
+        text.push_str(
+            "\n### Critical Requirements:\n\
+             1. The kernel must exactly match the reference's functionality.\n\
+             2. The code must compile and run properly on the GPU.\n\
+             3. Do not cache or reuse previous results; ensure the code executes fully on each run.\n\
+             \n### Response Format:\n1. Analysis … 2. Code …\n",
+        );
+
+        Prompt {
+            text,
+            task_id: task.id.clone(),
+            parent: parent.map(|r| r.genome.clone()),
+            hints: hints.to_vec(),
+            evolvable: evolvable.clone(),
+            last_log: last.map(|r| r.log.clone()).unwrap_or_default(),
+            hardware: hardware.to_string(),
+            user_instructions: task.user_instructions.clone(),
+            templated_request: false,
+            n_ops: task.n_ops(),
+            supports_reformulation: task.supports_reformulation(),
+        }
+    }
+
+    /// The App. E.2 templated-kernel prompt: asks the model to convert
+    /// the best kernel's hardware-dependent constants into template
+    /// parameters with dispatch options.
+    pub fn build_templated(&self, task: &TaskSpec, best: &EvalRecord, hardware: &str) -> Prompt {
+        let text = format!(
+            "You are a {lang} programming expert specializing in GPU kernel optimization. \
+             Your task is to optimize a given {lang} kernel.\n\n\
+             ### Given kernel:\n```cpp\n{src}\n```\n\n\
+             To optimize this kernel for specific hardware, please propose a templated kernel \
+             with some template parameters that can be tuned (block size, tile sizes, vector \
+             width). Write a forward_templated function and a forward dispatcher enumerating \
+             suitable parameter options.\n\n### Hardware specification:\n{hardware}\n",
+            lang = self.language,
+            src = best.source,
+        );
+        Prompt {
+            text,
+            task_id: task.id.clone(),
+            parent: Some(best.genome.clone()),
+            hints: Vec::new(),
+            evolvable: EvolvablePrompt::default(),
+            last_log: best.log.clone(),
+            hardware: hardware.to_string(),
+            user_instructions: task.user_instructions.clone(),
+            templated_request: true,
+            n_ops: task.n_ops(),
+            supports_reformulation: task.supports_reformulation(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{EvalOutcome, EvalRecord};
+    use crate::tasks::catalog;
+
+    fn record(task_id: &str, fitness: f64) -> EvalRecord {
+        let genome = KernelGenome::direct_translation(task_id);
+        EvalRecord {
+            source: crate::ir::render_sycl(&genome),
+            genome,
+            outcome: EvalOutcome::Correct,
+            coords: [0, 0, 0],
+            correctness: None,
+            time_ms: 1.25,
+            baseline_ms: 2.0,
+            speedup: 1.6,
+            fitness,
+            log: "runtime: 1.25 ms".to_string(),
+            best_params: None,
+            param_sweep: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn main_prompt_has_all_sections() {
+        let task = catalog::find_task("99_Matmul_GELU_Softmax").unwrap();
+        let b = PromptBuilder::default();
+        let top = record(&task.id, 0.9);
+        let last = record(&task.id, 0.4);
+        let hints = vec!["Consider adding shared memory tiling.".to_string()];
+        let p = b.build(&task, &EvolvablePrompt::default(), Some(&top), Some(&top), Some(&last), &hints, "Intel Arc B580");
+        for needle in [
+            "SYCL programming expert",
+            "Reference code / Task",
+            "Top performing kernel",
+            "Last tested kernel",
+            "Hardware specification",
+            "Mutation hints",
+            "<<<EVOLVE:strategies>>>",
+            "Critical Requirements",
+            "shared memory tiling",
+            "Intel Arc B580",
+        ] {
+            assert!(p.text.contains(needle), "missing section: {needle}");
+        }
+        assert!(p.parent.is_some());
+        assert!(p.supports_reformulation);
+    }
+
+    #[test]
+    fn custom_instructions_included() {
+        let task = catalog::find_task("softmax").unwrap(); // oneDNN softmax w/ guidance
+        let b = PromptBuilder::default();
+        let p = b.build(&task, &EvolvablePrompt::default(), None, None, None, &[], "hw");
+        assert!(p.text.contains("User instructions"));
+        assert!(p.text.contains("exp2"));
+    }
+
+    #[test]
+    fn templated_prompt_built() {
+        let task = catalog::find_task("99_Matmul_GELU_Softmax").unwrap();
+        let b = PromptBuilder::default();
+        let best = record(&task.id, 0.95);
+        let p = b.build_templated(&task, &best, "hw");
+        assert!(p.templated_request);
+        assert!(p.text.contains("templated kernel"));
+        assert!(p.text.contains("forward_templated"));
+    }
+
+    #[test]
+    fn cuda_builder_switches_language() {
+        let task = catalog::find_task("20_LeakyReLU").unwrap();
+        let p = PromptBuilder::cuda().build(&task, &EvolvablePrompt::default(), None, None, None, &[], "A6000");
+        assert!(p.text.contains("CUDA programming expert"));
+    }
+}

@@ -1,0 +1,172 @@
+//! The four evolvable prompt regions (§3.5) and diff application.
+
+use crate::util::textdiff::{self, DiffError, Hunk};
+
+/// Markers delimiting evolvable regions inside the rendered prompt.
+pub const MARK_PHILOSOPHY: (&str, &str) = ("<<<EVOLVE:philosophy>>>", "<<<END:philosophy>>>");
+pub const MARK_STRATEGIES: (&str, &str) = ("<<<EVOLVE:strategies>>>", "<<<END:strategies>>>");
+pub const MARK_PITFALLS: (&str, &str) = ("<<<EVOLVE:pitfalls>>>", "<<<END:pitfalls>>>");
+pub const MARK_ANALYSIS: (&str, &str) = ("<<<EVOLVE:analysis>>>", "<<<END:analysis>>>");
+
+/// The evolvable prompt content. Co-evolves with kernels; stored in the
+/// prompt archive with fitness = best kernel produced under it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvolvablePrompt {
+    /// (1) High-level principles that shape priorities.
+    pub philosophy: String,
+    /// (2) Concrete techniques organized by category with canonical
+    /// patterns.
+    pub strategies: String,
+    /// (3) Anti-patterns and frequent mistakes to avoid.
+    pub pitfalls: String,
+    /// (4) Pre-coding reasoning scaffold.
+    pub analysis: String,
+}
+
+impl Default for EvolvablePrompt {
+    fn default() -> EvolvablePrompt {
+        EvolvablePrompt {
+            philosophy: "Prioritize correctness first; then optimize the dominant bottleneck \
+                         before micro-tuning."
+                .to_string(),
+            strategies: "\
+- [memory] Coalesce global accesses; prefer vectorized loads (sycl::vec) on contiguous data.\n\
+- [memory] Use shared local memory tiling for operands that are reused across work-items.\n\
+- [algorithm] Fuse chains of elementwise operations into a single pass over the data; \
+intermediates must not round-trip through global memory.\n\
+- [compute] Keep work-group sizes a multiple of the sub-group width.\n\
+- [parallelism] Use sub-group reductions instead of serializing through one work-item."
+                .to_string(),
+            pitfalls: "\
+- Do not cache or reuse previous results between runs.\n\
+- Always guard global stores with bounds checks."
+                .to_string(),
+            analysis: "Before coding: estimate bytes moved and FLOPs, decide whether the kernel \
+                       is memory- or compute-bound, and pick the optimization accordingly."
+                .to_string(),
+        }
+    }
+}
+
+impl EvolvablePrompt {
+    /// A *generic* code-generation prompt with no kernel-specific
+    /// optimization strategies — what the non-specialized baselines
+    /// (repeated prompting, OpenEvolve) run with: "uses an evolutionary
+    /// algorithm but lacks kernel-specific optimization strategies,
+    /// meta-prompting, and parameter optimization" (§5.2).
+    pub fn generic() -> EvolvablePrompt {
+        EvolvablePrompt {
+            philosophy: "Write correct code; make it fast where easy.".to_string(),
+            strategies: "- Prefer clear, idiomatic code.\n- Avoid unnecessary work.".to_string(),
+            pitfalls: "- Do not cache or reuse previous results between runs.".to_string(),
+            analysis: "Read the reference carefully before coding.".to_string(),
+        }
+    }
+
+    /// Render the four regions with their markers (the form embedded in
+    /// the full prompt and visible to the meta-prompter).
+    pub fn render(&self) -> String {
+        format!(
+            "{}\n{}\n{}\n\n{}\n{}\n{}\n\n{}\n{}\n{}\n\n{}\n{}\n{}\n",
+            MARK_PHILOSOPHY.0,
+            self.philosophy,
+            MARK_PHILOSOPHY.1,
+            MARK_STRATEGIES.0,
+            self.strategies,
+            MARK_STRATEGIES.1,
+            MARK_PITFALLS.0,
+            self.pitfalls,
+            MARK_PITFALLS.1,
+            MARK_ANALYSIS.0,
+            self.analysis,
+            MARK_ANALYSIS.1,
+        )
+    }
+
+    /// Parse back from rendered form.
+    pub fn parse(text: &str) -> Option<EvolvablePrompt> {
+        let grab = |(start, end): (&str, &str)| -> Option<String> {
+            let s = text.find(start)? + start.len();
+            let e = text[s..].find(end)? + s;
+            Some(text[s..e].trim().to_string())
+        };
+        Some(EvolvablePrompt {
+            philosophy: grab(MARK_PHILOSOPHY)?,
+            strategies: grab(MARK_STRATEGIES)?,
+            pitfalls: grab(MARK_PITFALLS)?,
+            analysis: grab(MARK_ANALYSIS)?,
+        })
+    }
+
+    /// Apply meta-prompter SEARCH/REPLACE hunks, restricted to the
+    /// evolvable regions: the diff is applied to the rendered form and
+    /// re-parsed; edits touching the markers themselves are rejected.
+    pub fn apply_diff(&self, hunks: &[Hunk]) -> Result<EvolvablePrompt, DiffError> {
+        for h in hunks {
+            if h.search.contains("<<<") || h.replace.contains("<<<") {
+                return Err(DiffError::Malformed(
+                    "diff may not modify region markers".into(),
+                ));
+            }
+        }
+        let rendered = self.render();
+        let updated = textdiff::apply_all(&rendered, hunks)?;
+        EvolvablePrompt::parse(&updated)
+            .ok_or_else(|| DiffError::Malformed("regions unparseable after diff".into()))
+    }
+
+    /// Total content length (used to bound prompt growth).
+    pub fn len(&self) -> usize {
+        self.philosophy.len() + self.strategies.len() + self.pitfalls.len() + self.analysis.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let p = EvolvablePrompt::default();
+        let q = EvolvablePrompt::parse(&p.render()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn diff_applies_inside_region() {
+        let p = EvolvablePrompt::default();
+        let diff = "<<<<<<< SEARCH\nPrioritize correctness first\n=======\nPrioritize memory bandwidth utilization\n>>>>>>> REPLACE\n";
+        let hunks = textdiff::parse_hunks(diff).unwrap();
+        let q = p.apply_diff(&hunks).unwrap();
+        assert!(q.philosophy.contains("memory bandwidth utilization"));
+        assert_eq!(q.strategies, p.strategies);
+    }
+
+    #[test]
+    fn diff_cannot_touch_markers() {
+        let p = EvolvablePrompt::default();
+        let diff = "\
+<<<<<<< SEARCH
+<<<EVOLVE:pitfalls>>>
+=======
+gone
+>>>>>>> REPLACE
+";
+        let hunks = textdiff::parse_hunks(diff).unwrap();
+        assert!(p.apply_diff(&hunks).is_err());
+    }
+
+    #[test]
+    fn failed_search_propagates() {
+        let p = EvolvablePrompt::default();
+        let hunks = textdiff::parse_hunks(
+            "<<<<<<< SEARCH\nno such text\n=======\nx\n>>>>>>> REPLACE\n",
+        )
+        .unwrap();
+        assert!(matches!(p.apply_diff(&hunks), Err(DiffError::NotFound(_))));
+    }
+}

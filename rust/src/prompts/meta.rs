@@ -1,0 +1,303 @@
+//! The meta-prompter LLM (§3.5).
+//!
+//! "This dedicated LLM (distinct from the kernel generator) analyzes
+//! generation outcomes and proposes prompt modifications. Given the
+//! current evolvable prompt sections together with the generated kernel
+//! code and evaluation metrics, the meta-prompter first diagnoses which
+//! guidance was missing, misleading, or insufficiently specific … then
+//! prescribes targeted updates as SEARCH/REPLACE diffs restricted to the
+//! evolvable regions."
+//!
+//! Our simulated meta-prompter performs the same diagnosis over the
+//! recent evaluation records and emits real SEARCH/REPLACE diff text.
+//! Injected guidance carries bracketed strategy/pitfall tokens (e.g.
+//! `[strategy:online-reformulation]`) which the simulated code model
+//! reads back out of the prompt — closing the co-evolution loop through
+//! the prompt text itself.
+
+use super::evolvable::EvolvablePrompt;
+use crate::eval::{EvalOutcome, EvalRecord};
+use crate::tasks::TaskSpec;
+
+/// Strategy/pitfall guidance the meta-prompter can inject. Each entry is
+/// (token, region, text); tokens are what the code model keys on.
+pub const GUIDANCE: &[(&str, Region, &str)] = &[
+    (
+        "[pitfall:barrier]",
+        Region::Pitfalls,
+        "[pitfall:barrier] After cooperatively writing shared local memory tiles, always \
+         synchronize with group_barrier before reading them — missing barriers cause \
+         nondeterministic output.",
+    ),
+    (
+        "[pitfall:bounds]",
+        Region::Pitfalls,
+        "[pitfall:bounds] Guard every global store with an explicit bounds check; paddings and \
+         non-divisible shapes otherwise fault.",
+    ),
+    (
+        "[pitfall:complete-code]",
+        Region::Pitfalls,
+        "[pitfall:complete-code] Always emit the complete translation unit including the \
+         PYBIND11_MODULE block; truncated responses do not compile.",
+    ),
+    (
+        "[strategy:slm-pad]",
+        Region::Strategies,
+        "- [memory] [strategy:slm-pad] Avoid bank conflicts by adding +1 padding to shared \
+         local memory arrays.",
+    ),
+    (
+        "[strategy:vectorize]",
+        Region::Strategies,
+        "- [memory] [strategy:vectorize] Use wide vector loads (sycl::vec<float,4/8>) on \
+         contiguous data to saturate bandwidth.",
+    ),
+    (
+        "[strategy:tiling]",
+        Region::Strategies,
+        "- [memory] [strategy:tiling] Stage reused operands in shared local memory tiles sized \
+         to the device SLM budget.",
+    ),
+    (
+        "[strategy:reg-block]",
+        Region::Strategies,
+        "- [compute] [strategy:reg-block] Add register blocking (per-thread accumulator tiles) \
+         and prefetch the next tile to overlap memory with compute.",
+    ),
+    (
+        "[strategy:fuse-all]",
+        Region::Strategies,
+        "- [algorithm] [strategy:fuse-all] Fuse the full operation chain into a single kernel \
+         pass; intermediate tensors must never round-trip through global memory.",
+    ),
+    (
+        "[strategy:online-reformulation]",
+        Region::Strategies,
+        "- [algorithm] [strategy:online-reformulation] Reformulate normalization/softmax with a \
+         streaming (online) algorithm using exp2-based rescaling to cut passes and special-\
+         function load.",
+    ),
+    (
+        "[strategy:subgroup]",
+        Region::Strategies,
+        "- [parallelism] [strategy:subgroup] Use sub-group shuffles and reduce_over_group for \
+         reductions instead of full work-group barriers.",
+    ),
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    Strategies,
+    Pitfalls,
+    Philosophy,
+    Analysis,
+}
+
+/// The simulated meta-prompter.
+pub struct MetaPrompter {
+    /// Max prompt mutations per update (Table 6: 3).
+    pub max_mutations: usize,
+}
+
+impl Default for MetaPrompter {
+    fn default() -> MetaPrompter {
+        MetaPrompter { max_mutations: 3 }
+    }
+}
+
+impl MetaPrompter {
+    /// Diagnose recent outcomes and produce a SEARCH/REPLACE diff over
+    /// the rendered evolvable regions. Returns `None` when no update is
+    /// warranted.
+    pub fn propose_diff(
+        &self,
+        current: &EvolvablePrompt,
+        recent: &[EvalRecord],
+        task: &TaskSpec,
+    ) -> Option<String> {
+        if recent.is_empty() {
+            return None;
+        }
+        let mut wanted: Vec<&str> = Vec::new();
+
+        let n = recent.len() as f64;
+        let compile_fails =
+            recent.iter().filter(|r| r.outcome == EvalOutcome::CompileError).count() as f64;
+        let races = recent
+            .iter()
+            .filter(|r| r.log.contains("nondeterministic") || r.log.contains("race"))
+            .count();
+        let oob = recent
+            .iter()
+            .filter(|r| r.log.contains("illegal memory access") || r.log.contains("page fault"))
+            .count();
+
+        if compile_fails / n > 0.25 {
+            wanted.push("[pitfall:complete-code]");
+        }
+        if races > 0 {
+            wanted.push("[pitfall:barrier]");
+        }
+        if oob > 0 {
+            wanted.push("[pitfall:bounds]");
+        }
+
+        // Performance diagnosis over correct kernels.
+        let correct: Vec<&EvalRecord> =
+            recent.iter().filter(|r| r.outcome == EvalOutcome::Correct).collect();
+        if let Some(best) = correct
+            .iter()
+            .max_by(|a, b| a.fitness.partial_cmp(&b.fitness).unwrap())
+        {
+            let c = best.coords;
+            if c[0] == 0 {
+                wanted.push("[strategy:vectorize]");
+            } else if c[0] == 1 && task.arithmetic_intensity() > 4.0 {
+                wanted.push("[strategy:tiling]");
+            } else if c[0] == 2 {
+                wanted.push("[strategy:reg-block]");
+            }
+            if c[1] == 0 && task.n_ops() > 1 {
+                wanted.push("[strategy:fuse-all]");
+            }
+            if c[1] <= 1 && task.supports_reformulation() {
+                wanted.push("[strategy:online-reformulation]");
+            }
+            if c[2] <= 1 && task.ops.iter().any(|o| o.sfu_ops() > 0 || matches!(o, crate::tasks::OpSpec::Reduction { .. })) {
+                wanted.push("[strategy:subgroup]");
+            }
+            if best.genome.uses_slm() && !best.genome.params.slm_pad {
+                wanted.push("[strategy:slm-pad]");
+            }
+        }
+
+        // Drop guidance already present; respect the mutation budget.
+        let rendered = current.render();
+        wanted.retain(|tok| !rendered.contains(tok));
+        wanted.truncate(self.max_mutations);
+        if wanted.is_empty() {
+            return None;
+        }
+
+        // Emit appending diffs: replace the region's final line with
+        // itself + the new guidance line.
+        let mut diff = String::new();
+        let mut strategies_tail = last_line(&current.strategies).to_string();
+        let mut pitfalls_tail = last_line(&current.pitfalls).to_string();
+        for tok in wanted {
+            let (_, region, text) = GUIDANCE.iter().find(|(t, _, _)| t == &tok)?;
+            let tail = match region {
+                Region::Pitfalls => &mut pitfalls_tail,
+                _ => &mut strategies_tail,
+            };
+            diff.push_str(&format!(
+                "<<<<<<< SEARCH\n{tail}\n=======\n{tail}\n{text}\n>>>>>>> REPLACE\n"
+            ));
+            *tail = last_line(text).to_string();
+        }
+        Some(diff)
+    }
+}
+
+fn last_line(s: &str) -> &str {
+    s.lines().last().unwrap_or("")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::EvalOutcome;
+    use crate::ir::KernelGenome;
+    use crate::tasks::catalog;
+    use crate::util::textdiff;
+
+    fn rec(task_id: &str, outcome: EvalOutcome, coords: [usize; 3], log: &str) -> EvalRecord {
+        let genome = KernelGenome::direct_translation(task_id);
+        EvalRecord {
+            source: String::new(),
+            genome,
+            outcome,
+            coords,
+            correctness: None,
+            time_ms: 1.0,
+            baseline_ms: 1.0,
+            speedup: 1.0,
+            fitness: match outcome {
+                EvalOutcome::Correct => 0.6,
+                EvalOutcome::Incorrect => 0.1,
+                EvalOutcome::CompileError => 0.0,
+            },
+            log: log.to_string(),
+            best_params: None,
+            param_sweep: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn race_failures_add_barrier_pitfall() {
+        let task = catalog::find_task("99_Matmul_GELU_Softmax").unwrap();
+        let mp = MetaPrompter::default();
+        let cur = EvolvablePrompt::default();
+        let recent = vec![
+            rec(&task.id, EvalOutcome::Incorrect, [2, 0, 0], "test: nondeterministic output (possible race)"),
+            rec(&task.id, EvalOutcome::Correct, [2, 1, 1], ""),
+        ];
+        let diff = mp.propose_diff(&cur, &recent, &task).unwrap();
+        assert!(diff.contains("[pitfall:barrier]"));
+        // And the diff actually applies.
+        let hunks = textdiff::parse_hunks(&diff).unwrap();
+        let updated = cur.apply_diff(&hunks).unwrap();
+        assert!(updated.pitfalls.contains("[pitfall:barrier]"));
+    }
+
+    #[test]
+    fn reformulation_suggested_for_softmax_tasks() {
+        let task = catalog::find_task("99_Matmul_GELU_Softmax").unwrap();
+        let mp = MetaPrompter::default();
+        let cur = EvolvablePrompt::default();
+        let recent = vec![rec(&task.id, EvalOutcome::Correct, [1, 1, 2], "")];
+        let diff = mp.propose_diff(&cur, &recent, &task).unwrap();
+        assert!(diff.contains("[strategy:online-reformulation]"), "{diff}");
+    }
+
+    #[test]
+    fn no_duplicate_guidance() {
+        let task = catalog::find_task("99_Matmul_GELU_Softmax").unwrap();
+        let mp = MetaPrompter::default();
+        let mut cur = EvolvablePrompt::default();
+        let recent = vec![rec(&task.id, EvalOutcome::Correct, [1, 1, 2], "")];
+        let diff = mp.propose_diff(&cur, &recent, &task).unwrap();
+        let hunks = textdiff::parse_hunks(&diff).unwrap();
+        cur = cur.apply_diff(&hunks).unwrap();
+        // Second round with the same evidence must not re-propose the
+        // same tokens.
+        if let Some(diff2) = mp.propose_diff(&cur, &recent, &task) {
+            assert!(!diff2.contains("[strategy:online-reformulation]"));
+        }
+    }
+
+    #[test]
+    fn respects_mutation_budget() {
+        let task = catalog::find_task("37_Matmul_Swish_Sum_GroupNorm").unwrap();
+        let mp = MetaPrompter::default();
+        let recent = vec![
+            rec(&task.id, EvalOutcome::CompileError, [0, 0, 0], "error: expected '}'"),
+            rec(&task.id, EvalOutcome::CompileError, [0, 0, 0], "error: expected '}'"),
+            rec(&task.id, EvalOutcome::Incorrect, [2, 0, 0], "race"),
+            rec(&task.id, EvalOutcome::Incorrect, [0, 0, 0], "illegal memory access"),
+            rec(&task.id, EvalOutcome::Correct, [0, 0, 0], ""),
+        ];
+        let diff = mp.propose_diff(&EvolvablePrompt::default(), &recent, &task).unwrap();
+        let hunks = textdiff::parse_hunks(&diff).unwrap();
+        assert!(hunks.len() <= 3, "{} mutations", hunks.len());
+    }
+
+    #[test]
+    fn empty_history_no_update() {
+        let task = catalog::find_task("20_LeakyReLU").unwrap();
+        assert!(MetaPrompter::default()
+            .propose_diff(&EvolvablePrompt::default(), &[], &task)
+            .is_none());
+    }
+}

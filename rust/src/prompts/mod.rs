@@ -1,0 +1,20 @@
+//! Prompt construction engine and meta-prompt evolution (§3.1, §3.5, App. E).
+//!
+//! The kernel-generation prompt follows App. E.1: task/reference section,
+//! example kernels, top-performing kernel, last tested kernel + console
+//! log, hardware specification, main instructions, optimization
+//! strategies, critical requirements and response format. Four regions
+//! are *evolvable* (§3.5) — optimization philosophy, optimization
+//! strategies, common pitfalls, analysis guidance — delimited by special
+//! markers so the meta-prompter's SEARCH/REPLACE diffs can only touch
+//! them.
+
+pub mod archive;
+pub mod builder;
+pub mod evolvable;
+pub mod meta;
+
+pub use archive::PromptArchive;
+pub use builder::{Prompt, PromptBuilder};
+pub use evolvable::EvolvablePrompt;
+pub use meta::MetaPrompter;

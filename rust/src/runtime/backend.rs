@@ -1,0 +1,205 @@
+//! [`PjrtBackend`]: the real execution backend for the evaluation
+//! pipeline — genomes map to AOT-compiled kernel variants, outputs are
+//! validated against the reference artifact with the paper's ν-criterion
+//! and timed with the App. B.2 harness.
+
+use super::manifest::{ArtifactInfo, Manifest};
+use super::pjrt::PjrtRuntime;
+use crate::eval::{BenchConfig, Benchmarker, RealBackend, RealRun};
+use crate::ir::{AlgoStructure, KernelGenome};
+use crate::tasks::TaskSpec;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Real backend over the artifact library.
+pub struct PjrtBackend {
+    pub manifest: Manifest,
+    runtime: PjrtRuntime,
+    bench: Benchmarker,
+    baseline_cache: HashMap<String, f64>,
+}
+
+impl PjrtBackend {
+    pub fn new(manifest: Manifest) -> Result<PjrtBackend> {
+        Ok(PjrtBackend {
+            manifest,
+            runtime: PjrtRuntime::cpu()?,
+            bench: Benchmarker::new(BenchConfig::quick()),
+            baseline_cache: HashMap::new(),
+        })
+    }
+
+    /// Map a genome to the artifact variant it denotes. The genome's
+    /// algorithmic level selects the variant family; its parameters pick
+    /// the nearest available instantiation — the same role the §3.4
+    /// dispatcher plays for templated kernels.
+    pub fn resolve(&self, task: &str, genome: &KernelGenome) -> Result<&ArtifactInfo> {
+        let variants = self.manifest.variants_for(task);
+        if variants.is_empty() {
+            return Err(anyhow!("no variants for task {task}"));
+        }
+        let fused = !matches!(genome.algo, AlgoStructure::DirectTranslation);
+        let reformulated = matches!(
+            genome.algo,
+            AlgoStructure::Reformulated | AlgoStructure::Novel
+        );
+        let chosen = match task {
+            "llama_rope" => {
+                let family = if fused { "rope_fused" } else { "rope_naive" };
+                let cands: Vec<&ArtifactInfo> = variants
+                    .iter()
+                    .copied()
+                    .filter(|a| a.name.starts_with(family))
+                    .collect();
+                pick_nearest(cands, "bs", genome.params.tile_m as usize)
+            }
+            "softmax_real" => {
+                let family = if reformulated { "online" } else { "twopass" };
+                let cands: Vec<&ArtifactInfo> = variants
+                    .iter()
+                    .copied()
+                    .filter(|a| a.param_str("algo") == Some(family))
+                    .collect();
+                pick_nearest(cands, "br", genome.params.tile_m as usize)
+            }
+            "matmul_real" => pick_nearest(variants.clone(), "bm", genome.params.tile_m as usize),
+            "fused_chain_real" => variants
+                .iter()
+                .copied()
+                .find(|a| a.param_usize("fused").unwrap_or(0) == if fused { 1 } else { 0 }),
+            "concat_layernorm_real" | "sum_reduction_real" => {
+                pick_nearest(variants.clone(), "br", genome.params.tile_m as usize)
+            }
+            "block_fwd" => variants.first().copied(),
+            _ => variants.first().copied(),
+        };
+        chosen.ok_or_else(|| anyhow!("no matching variant for task {task}"))
+    }
+
+    fn time_artifact(&mut self, art: &ArtifactInfo) -> Result<f64> {
+        // Warm the caches before entering the harness.
+        self.runtime.load(art)?;
+        let _ = self.runtime.execute(art)?;
+        let runtime = &mut self.runtime;
+        let mut err: Option<anyhow::Error> = None;
+        let mut source = |iters: usize| -> f64 {
+            match runtime.time_batch(art, iters) {
+                Ok(ms) => ms,
+                Err(e) => {
+                    err = Some(e);
+                    f64::INFINITY
+                }
+            }
+        };
+        let result = self.bench.run(&mut source);
+        if let Some(e) = err {
+            return Err(e);
+        }
+        Ok(result.time_ms)
+    }
+}
+
+/// Nearest-parameter variant selection (the §3.4 dispatch rule).
+fn pick_nearest<'a>(
+    cands: Vec<&'a ArtifactInfo>,
+    key: &str,
+    target: usize,
+) -> Option<&'a ArtifactInfo> {
+    cands.into_iter().min_by_key(|a| {
+        a.param_usize(key)
+            .map(|v| v.abs_diff(target))
+            .unwrap_or(usize::MAX)
+    })
+}
+
+impl RealBackend for PjrtBackend {
+    fn device_description(&self) -> String {
+        format!("PJRT CPU backend: {}", self.runtime.platform())
+    }
+
+    fn baseline_ms(&mut self, task: &TaskSpec) -> Result<f64> {
+        if let Some(t) = self.baseline_cache.get(&task.id) {
+            return Ok(*t);
+        }
+        let reference = self
+            .manifest
+            .reference_for(&task.id)
+            .ok_or_else(|| anyhow!("no reference artifact for {}", task.id))?
+            .clone();
+        let t = self.time_artifact(&reference)?;
+        self.baseline_cache.insert(task.id.clone(), t);
+        Ok(t)
+    }
+
+    fn run(&mut self, task: &TaskSpec, genome: &KernelGenome) -> Result<RealRun> {
+        let reference = self
+            .manifest
+            .reference_for(&task.id)
+            .ok_or_else(|| anyhow!("no reference artifact for {}", task.id))?
+            .clone();
+        let variant = self.resolve(&task.id, genome)?.clone();
+        let expected: Vec<f32> = self.runtime.execute(&reference)?.concat();
+        let actual: Vec<f32> = self.runtime.execute(&variant)?.concat();
+        let time_ms = self.time_artifact(&variant)?;
+        Ok(RealRun {
+            expected,
+            actual,
+            time_ms,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::MemoryPattern;
+    use crate::tasks::{OpSpec, Suite, TaskSpec};
+    use std::path::Path;
+
+    fn backend() -> Option<PjrtBackend> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(PjrtBackend::new(Manifest::load(&dir).unwrap()).unwrap())
+        } else {
+            None
+        }
+    }
+
+    fn rope_task() -> TaskSpec {
+        TaskSpec::new(
+            "llama_rope",
+            Suite::Custom,
+            vec![OpSpec::Rope { elems: 2 * 4 * 128 * 64 }],
+        )
+    }
+
+    #[test]
+    fn resolve_picks_family_and_nearest_params() {
+        let Some(b) = backend() else { return };
+        let mut g = KernelGenome::direct_translation("llama_rope");
+        g.params.tile_m = 30;
+        let naive = b.resolve("llama_rope", &g).unwrap();
+        assert!(naive.name.starts_with("rope_naive"));
+        assert_eq!(naive.param_usize("bs"), Some(32));
+        g.algo = AlgoStructure::Fused;
+        g.params.tile_m = 60;
+        let fusedv = b.resolve("llama_rope", &g).unwrap();
+        assert_eq!(fusedv.name, "rope_fused_bs64");
+    }
+
+    #[test]
+    fn real_run_is_correct_and_timed() {
+        let Some(mut b) = backend() else { return };
+        let task = rope_task();
+        let mut g = KernelGenome::direct_translation(&task.id);
+        g.algo = AlgoStructure::Fused;
+        g.mem = MemoryPattern::Coalesced;
+        g.params.tile_m = 32;
+        let run = b.run(&task, &g).unwrap();
+        let rep = crate::eval::check_correctness(&run.expected, &run.actual);
+        assert!(rep.correct, "{rep:?}");
+        assert!(run.time_ms > 0.0);
+        let baseline = b.baseline_ms(&task).unwrap();
+        assert!(baseline > 0.0);
+    }
+}

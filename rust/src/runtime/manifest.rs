@@ -1,0 +1,190 @@
+//! Artifact manifest: the python→rust interchange contract.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Input tensor spec: deterministic normal values from `seed`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub seed: u64,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub task: String,
+    /// "reference" (baseline + expected outputs) or "variant".
+    pub role: String,
+    pub params: Json,
+    pub inputs: Vec<InputSpec>,
+}
+
+impl ArtifactInfo {
+    pub fn param_usize(&self, key: &str) -> Option<usize> {
+        self.params.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn param_str(&self, key: &str) -> Option<&str> {
+        self.params.get(key).and_then(|v| v.as_str())
+    }
+}
+
+/// The parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] json::ParseError),
+    #[error("manifest structure: {0}")]
+    Structure(String),
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, ManifestError> {
+        let doc = json::parse(text)?;
+        let arts = doc
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| ManifestError::Structure("missing 'artifacts'".into()))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, v) in arts {
+            let get_str = |k: &str| -> Result<String, ManifestError> {
+                v.get(k)
+                    .and_then(|x| x.as_str())
+                    .map(String::from)
+                    .ok_or_else(|| ManifestError::Structure(format!("{name}: missing '{k}'")))
+            };
+            let inputs = v
+                .get("inputs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| ManifestError::Structure(format!("{name}: missing inputs")))?
+                .iter()
+                .map(|i| {
+                    let shape = i
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|s| s.iter().filter_map(|d| d.as_usize()).collect())
+                        .unwrap_or_default();
+                    InputSpec {
+                        shape,
+                        seed: i.get("seed").and_then(|s| s.as_i64()).unwrap_or(1) as u64,
+                    }
+                })
+                .collect();
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: dir.join(get_str("file")?),
+                    task: get_str("task")?,
+                    role: get_str("role")?,
+                    params: v.get("params").cloned().unwrap_or(Json::obj()),
+                    inputs,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            fingerprint: doc
+                .get("fingerprint")
+                .and_then(|f| f.as_str())
+                .unwrap_or("")
+                .to_string(),
+            artifacts,
+        })
+    }
+
+    /// The reference artifact for a task.
+    pub fn reference_for(&self, task: &str) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .values()
+            .find(|a| a.task == task && a.role == "reference")
+    }
+
+    /// All variant artifacts for a task.
+    pub fn variants_for(&self, task: &str) -> Vec<&ArtifactInfo> {
+        self.artifacts
+            .values()
+            .filter(|a| a.task == task && a.role == "variant")
+            .collect()
+    }
+
+    /// All distinct task names with a reference artifact.
+    pub fn tasks(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .values()
+            .filter(|a| a.role == "reference")
+            .map(|a| a.task.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "fingerprint": "abc",
+      "artifacts": {
+        "rope_ref": {"file": "rope_ref.hlo.txt", "task": "llama_rope", "role": "reference",
+                      "params": {}, "inputs": [{"shape": [2,4,128,64], "seed": 1}]},
+        "rope_fused_bs32": {"file": "rope_fused_bs32.hlo.txt", "task": "llama_rope",
+                      "role": "variant", "params": {"bs": 32},
+                      "inputs": [{"shape": [2,4,128,64], "seed": 1}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.fingerprint, "abc");
+        assert_eq!(m.artifacts.len(), 2);
+        let r = m.reference_for("llama_rope").unwrap();
+        assert_eq!(r.name, "rope_ref");
+        assert_eq!(r.inputs[0].elements(), 2 * 4 * 128 * 64);
+        let vs = m.variants_for("llama_rope");
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].param_usize("bs"), Some(32));
+        assert_eq!(m.tasks(), vec!["llama_rope".to_string()]);
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Exercised against the actual artifacts when present.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 20);
+            for task in ["llama_rope", "softmax_real", "matmul_real", "block_fwd"] {
+                assert!(m.reference_for(task).is_some(), "missing reference for {task}");
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the JAX/
+//! Pallas kernels once to HLO *text* (see aot.py for why text, not
+//! serialized protos), and this module compiles them on the PJRT CPU
+//! client (`xla` crate) with a compile-once executable cache.
+
+pub mod backend;
+pub mod manifest;
+pub mod pjrt;
+
+pub use backend::PjrtBackend;
+pub use manifest::{ArtifactInfo, Manifest};
+pub use pjrt::PjrtRuntime;

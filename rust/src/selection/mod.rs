@@ -1,0 +1,264 @@
+//! Parent selection strategies (§3.2).
+//!
+//! Four strategies with configurable mixing ratios:
+//! * **Uniform** — random over occupied cells (max behavioral diversity).
+//! * **Fitness-proportionate** — weighted by elite fitness.
+//! * **Curiosity-driven** — weighted by gradient magnitude (estimated
+//!   improvement potential).
+//! * **Island-based** — K independent sub-populations over disjoint
+//!   archive regions with periodic migration every M generations.
+
+use crate::archive::MapElites;
+use crate::classify::Coords;
+use crate::gradient::GradientEstimator;
+use crate::transitions::TransitionTracker;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Uniform,
+    FitnessProportionate,
+    Curiosity,
+    Island,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s {
+            "uniform" => Some(Strategy::Uniform),
+            "fitness" | "fitness-proportionate" => Some(Strategy::FitnessProportionate),
+            "curiosity" | "curiosity-driven" => Some(Strategy::Curiosity),
+            "island" | "island-based" => Some(Strategy::Island),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Uniform => "uniform",
+            Strategy::FitnessProportionate => "fitness-proportionate",
+            Strategy::Curiosity => "curiosity-driven",
+            Strategy::Island => "island-based",
+        }
+    }
+}
+
+/// Island bookkeeping for island-based selection.
+#[derive(Debug, Clone)]
+pub struct IslandState {
+    /// Number of islands K.
+    pub k: usize,
+    /// Migration period M (generations).
+    pub migration_period: usize,
+    /// Round-robin cursor so islands take turns producing offspring.
+    cursor: usize,
+    generations: usize,
+}
+
+impl IslandState {
+    pub fn new(k: usize, migration_period: usize) -> IslandState {
+        IslandState {
+            k: k.max(1),
+            migration_period: migration_period.max(1),
+            cursor: 0,
+            generations: 0,
+        }
+    }
+
+    /// Islands partition the archive by flat cell index modulo K.
+    pub fn island_of(&self, coords: Coords, bins: usize) -> usize {
+        crate::classify::cell_index(coords, bins) % self.k
+    }
+
+    pub fn advance_generation(&mut self) {
+        self.generations += 1;
+        self.cursor = (self.cursor + 1) % self.k;
+    }
+
+    /// During a migration generation, islands may sample from anywhere.
+    pub fn migration_open(&self) -> bool {
+        self.generations > 0 && self.generations % self.migration_period == 0
+    }
+
+    pub fn active_island(&self) -> usize {
+        self.cursor
+    }
+}
+
+/// Parent selector combining the four strategies.
+pub struct Selector {
+    pub strategy: Strategy,
+    pub estimator: GradientEstimator,
+    pub islands: IslandState,
+}
+
+impl Selector {
+    pub fn new(strategy: Strategy) -> Selector {
+        Selector {
+            strategy,
+            estimator: GradientEstimator::default(),
+            islands: IslandState::new(4, 5),
+        }
+    }
+
+    /// Sample one parent cell from the archive. Returns `None` when the
+    /// archive is empty (first generation runs from scratch).
+    pub fn select(
+        &self,
+        archive: &MapElites,
+        tracker: &TransitionTracker,
+        iteration: usize,
+        rng: &mut Rng,
+    ) -> Option<Coords> {
+        let occupied = archive.occupied_coords();
+        if occupied.is_empty() {
+            return None;
+        }
+        let coords = match self.strategy {
+            Strategy::Uniform => *rng.choose(&occupied),
+            Strategy::FitnessProportionate => {
+                let weights: Vec<f64> = occupied
+                    .iter()
+                    .map(|c| archive.get(*c).map(|e| e.fitness).unwrap_or(0.0))
+                    .collect();
+                occupied[rng.choose_weighted(&weights)]
+            }
+            Strategy::Curiosity => {
+                let weighted = self.estimator.sampling_weights(tracker, archive, iteration);
+                let weights: Vec<f64> = weighted.iter().map(|(_, w)| *w).collect();
+                weighted[rng.choose_weighted(&weights)].0
+            }
+            Strategy::Island => {
+                let island = self.islands.active_island();
+                let bins = archive.bins();
+                let local: Vec<Coords> = if self.islands.migration_open() {
+                    occupied.clone()
+                } else {
+                    let filtered: Vec<Coords> = occupied
+                        .iter()
+                        .copied()
+                        .filter(|c| self.islands.island_of(*c, bins) == island)
+                        .collect();
+                    if filtered.is_empty() {
+                        occupied.clone()
+                    } else {
+                        filtered
+                    }
+                };
+                *rng.choose(&local)
+            }
+        };
+        Some(coords)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::archive::Elite;
+    use crate::ir::KernelGenome;
+
+    fn archive_with(cells: &[(Coords, f64)]) -> MapElites {
+        let mut a = MapElites::new(4);
+        for (c, f) in cells {
+            a.insert(Elite {
+                genome: KernelGenome::direct_translation("t"),
+                coords: *c,
+                fitness: *f,
+                speedup: 1.0,
+                runtime_ms: 1.0,
+                iteration: 0,
+            });
+        }
+        a
+    }
+
+    #[test]
+    fn empty_archive_selects_none() {
+        let sel = Selector::new(Strategy::Uniform);
+        let a = MapElites::new(4);
+        let tr = TransitionTracker::new(8);
+        assert!(sel.select(&a, &tr, 0, &mut Rng::new(1)).is_none());
+    }
+
+    #[test]
+    fn uniform_hits_every_cell() {
+        let sel = Selector::new(Strategy::Uniform);
+        let a = archive_with(&[([0, 0, 0], 0.2), ([1, 1, 1], 0.8), ([3, 3, 3], 0.5)]);
+        let tr = TransitionTracker::new(8);
+        let mut rng = Rng::new(2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(sel.select(&a, &tr, 0, &mut rng).unwrap());
+        }
+        assert_eq!(seen.len(), 3);
+    }
+
+    #[test]
+    fn fitness_proportionate_prefers_high_fitness() {
+        let sel = Selector::new(Strategy::FitnessProportionate);
+        let a = archive_with(&[([0, 0, 0], 0.1), ([1, 1, 1], 0.9)]);
+        let tr = TransitionTracker::new(8);
+        let mut rng = Rng::new(3);
+        let mut high = 0;
+        let n = 2000;
+        for _ in 0..n {
+            if sel.select(&a, &tr, 0, &mut rng).unwrap() == [1, 1, 1] {
+                high += 1;
+            }
+        }
+        let frac = high as f64 / n as f64;
+        assert!((0.82..0.98).contains(&frac), "frac {frac}");
+    }
+
+    #[test]
+    fn curiosity_always_selects_occupied() {
+        let sel = Selector::new(Strategy::Curiosity);
+        let a = archive_with(&[([0, 0, 0], 0.5), ([2, 1, 0], 0.6)]);
+        let tr = TransitionTracker::new(8);
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let c = sel.select(&a, &tr, 0, &mut rng).unwrap();
+            assert!(a.get(c).is_some());
+        }
+    }
+
+    #[test]
+    fn island_partition_is_stable_and_total() {
+        let isl = IslandState::new(4, 5);
+        let mut counts = [0usize; 4];
+        for idx in 0..64 {
+            let c = crate::classify::coords_of(idx, 4);
+            counts[isl.island_of(c, 4)] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 64);
+        assert!(counts.iter().all(|&c| c == 16));
+    }
+
+    #[test]
+    fn migration_opens_periodically() {
+        let mut isl = IslandState::new(3, 4);
+        let mut open = Vec::new();
+        for g in 1..=8 {
+            isl.advance_generation();
+            if isl.migration_open() {
+                open.push(g);
+            }
+        }
+        assert_eq!(open, vec![4, 8]);
+    }
+
+    #[test]
+    fn island_selection_restricted_outside_migration() {
+        let sel = Selector::new(Strategy::Island);
+        // Two cells on different islands.
+        let a = archive_with(&[([0, 0, 0], 0.5), ([0, 0, 1], 0.5)]);
+        let tr = TransitionTracker::new(8);
+        let mut rng = Rng::new(5);
+        // Active island is 0 (cursor 0): cell [0,0,0] has index 0 → island 0;
+        // cell [0,0,1] index 1 → island 1. Selection must stay on island 0.
+        for _ in 0..50 {
+            assert_eq!(sel.select(&a, &tr, 0, &mut rng).unwrap(), [0, 0, 0]);
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Simulated LLM code models.
+//!
+//! Substitute for the paper's frontier-LLM inference backend (DESIGN.md
+//! §2). The framework interacts with code models only through
+//! [`CodeModel::generate`], which consumes an assembled [`Prompt`] and
+//! returns candidate kernels. [`SimLlm`] is a prompt-sensitive stochastic
+//! mutator over [`KernelGenome`]s:
+//!
+//! * gradient-derived **mutation hints** in the prompt bias which feature
+//!   is mutated (followed with profile-dependent probability);
+//! * **strategy/pitfall tokens** injected by the meta-prompter unlock or
+//!   bias specific transformations and reduce matching defect rates —
+//!   guidance flows through the prompt text, closing the §3.5 loop;
+//! * the **last kernel's console log** enables error-repair behaviour
+//!   (syntax errors fixed, SLM overflows shrunk, missing barriers added);
+//! * per-model **capability profiles** set defect rates, hint adherence,
+//!   exploration temperature and parameter insight, emulating the paper's
+//!   model ensembles (o3-mini vs GPT-4.1/5-mini vs Sonnet-4.5 vs
+//!   GPT-OSS-20B).
+
+pub mod mutate;
+pub mod profile;
+
+pub use mutate::SimLlm;
+pub use profile::CapabilityProfile;
+
+use crate::ir::KernelGenome;
+use crate::prompts::Prompt;
+
+/// The code-model interface (the paper's "LLM inference backend").
+pub trait CodeModel {
+    fn name(&self) -> &str;
+    /// Generate `n` candidate kernels for the prompt.
+    fn generate(&mut self, prompt: &Prompt, n: usize) -> Vec<KernelGenome>;
+}
+
+/// A weighted ensemble of models with optional first-iteration override
+/// (App. B.4: "we chose to prompt a powerful language model in the first
+/// iteration … after the first iteration, we use an ensemble of GPT 5
+/// mini and GPT 4.1 (equal weights)").
+pub struct Ensemble {
+    pub members: Vec<(SimLlm, f64)>,
+    pub first_iteration: Option<SimLlm>,
+    rng: crate::util::rng::Rng,
+}
+
+impl Ensemble {
+    pub fn new(members: Vec<(SimLlm, f64)>, first_iteration: Option<SimLlm>, seed: u64) -> Ensemble {
+        assert!(!members.is_empty());
+        Ensemble {
+            members,
+            first_iteration,
+            rng: crate::util::rng::Rng::with_stream(seed, 0xe5b1e),
+        }
+    }
+
+    /// Convenience: single-model ensemble.
+    pub fn single(model: SimLlm, seed: u64) -> Ensemble {
+        Ensemble::new(vec![(model, 1.0)], None, seed)
+    }
+
+    /// Generate candidates, routing to the first-iteration model when
+    /// `iteration == 0` and to a weighted member otherwise.
+    pub fn generate(&mut self, prompt: &Prompt, n: usize, iteration: usize) -> Vec<KernelGenome> {
+        if iteration == 0 {
+            if let Some(first) = &mut self.first_iteration {
+                return first.generate(prompt, n);
+            }
+        }
+        let weights: Vec<f64> = self.members.iter().map(|(_, w)| *w).collect();
+        let idx = self.rng.choose_weighted(&weights);
+        self.members[idx].0.generate(prompt, n)
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.members
+            .iter()
+            .map(|(m, _)| m.name().to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prompts::{EvolvablePrompt, PromptBuilder};
+    use crate::tasks::catalog;
+
+    #[test]
+    fn ensemble_first_iteration_override() {
+        let strong = SimLlm::new(CapabilityProfile::sonnet_4_5(), 1);
+        let weak = SimLlm::new(CapabilityProfile::gpt_oss_20b(), 2);
+        let mut e = Ensemble::new(vec![(weak, 1.0)], Some(strong), 3);
+        let task = catalog::find_task("20_LeakyReLU").unwrap();
+        let p = PromptBuilder::default().build(&task, &EvolvablePrompt::default(), None, None, None, &[], "hw");
+        // Iteration 0 uses the strong model; candidates should rarely be
+        // defective.
+        let c0 = e.generate(&p, 16, 0);
+        assert_eq!(c0.len(), 16);
+        let defects0: usize = c0.iter().map(|g| g.defects.len()).sum();
+        let c5 = e.generate(&p, 16, 5);
+        let defects5: usize = c5.iter().map(|g| g.defects.len()).sum();
+        assert!(defects0 < defects5, "strong {defects0} !< weak {defects5}");
+        assert!(c0.iter().all(|g| g.produced_by == "sonnet-4.5"));
+        assert!(c5.iter().all(|g| g.produced_by == "gpt-oss-20b"));
+    }
+}

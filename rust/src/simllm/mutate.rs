@@ -1,0 +1,629 @@
+//! The prompt-sensitive genome mutation engine behind [`SimLlm`].
+
+use super::profile::CapabilityProfile;
+use super::CodeModel;
+use crate::ir::{
+    AlgoStructure, Defect, DefectKind, KernelGenome, MemoryPattern, SyncStrategy, TemplateSpec,
+};
+use crate::prompts::Prompt;
+use crate::util::rng::Rng;
+
+/// Directed transformations the model can apply, mirroring the mutation
+/// hints the gradient layer can emit (§3.3) and the strategy tokens the
+/// meta-prompter can inject (§3.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    Vectorize,
+    TileSlm,
+    RegisterBlock,
+    SimplifyMemory,
+    Fuse,
+    Reformulate,
+    NovelAlgorithm,
+    SimplifyAlgo,
+    BarrierSync,
+    SubGroupSync,
+    GlobalSync,
+    RelaxSync,
+    ParamJitter,
+    TogglePad,
+    TogglePrefetch,
+}
+
+const SENSIBLE_WG: [u32; 5] = [32, 64, 128, 256, 512];
+const SENSIBLE_TILE: [u32; 4] = [8, 16, 32, 64];
+const SENSIBLE_VEC: [u32; 4] = [1, 2, 4, 8];
+
+/// The simulated LLM.
+pub struct SimLlm {
+    pub profile: CapabilityProfile,
+    rng: Rng,
+}
+
+impl SimLlm {
+    pub fn new(profile: CapabilityProfile, seed: u64) -> SimLlm {
+        SimLlm {
+            profile,
+            rng: Rng::with_stream(seed, 0x11a),
+        }
+    }
+
+    // ---- prompt reading ----------------------------------------------------
+
+    /// Map a natural-language mutation hint to a transformation by
+    /// keyword matching — the inverse of `gradient::hints_for`.
+    fn parse_hint(hint: &str) -> Option<Mutation> {
+        let h = hint.to_lowercase();
+        if h.contains("coalesc") || h.contains("vectorized loads") || h.contains("vector loads") {
+            Some(Mutation::Vectorize)
+        } else if h.contains("shared memory tiling") || h.contains("local memory tiling") {
+            Some(Mutation::TileSlm)
+        } else if h.contains("register blocking") || h.contains("prefetch") {
+            Some(Mutation::RegisterBlock)
+        } else if h.contains("simpler access pattern") {
+            Some(Mutation::SimplifyMemory)
+        } else if h.contains("fuse") {
+            Some(Mutation::Fuse)
+        } else if h.contains("reformulate") || h.contains("online") || h.contains("streaming") {
+            Some(Mutation::Reformulate)
+        } else if h.contains("asymptotically") || h.contains("decomposition") {
+            Some(Mutation::NovelAlgorithm)
+        } else if h.contains("simpler fused form") || h.contains("regressing") {
+            Some(Mutation::SimplifyAlgo)
+        } else if h.contains("sub-group") || h.contains("subgroup") || h.contains("shuffles") {
+            Some(Mutation::SubGroupSync)
+        } else if h.contains("work-group barriers") {
+            Some(Mutation::BarrierSync)
+        } else if h.contains("atomic") && !h.contains("reduce barrier") {
+            Some(Mutation::GlobalSync)
+        } else if h.contains("synchronization overhead") || h.contains("reduce barrier") {
+            Some(Mutation::RelaxSync)
+        } else {
+            None
+        }
+    }
+
+    /// Transformations favoured by the strategy tokens currently present
+    /// in the evolvable regions. Plain-language strategy lines (the seed
+    /// prompt's kernel-specific guidance) are also keyword-matched — the
+    /// model reads the strategy text itself, not just meta-evolved tags,
+    /// which is what separates KernelFoundry's prompt from the generic
+    /// baselines' (§5.2).
+    fn strategy_mutations(prompt: &Prompt) -> Vec<Mutation> {
+        let s = &prompt.evolvable.strategies;
+        let mut out = Vec::new();
+        let lower = s.to_lowercase();
+        if lower.contains("vectorized loads") || lower.contains("sycl::vec") {
+            out.push(Mutation::Vectorize);
+        }
+        if lower.contains("memory tiling") || lower.contains("local memory tiling") {
+            out.push(Mutation::TileSlm);
+        }
+        if lower.contains("register blocking") {
+            out.push(Mutation::RegisterBlock);
+        }
+        if lower.contains("sub-group reductions") || lower.contains("reduce_over_group") {
+            out.push(Mutation::SubGroupSync);
+        }
+        if lower.contains("single pass") || lower.contains("fuse") {
+            out.push(Mutation::Fuse);
+        }
+        if s.contains("[strategy:vectorize]") {
+            out.push(Mutation::Vectorize);
+        }
+        if s.contains("[strategy:tiling]") {
+            out.push(Mutation::TileSlm);
+        }
+        if s.contains("[strategy:reg-block]") {
+            out.push(Mutation::RegisterBlock);
+        }
+        if s.contains("[strategy:fuse-all]") {
+            out.push(Mutation::Fuse);
+        }
+        if s.contains("[strategy:online-reformulation]") {
+            out.push(Mutation::Reformulate);
+        }
+        if s.contains("[strategy:subgroup]") {
+            out.push(Mutation::SubGroupSync);
+        }
+        if s.contains("[strategy:slm-pad]") {
+            out.push(Mutation::TogglePad);
+        }
+        out
+    }
+
+    // ---- generation ----------------------------------------------------------
+
+    fn fresh_genome(&mut self, prompt: &Prompt) -> KernelGenome {
+        let mut g = KernelGenome::direct_translation(&prompt.task_id);
+        // Competent models start from a coalesced translation.
+        if self.rng.bool(self.profile.param_insight) {
+            g.mem = MemoryPattern::Coalesced;
+            g.params.vec_width = *self.rng.choose(&[2, 4, 8]);
+        }
+        if self.rng.bool(self.profile.param_insight) {
+            g.params.wg_x = *self.rng.choose(&SENSIBLE_WG);
+        } else {
+            g.params.wg_x = 1 << self.rng.range(3, 9) as u32;
+        }
+        g
+    }
+
+    fn apply_mutation(&mut self, g: &mut KernelGenome, m: Mutation, prompt: &Prompt) {
+        match m {
+            Mutation::Vectorize => {
+                if g.mem == MemoryPattern::Scalar {
+                    g.mem = MemoryPattern::Coalesced;
+                }
+                g.params.vec_width = if self.rng.bool(self.profile.param_insight) {
+                    *self.rng.choose(&[4, 8])
+                } else {
+                    *self.rng.choose(&SENSIBLE_VEC)
+                };
+            }
+            Mutation::TileSlm => {
+                g.mem = MemoryPattern::TiledSlm;
+                let t = *self.rng.choose(&SENSIBLE_TILE);
+                g.params.tile_m = t;
+                g.params.tile_n = t;
+                g.params.tile_k = *self.rng.choose(&[8u32, 16, 32]);
+            }
+            Mutation::RegisterBlock => {
+                if g.uses_slm() {
+                    g.mem = MemoryPattern::MultiLevel;
+                    g.params.reg_block = *self.rng.choose(&[2u32, 4]);
+                    g.params.prefetch = self.rng.bool(0.6);
+                } else {
+                    // Can't register-block without a tile hierarchy; tile first.
+                    self.apply_mutation(g, Mutation::TileSlm, prompt);
+                }
+            }
+            Mutation::SimplifyMemory => {
+                g.mem = MemoryPattern::from_level(g.mem.level().saturating_sub(1));
+            }
+            Mutation::Fuse => {
+                if prompt.n_ops > 1 {
+                    if g.algo == AlgoStructure::DirectTranslation {
+                        g.algo = AlgoStructure::Fused;
+                    }
+                    // Extend fusion coverage.
+                    g.fused_ops = (g.fused_ops + 1 + self.rng.below(prompt.n_ops) as u32)
+                        .min(prompt.n_ops as u32);
+                }
+            }
+            Mutation::Reformulate => {
+                if prompt.supports_reformulation {
+                    let boosted = prompt
+                        .evolvable
+                        .strategies
+                        .contains("[strategy:online-reformulation]")
+                        || prompt
+                            .user_instructions
+                            .as_deref()
+                            .map(|u| {
+                                let u = u.to_lowercase();
+                                u.contains("online") || u.contains("exp2") || u.contains("flash")
+                            })
+                            .unwrap_or(false);
+                    let p_success = if boosted {
+                        0.9
+                    } else {
+                        self.profile.reformulation_skill
+                    };
+                    if self.rng.bool(p_success) {
+                        g.algo = AlgoStructure::Reformulated;
+                        g.fused_ops = prompt.n_ops as u32;
+                    } else if self.rng.bool(0.5) {
+                        // Botched reformulation: numeric bug.
+                        g.defects.push(Defect { kind: DefectKind::NumericBug, severity: 0.2 });
+                        g.algo = AlgoStructure::Reformulated;
+                    }
+                }
+            }
+            Mutation::NovelAlgorithm => {
+                if self.rng.bool(self.profile.reformulation_skill * 0.3) {
+                    g.algo = AlgoStructure::Novel;
+                } else {
+                    g.defects.push(Defect { kind: DefectKind::NumericBug, severity: 0.3 });
+                    g.algo = AlgoStructure::Novel;
+                }
+            }
+            Mutation::SimplifyAlgo => {
+                g.algo = AlgoStructure::from_level(g.algo.level().saturating_sub(1));
+            }
+            Mutation::BarrierSync => g.sync = SyncStrategy::WorkGroupBarrier,
+            Mutation::SubGroupSync => g.sync = SyncStrategy::SubGroup,
+            Mutation::GlobalSync => g.sync = SyncStrategy::Global,
+            Mutation::RelaxSync => {
+                g.sync = SyncStrategy::from_level(g.sync.level().saturating_sub(1));
+            }
+            Mutation::ParamJitter => match self.rng.below(5) {
+                0 => g.params.wg_x = *self.rng.choose(&SENSIBLE_WG),
+                1 => {
+                    let t = *self.rng.choose(&SENSIBLE_TILE);
+                    g.params.tile_m = t;
+                    g.params.tile_n = t;
+                }
+                2 => g.params.vec_width = *self.rng.choose(&SENSIBLE_VEC),
+                3 => g.params.unroll = *self.rng.choose(&[1u32, 2, 4, 8]),
+                _ => g.params.reg_block = *self.rng.choose(&[1u32, 2, 4]),
+            },
+            Mutation::TogglePad => g.params.slm_pad = true,
+            Mutation::TogglePrefetch => g.params.prefetch = !g.params.prefetch,
+        }
+    }
+
+    /// Inject defects per profile rates, attenuated by pitfall guidance
+    /// and console-log feedback (the "LLM read the error" channel).
+    fn inject_defects(&mut self, g: &mut KernelGenome, prompt: &Prompt) {
+        let pitfalls = &prompt.evolvable.pitfalls;
+        let log = &prompt.last_log.to_lowercase();
+        let fix = self.profile.fix_from_log;
+
+        let mut syntax = self.profile.syntax_error_rate;
+        if pitfalls.contains("[pitfall:complete-code]") {
+            syntax *= 0.5;
+        }
+        if log.contains("unbalanced") || log.contains("expected '}'") {
+            syntax *= 1.0 - fix;
+        }
+
+        let mut numeric = self.profile.numeric_bug_rate;
+        if log.contains("numeric mismatch") {
+            numeric *= 1.0 - fix;
+        }
+
+        let mut race = self.profile.race_rate;
+        if pitfalls.contains("[pitfall:barrier]") {
+            race *= 0.15;
+        }
+        if log.contains("race") || log.contains("nondeterministic") {
+            race *= 1.0 - fix;
+            if g.uses_slm() && g.sync == SyncStrategy::None && self.rng.bool(fix) {
+                g.sync = SyncStrategy::WorkGroupBarrier; // the model adds the barrier
+            }
+        }
+
+        let mut oob = self.profile.oob_rate;
+        if pitfalls.contains("[pitfall:bounds]") {
+            oob *= 0.2;
+        }
+        if log.contains("illegal memory access") || log.contains("page fault") {
+            oob *= 1.0 - fix;
+        }
+
+        if self.rng.bool(syntax) {
+            g.defects.push(Defect { kind: DefectKind::SyntaxError, severity: 1.0 });
+        }
+        if self.rng.bool(numeric) {
+            g.defects.push(Defect {
+                kind: DefectKind::NumericBug,
+                severity: 0.02 + 0.4 * self.rng.f64(),
+            });
+        }
+        if g.uses_slm() && self.rng.bool(race) {
+            g.defects.push(Defect { kind: DefectKind::MissingBarrier, severity: 1.0 });
+        }
+        if self.rng.bool(oob) {
+            g.defects.push(Defect { kind: DefectKind::OutOfBounds, severity: 1.0 });
+        }
+    }
+
+    /// Deterministic per-(model, task) roll for systematic task
+    /// misunderstanding (App. G failure mode): when it fires, nearly
+    /// every kernel this model writes for the task carries the same
+    /// numeric misimplementation, so sampling never converges.
+    fn misunderstands_task(&self, task_id: &str) -> bool {
+        let mut h = 0xcbf29ce484222325u64;
+        for b in self.profile.name.bytes().chain(task_id.bytes()) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        // splitmix64 finalizer: FNV's raw bits are poorly mixed for
+        // short strings.
+        h ^= h >> 30;
+        h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+        h ^= h >> 27;
+        h = h.wrapping_mul(0x94d049bb133111eb);
+        h ^= h >> 31;
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        u < self.profile.systematic_failure_rate
+    }
+
+    /// Shrink tiles in response to an SLM-overflow compile error.
+    fn repair_from_log(&mut self, g: &mut KernelGenome, prompt: &Prompt) {
+        if prompt.last_log.contains("SLM footprint")
+            && self.rng.bool(self.profile.fix_from_log)
+        {
+            g.params.tile_m = (g.params.tile_m / 2).max(8);
+            g.params.tile_n = (g.params.tile_n / 2).max(8);
+            g.params.tile_k = (g.params.tile_k / 2).max(8);
+        }
+        if prompt.last_log.contains("work-group size")
+            && self.rng.bool(self.profile.fix_from_log)
+        {
+            g.params.wg_x = g.params.wg_x.min(256);
+            g.params.wg_y = 1;
+        }
+    }
+
+    /// Produce the App. E.2 templated kernel: wrap the parent's params in
+    /// a dispatch grid. Insight determines how well-chosen the options are.
+    fn make_template(&mut self, g: &mut KernelGenome) {
+        let around = |v: u32| -> Vec<u32> {
+            let mut opts = vec![v.max(8) / 2, v.max(8), v.max(8) * 2];
+            opts.dedup();
+            opts
+        };
+        let tiles = if self.rng.bool(self.profile.param_insight) {
+            around(g.params.tile_m)
+                .into_iter()
+                .map(|t| (t, t, g.params.tile_k))
+                .collect()
+        } else {
+            vec![(g.params.tile_m, g.params.tile_n, g.params.tile_k)]
+        };
+        g.template = Some(TemplateSpec {
+            wg_options: around(g.params.wg_x).into_iter().map(|w| (w, g.params.wg_y)).collect(),
+            tile_options: tiles,
+            vec_options: vec![g.params.vec_width, 4, 8],
+        });
+    }
+}
+
+impl CodeModel for SimLlm {
+    fn name(&self) -> &str {
+        self.profile.name
+    }
+
+    fn generate(&mut self, prompt: &Prompt, n: usize) -> Vec<KernelGenome> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut g = match &prompt.parent {
+                Some(parent) => {
+                    let mut g = parent.clone();
+                    g.defects.clear(); // each generation is fresh code
+                    g.parent_id = Some(parent.id);
+                    g
+                }
+                None => self.fresh_genome(prompt),
+            };
+            g.produced_by = self.profile.name.to_string();
+            g.template = None;
+
+            if prompt.templated_request {
+                self.make_template(&mut g);
+                self.inject_defects(&mut g, prompt);
+                out.push(g);
+                continue;
+            }
+
+            // 1. Follow gradient hints.
+            let mut directed = false;
+            for hint in &prompt.hints {
+                if let Some(m) = Self::parse_hint(hint) {
+                    if self.rng.bool(self.profile.hint_follow) {
+                        self.apply_mutation(&mut g, m, prompt);
+                        directed = true;
+                    }
+                }
+            }
+            // 2. Follow meta-evolved strategy guidance.
+            for m in Self::strategy_mutations(prompt) {
+                if self.rng.bool(self.profile.hint_follow * 0.5) {
+                    self.apply_mutation(&mut g, m, prompt);
+                    directed = true;
+                }
+            }
+            // 3. Undirected exploration (always at least one mutation if
+            //    nothing was directed). The mutation repertoire depends
+            //    on the prompt: kernel-specific strategy guidance (the
+            //    "[memory]/[algorithm]/[parallelism]" sections of the
+            //    KernelFoundry prompt) puts the deep optimizations on the
+            //    menu; a generic prompt (the OpenEvolve / repeated-
+            //    prompting baselines) leaves the model mostly fiddling
+            //    with parameters and shallow transforms — the paper's
+            //    "lacks kernel-specific optimization strategies".
+            if !directed || self.rng.bool(self.profile.explore_temp) {
+                let guided = prompt.evolvable.strategies.contains("[memory]")
+                    || prompt.evolvable.strategies.contains("[algorithm]");
+                let m = if guided {
+                    *self.rng.choose(&[
+                        Mutation::Vectorize,
+                        Mutation::TileSlm,
+                        Mutation::RegisterBlock,
+                        Mutation::SimplifyMemory,
+                        Mutation::Fuse,
+                        Mutation::Fuse, // fusion is the most natural guided move
+                        Mutation::Reformulate,
+                        Mutation::NovelAlgorithm,
+                        Mutation::SimplifyAlgo,
+                        Mutation::BarrierSync,
+                        Mutation::SubGroupSync,
+                        Mutation::GlobalSync,
+                        Mutation::RelaxSync,
+                        Mutation::ParamJitter,
+                        Mutation::ParamJitter,
+                        Mutation::TogglePad,
+                        Mutation::TogglePrefetch,
+                    ])
+                } else {
+                    *self.rng.choose(&[
+                        Mutation::Vectorize,
+                        Mutation::TileSlm,
+                        Mutation::SimplifyMemory,
+                        Mutation::Fuse,
+                        Mutation::SimplifyAlgo,
+                        Mutation::BarrierSync,
+                        Mutation::GlobalSync,
+                        Mutation::RelaxSync,
+                        Mutation::ParamJitter,
+                        Mutation::ParamJitter,
+                        Mutation::ParamJitter,
+                        Mutation::TogglePrefetch,
+                    ])
+                };
+                self.apply_mutation(&mut g, m, prompt);
+            }
+
+            self.repair_from_log(&mut g, prompt);
+            self.inject_defects(&mut g, prompt);
+            // A systematic misunderstanding is persistent: no amount of
+            // resampling fixes it ("even after 40 iterations", App. G).
+            if self.misunderstands_task(&prompt.task_id) {
+                g.defects.push(Defect {
+                    kind: DefectKind::NumericBug,
+                    severity: 0.15 + 0.3 * self.rng.f64(),
+                });
+            }
+            out.push(g);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prompts::{EvolvablePrompt, PromptBuilder};
+    use crate::tasks::catalog;
+    use crate::util::textdiff;
+
+    fn prompt_for(task_id: &str) -> Prompt {
+        let task = catalog::find_task(task_id).unwrap();
+        PromptBuilder::default().build(&task, &EvolvablePrompt::default(), None, None, None, &[], "hw")
+    }
+
+    #[test]
+    fn generates_requested_count() {
+        let mut m = SimLlm::new(CapabilityProfile::gpt_4_1(), 1);
+        let p = prompt_for("99_Matmul_GELU_Softmax");
+        assert_eq!(m.generate(&p, 8).len(), 8);
+    }
+
+    #[test]
+    fn hints_steer_mutations() {
+        let mut m = SimLlm::new(CapabilityProfile::sonnet_4_5(), 2);
+        let task = catalog::find_task("99_Matmul_GELU_Softmax").unwrap();
+        let mut p = PromptBuilder::default().build(&task, &EvolvablePrompt::default(), None, None, None, &[], "hw");
+        p.hints = vec!["Consider adding shared memory tiling to improve data reuse.".to_string()];
+        let kids = m.generate(&p, 64);
+        let tiled = kids.iter().filter(|g| g.uses_slm()).count();
+        // hint_follow = 0.88: most children should be tiled.
+        assert!(tiled > 40, "only {tiled}/64 followed the tiling hint");
+    }
+
+    #[test]
+    fn strategy_token_unlocks_reformulation() {
+        let task = catalog::find_task("99_Matmul_GELU_Softmax").unwrap();
+        let base = EvolvablePrompt::default();
+        // Without the token, a weak model almost never reformulates
+        // correctly.
+        let p_plain = PromptBuilder::default().build(&task, &base, None, None, None, &[], "hw");
+        let mut weak = SimLlm::new(CapabilityProfile::gpt_4_1(), 3);
+        let plain_reform = weak
+            .generate(&p_plain, 128)
+            .iter()
+            .filter(|g| g.algo == AlgoStructure::Reformulated && g.defects.is_empty())
+            .count();
+        // With the meta-evolved token, reformulation is frequent and clean.
+        let diff = "<<<<<<< SEARCH\n- [parallelism] Use sub-group reductions instead of serializing through one work-item.\n=======\n- [parallelism] Use sub-group reductions instead of serializing through one work-item.\n- [algorithm] [strategy:online-reformulation] Use a streaming online softmax with exp2 rescaling.\n>>>>>>> REPLACE\n";
+        let evolved = base.apply_diff(&textdiff::parse_hunks(diff).unwrap()).unwrap();
+        let p_tok = PromptBuilder::default().build(&task, &evolved, None, None, None, &[], "hw");
+        let mut weak2 = SimLlm::new(CapabilityProfile::gpt_4_1(), 3);
+        let tok_reform = weak2
+            .generate(&p_tok, 128)
+            .iter()
+            .filter(|g| g.algo == AlgoStructure::Reformulated && g.defects.is_empty())
+            .count();
+        assert!(
+            tok_reform > plain_reform * 2,
+            "token {tok_reform} vs plain {plain_reform}"
+        );
+    }
+
+    #[test]
+    fn barrier_pitfall_reduces_races() {
+        let task = catalog::find_task("7_Matmul_with_small_K_dimension_").unwrap();
+        let mut parent = KernelGenome::direct_translation(&task.id);
+        parent.mem = MemoryPattern::TiledSlm;
+        let mk_prompt = |pitfalls: &str| {
+            let mut ev = EvolvablePrompt::default();
+            ev.pitfalls = pitfalls.to_string();
+            let mut p = PromptBuilder::default().build(&task, &ev, None, None, None, &[], "hw");
+            p.parent = Some(parent.clone());
+            p
+        };
+        let mut weak = SimLlm::new(CapabilityProfile::gpt_oss_20b(), 5);
+        let races_plain = weak
+            .generate(&mk_prompt("be careful"), 200)
+            .iter()
+            .filter(|g| g.has_defect(DefectKind::MissingBarrier))
+            .count();
+        let mut weak2 = SimLlm::new(CapabilityProfile::gpt_oss_20b(), 5);
+        let races_guided = weak2
+            .generate(&mk_prompt("[pitfall:barrier] sync SLM"), 200)
+            .iter()
+            .filter(|g| g.has_defect(DefectKind::MissingBarrier))
+            .count();
+        assert!(
+            (races_guided as f64) < races_plain as f64 * 0.5,
+            "guided {races_guided} vs plain {races_plain}"
+        );
+    }
+
+    #[test]
+    fn log_feedback_repairs_slm_overflow() {
+        let task = catalog::find_task("7_Matmul_with_small_K_dimension_").unwrap();
+        let mut parent = KernelGenome::direct_translation(&task.id);
+        parent.mem = MemoryPattern::TiledSlm;
+        parent.params.tile_m = 256;
+        parent.params.tile_n = 256;
+        let mut p = PromptBuilder::default().build(&task, &EvolvablePrompt::default(), None, None, None, &[], "hw");
+        p.parent = Some(parent);
+        p.last_log = "kernel.cpp: error: SLM footprint 524288 B exceeds device budget 131072 B".to_string();
+        let mut m = SimLlm::new(CapabilityProfile::gpt_o3(), 6);
+        let kids = m.generate(&p, 64);
+        let shrunk = kids.iter().filter(|g| g.params.tile_m < 256).count();
+        assert!(shrunk > 48, "only {shrunk}/64 shrank tiles after overflow error");
+    }
+
+    #[test]
+    fn templated_request_produces_dispatch_options() {
+        let task = catalog::find_task("99_Matmul_GELU_Softmax").unwrap();
+        let best = KernelGenome::direct_translation(&task.id);
+        let rec = crate::eval::EvalRecord {
+            source: String::new(),
+            genome: best,
+            outcome: crate::eval::EvalOutcome::Correct,
+            coords: [2, 1, 1],
+            correctness: None,
+            time_ms: 1.0,
+            baseline_ms: 2.0,
+            speedup: 2.0,
+            fitness: 1.0,
+            log: String::new(),
+            best_params: None,
+            param_sweep: Vec::new(),
+        };
+        let p = PromptBuilder::default().build_templated(&task, &rec, "hw");
+        let mut m = SimLlm::new(CapabilityProfile::gpt_o3(), 7);
+        let kids = m.generate(&p, 4);
+        assert!(kids.iter().all(|g| g.template.is_some()));
+        assert!(kids[0].template.as_ref().unwrap().n_instantiations() > 1);
+    }
+
+    #[test]
+    fn children_inherit_parent_lineage() {
+        let task = catalog::find_task("20_LeakyReLU").unwrap();
+        let mut parent = KernelGenome::direct_translation(&task.id);
+        parent.id = 42;
+        let mut p = PromptBuilder::default().build(&task, &EvolvablePrompt::default(), None, None, None, &[], "hw");
+        p.parent = Some(parent);
+        let mut m = SimLlm::new(CapabilityProfile::gpt_4_1(), 8);
+        for g in m.generate(&p, 8) {
+            assert_eq!(g.parent_id, Some(42));
+            assert_eq!(g.produced_by, "gpt-4.1");
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Capability profiles for the simulated code models.
+//!
+//! Rates are calibrated so the reproduction shows the paper's qualitative
+//! model ordering: frontier reasoning models (o3, Sonnet-4.5) rarely emit
+//! broken kernels and follow guidance well; mid-tier models are decent;
+//! GPT-OSS-20B "led to failure in generating correct kernels in 7 out of
+//! 20 cases" (App. G) — i.e. a high persistent defect floor.
+
+/// Stochastic capability description of one model.
+#[derive(Debug, Clone)]
+pub struct CapabilityProfile {
+    pub name: &'static str,
+    /// Probability a generation is syntactically broken (truncated, bad
+    /// template).
+    pub syntax_error_rate: f64,
+    /// Probability of a numeric bug (bad index math, wrong epsilon).
+    pub numeric_bug_rate: f64,
+    /// Probability of omitting a required barrier in SLM kernels.
+    pub race_rate: f64,
+    /// Probability of a missing bounds guard.
+    pub oob_rate: f64,
+    /// Probability of following a given mutation hint / strategy token.
+    pub hint_follow: f64,
+    /// Exploration temperature: probability of applying a second, random
+    /// mutation on top of the directed one.
+    pub explore_temp: f64,
+    /// Skill at algorithmic reformulation (P of succeeding when trying
+    /// to move d_algo to level 2+ unprompted).
+    pub reformulation_skill: f64,
+    /// Quality of hardware-parameter guesses: P of picking a sensible
+    /// power-of-two near typical optima instead of an arbitrary value.
+    pub param_insight: f64,
+    /// How strongly console-log feedback suppresses repeat defects.
+    pub fix_from_log: f64,
+    /// Probability that the model systematically misunderstands a given
+    /// task (deterministic per (model, task)): all its kernels for that
+    /// task carry the same numeric misimplementation, so no amount of
+    /// sampling converges — the App. G failure mode ("the model's lower
+    /// capabilities led to failure in generating correct kernels in 7
+    /// out of 20 cases, even after 40 iterations").
+    pub systematic_failure_rate: f64,
+}
+
+impl CapabilityProfile {
+    pub fn o3_mini() -> CapabilityProfile {
+        CapabilityProfile {
+            name: "o3-mini",
+            syntax_error_rate: 0.06,
+            numeric_bug_rate: 0.10,
+            race_rate: 0.10,
+            oob_rate: 0.05,
+            hint_follow: 0.70,
+            explore_temp: 0.35,
+            reformulation_skill: 0.45,
+            param_insight: 0.60,
+            fix_from_log: 0.75,
+            systematic_failure_rate: 0.0,
+        }
+    }
+
+    pub fn gpt_o3() -> CapabilityProfile {
+        CapabilityProfile {
+            name: "gpt-o3",
+            syntax_error_rate: 0.03,
+            numeric_bug_rate: 0.06,
+            race_rate: 0.06,
+            oob_rate: 0.03,
+            hint_follow: 0.85,
+            explore_temp: 0.30,
+            reformulation_skill: 0.65,
+            param_insight: 0.75,
+            fix_from_log: 0.90,
+            systematic_failure_rate: 0.0,
+        }
+    }
+
+    pub fn gpt_o4_mini() -> CapabilityProfile {
+        CapabilityProfile {
+            name: "gpt-o4-mini",
+            syntax_error_rate: 0.05,
+            numeric_bug_rate: 0.09,
+            race_rate: 0.08,
+            oob_rate: 0.04,
+            hint_follow: 0.75,
+            explore_temp: 0.35,
+            reformulation_skill: 0.50,
+            param_insight: 0.65,
+            fix_from_log: 0.80,
+            systematic_failure_rate: 0.01,
+        }
+    }
+
+    pub fn gpt_4_1() -> CapabilityProfile {
+        CapabilityProfile {
+            name: "gpt-4.1",
+            syntax_error_rate: 0.05,
+            numeric_bug_rate: 0.09,
+            race_rate: 0.09,
+            oob_rate: 0.05,
+            hint_follow: 0.72,
+            explore_temp: 0.40,
+            reformulation_skill: 0.40,
+            param_insight: 0.60,
+            fix_from_log: 0.80,
+            systematic_failure_rate: 0.01,
+        }
+    }
+
+    pub fn gpt_5_mini() -> CapabilityProfile {
+        CapabilityProfile {
+            name: "gpt-5-mini",
+            syntax_error_rate: 0.04,
+            numeric_bug_rate: 0.08,
+            race_rate: 0.07,
+            oob_rate: 0.04,
+            hint_follow: 0.78,
+            explore_temp: 0.38,
+            reformulation_skill: 0.50,
+            param_insight: 0.68,
+            fix_from_log: 0.85,
+            systematic_failure_rate: 0.01,
+        }
+    }
+
+    pub fn sonnet_4_5() -> CapabilityProfile {
+        CapabilityProfile {
+            name: "sonnet-4.5",
+            syntax_error_rate: 0.02,
+            numeric_bug_rate: 0.05,
+            race_rate: 0.05,
+            oob_rate: 0.02,
+            hint_follow: 0.88,
+            explore_temp: 0.32,
+            reformulation_skill: 0.70,
+            param_insight: 0.78,
+            fix_from_log: 0.92,
+            systematic_failure_rate: 0.0,
+        }
+    }
+
+    /// App. G reproducibility model: weak enough that ~1/3 of tasks never
+    /// converge to a correct kernel.
+    pub fn gpt_oss_20b() -> CapabilityProfile {
+        CapabilityProfile {
+            name: "gpt-oss-20b",
+            syntax_error_rate: 0.30,
+            numeric_bug_rate: 0.35,
+            race_rate: 0.30,
+            oob_rate: 0.15,
+            hint_follow: 0.35,
+            explore_temp: 0.55,
+            reformulation_skill: 0.10,
+            param_insight: 0.25,
+            fix_from_log: 0.30,
+            systematic_failure_rate: 0.35,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<CapabilityProfile> {
+        match name {
+            "o3-mini" => Some(Self::o3_mini()),
+            "gpt-o3" | "o3" => Some(Self::gpt_o3()),
+            "gpt-o4-mini" | "o4-mini" => Some(Self::gpt_o4_mini()),
+            "gpt-4.1" => Some(Self::gpt_4_1()),
+            "gpt-5-mini" => Some(Self::gpt_5_mini()),
+            "sonnet-4.5" => Some(Self::sonnet_4_5()),
+            "gpt-oss-20b" => Some(Self::gpt_oss_20b()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_covers_all() {
+        for n in [
+            "o3-mini",
+            "gpt-o3",
+            "gpt-o4-mini",
+            "gpt-4.1",
+            "gpt-5-mini",
+            "sonnet-4.5",
+            "gpt-oss-20b",
+        ] {
+            assert_eq!(CapabilityProfile::by_name(n).unwrap().name, n);
+        }
+        assert!(CapabilityProfile::by_name("gpt-7").is_none());
+    }
+
+    #[test]
+    fn capability_ordering() {
+        let strong = CapabilityProfile::sonnet_4_5();
+        let weak = CapabilityProfile::gpt_oss_20b();
+        assert!(strong.syntax_error_rate < weak.syntax_error_rate);
+        assert!(strong.hint_follow > weak.hint_follow);
+        assert!(strong.reformulation_skill > weak.reformulation_skill);
+    }
+}

@@ -1,0 +1,623 @@
+//! The benchmark task suites (§4, App. D, App. F).
+//!
+//! Task names follow the paper's per-task appendix tables exactly:
+//! Table 8 (representative KernelBench L1 + L2 sets), Table 7
+//! (robust-kbench), Table 4 (oneDNN ops). Tensor shapes are
+//! KernelBench-typical sizes.
+
+use super::{FilterFlags, OpSpec, Suite, TaskSpec};
+
+const MB: u64 = 1 << 20;
+
+fn ew(elems: u64, flops: u64, sfu: u64, name: &'static str) -> OpSpec {
+    OpSpec::Elementwise { elems, flops_per_elem: flops, sfu_per_elem: sfu, name }
+}
+
+/// The 20-task representative KernelBench L1 subset (Table 8, level 1).
+pub fn kernelbench_l1() -> Vec<TaskSpec> {
+    let mk = |id: &str, ops: Vec<OpSpec>| TaskSpec::new(id, Suite::KernelBenchL1, ops);
+    vec![
+        mk("20_LeakyReLU", vec![ew(16 * MB, 2, 0, "leaky_relu")]),
+        mk("21_Sigmoid", vec![ew(16 * MB, 3, 1, "sigmoid")]),
+        mk("25_Swish", vec![ew(16 * MB, 4, 1, "swish")]),
+        mk("30_Softsign", vec![ew(16 * MB, 3, 1, "softsign")]),
+        mk(
+            "33_BatchNorm",
+            vec![OpSpec::Norm { elems: 16 * MB, groups: 64, name: "batchnorm" }],
+        ),
+        mk(
+            "44_Average_Pooling_1D",
+            vec![OpSpec::Pool { elems_out: 4 * MB, win: 4, name: "avgpool1d" }],
+        ),
+        mk(
+            "48_Mean_reduction_over_a_dimension",
+            vec![OpSpec::Reduction { elems: 16 * MB, outputs: 64 * 256, name: "mean_reduce" }],
+        ),
+        mk(
+            "4_Matrix_vector_multiplication_",
+            vec![OpSpec::Matmul { m: 256, n: 1, k: 131072 }],
+        ),
+        mk(
+            "53_Min_reduction_over_a_dimension",
+            vec![OpSpec::Reduction { elems: 16 * MB, outputs: 64 * 256, name: "min_reduce" }],
+        ),
+        mk("5_Matrix_scalar_multiplication", vec![ew(16 * MB, 1, 0, "scalar_mul")]),
+        mk(
+            "64_conv_transposed_1D",
+            vec![OpSpec::ConvTranspose2d { n: 16, c_in: 32, c_out: 64, h: 1, w: 16384, kh: 1, kw: 3 }],
+        ),
+        mk(
+            "67_conv_standard_1D",
+            vec![OpSpec::Conv2d { n: 16, c_in: 32, c_out: 64, h: 1, w: 16384, kh: 1, kw: 3 }],
+        ),
+        mk(
+            "72_ConvTranspose3d_BatchNorm_AvgPool_AvgPool",
+            vec![
+                OpSpec::ConvTranspose3d { n: 4, c_in: 16, c_out: 32, d: 16, h: 32, w: 32, k: 3 },
+                OpSpec::Norm { elems: 4 * 32 * 16 * 32 * 32, groups: 32, name: "batchnorm" },
+                OpSpec::Pool { elems_out: (4 * 32 * 16 * 32 * 32) / 8, win: 8, name: "avgpool" },
+                OpSpec::Pool { elems_out: (4 * 32 * 16 * 32 * 32) / 64, win: 8, name: "avgpool" },
+            ],
+        ),
+        mk(
+            "76_conv_standard_1D_dilated_strided",
+            vec![OpSpec::Conv2d { n: 16, c_in: 32, c_out: 64, h: 1, w: 8192, kh: 1, kw: 3 }],
+        ),
+        mk(
+            "7_Matmul_with_small_K_dimension_",
+            vec![OpSpec::Matmul { m: 16384, n: 16384, k: 32 }],
+        ),
+        mk(
+            "82_conv_depthwise_2D_square_input_square_kernel",
+            vec![OpSpec::Conv2d { n: 16, c_in: 64, c_out: 64, h: 256, w: 256, kh: 3, kw: 3 }],
+        ),
+        mk(
+            "86_conv_depthwise_separable_2D",
+            vec![
+                OpSpec::Conv2d { n: 16, c_in: 64, c_out: 64, h: 128, w: 128, kh: 3, kw: 3 },
+                OpSpec::Conv2d { n: 16, c_in: 64, c_out: 128, h: 128, w: 128, kh: 1, kw: 1 },
+            ],
+        ),
+        mk(
+            "87_conv_pointwise_2D",
+            vec![OpSpec::Conv2d { n: 16, c_in: 64, c_out: 128, h: 256, w: 256, kh: 1, kw: 1 }],
+        ),
+        mk("89_cumsum", vec![OpSpec::Cumsum { rows: 4096, cols: 4096 }]),
+        mk(
+            "99_TripletMarginLoss",
+            vec![
+                ew(3 * 4 * MB, 4, 0, "pairwise_dist"),
+                OpSpec::Reduction { elems: 4 * MB, outputs: 128, name: "loss_reduce" },
+            ],
+        ),
+    ]
+}
+
+/// The 20-task representative KernelBench L2 subset (Tables 8–10).
+pub fn kernelbench_l2() -> Vec<TaskSpec> {
+    let mk = |id: &str, ops: Vec<OpSpec>| TaskSpec::new(id, Suite::KernelBenchL2, ops);
+    let conv = |c_in: u64, c_out: u64, hw: u64, k: u64| OpSpec::Conv2d {
+        n: 16, c_in, c_out, h: hw, w: hw, kh: k, kw: k,
+    };
+    let act = |elems: u64, name: &'static str| match name {
+        "relu" => ew(elems, 1, 0, "relu"),
+        "tanh" | "sigmoid" | "gelu" | "mish" | "swish" | "hardswish" | "hardtanh" | "softmax_act" => {
+            ew(elems, 4, 1, name)
+        }
+        _ => ew(elems, 2, 0, name),
+    };
+    vec![
+        mk(
+            "16_ConvTranspose2d_Mish_Add_Hardtanh_Scaling",
+            vec![
+                OpSpec::ConvTranspose2d { n: 16, c_in: 32, c_out: 64, h: 64, w: 64, kh: 4, kw: 4 },
+                act(16 * 64 * 64 * 64, "mish"),
+                ew(16 * 64 * 64 * 64, 1, 0, "add"),
+                act(16 * 64 * 64 * 64, "hardtanh"),
+                ew(16 * 64 * 64 * 64, 1, 0, "scale"),
+            ],
+        ),
+        mk(
+            "17_Conv2d_InstanceNorm_Divide",
+            vec![
+                conv(32, 64, 64, 3),
+                OpSpec::Norm { elems: 16 * 64 * 62 * 62, groups: 16 * 64, name: "instancenorm" },
+                ew(16 * 64 * 62 * 62, 1, 1, "divide"),
+            ],
+        ),
+        mk(
+            "1_Conv2D_ReLU_BiasAdd",
+            vec![conv(3, 16, 128, 3), act(16 * 16 * 126 * 126, "relu"), ew(16 * 16 * 126 * 126, 1, 0, "bias_add")],
+        ),
+        mk(
+            "21_Conv2d_Add_Scale_Sigmoid_GroupNorm",
+            vec![
+                conv(32, 64, 64, 3),
+                ew(16 * 64 * 62 * 62, 1, 0, "add"),
+                ew(16 * 64 * 62 * 62, 1, 0, "scale"),
+                act(16 * 64 * 62 * 62, "sigmoid"),
+                OpSpec::Norm { elems: 16 * 64 * 62 * 62, groups: 16 * 8, name: "groupnorm" },
+            ],
+        ),
+        mk(
+            "24_Conv3d_Min_Softmax",
+            vec![
+                OpSpec::Conv3d { n: 4, c_in: 16, c_out: 32, d: 16, h: 32, w: 32, k: 3 },
+                OpSpec::Reduction { elems: 4 * 32 * 14 * 30 * 30, outputs: 4 * 32 * 30 * 30, name: "min_reduce" },
+                OpSpec::Softmax { rows: 4 * 30 * 30, cols: 32 },
+            ],
+        ),
+        mk(
+            "32_Conv2d_Scaling_Min",
+            vec![
+                conv(32, 64, 64, 3),
+                ew(16 * 64 * 62 * 62, 1, 0, "scale"),
+                OpSpec::Reduction { elems: 16 * 64 * 62 * 62, outputs: 16 * 62 * 62, name: "min_reduce" },
+            ],
+        ),
+        mk(
+            "35_Conv2d_Subtract_HardSwish_MaxPool_Mish",
+            vec![
+                conv(32, 64, 64, 3),
+                ew(16 * 64 * 62 * 62, 1, 0, "subtract"),
+                act(16 * 64 * 62 * 62, "hardswish"),
+                OpSpec::Pool { elems_out: 16 * 64 * 31 * 31, win: 4, name: "maxpool" },
+                act(16 * 64 * 31 * 31, "mish"),
+            ],
+        ),
+        mk(
+            "37_Matmul_Swish_Sum_GroupNorm",
+            vec![
+                OpSpec::Matmul { m: 2048, n: 1024, k: 512 },
+                act(2048 * 1024, "swish"),
+                OpSpec::Reduction { elems: 2048 * 1024, outputs: 2048, name: "sum_reduce" },
+                OpSpec::Norm { elems: 2048 * 1024, groups: 2048 * 8, name: "groupnorm" },
+            ],
+        ),
+        mk(
+            "46_Conv2d_Subtract_Tanh_Subtract_AvgPool",
+            vec![
+                conv(32, 64, 64, 3),
+                ew(16 * 64 * 62 * 62, 1, 0, "subtract"),
+                act(16 * 64 * 62 * 62, "tanh"),
+                ew(16 * 64 * 62 * 62, 1, 0, "subtract"),
+                OpSpec::Pool { elems_out: 16 * 64 * 31 * 31, win: 4, name: "avgpool" },
+            ],
+        ),
+        mk(
+            "47_Conv3d_Mish_Tanh",
+            vec![
+                OpSpec::Conv3d { n: 4, c_in: 16, c_out: 32, d: 16, h: 32, w: 32, k: 3 },
+                act(4 * 32 * 14 * 30 * 30, "mish"),
+                act(4 * 32 * 14 * 30 * 30, "tanh"),
+            ],
+        ),
+        mk(
+            "50_ConvTranspose3d_Scaling_AvgPool_BiasAdd_Scaling",
+            vec![
+                OpSpec::ConvTranspose3d { n: 4, c_in: 16, c_out: 32, d: 32, h: 64, w: 64, k: 3 },
+                ew(4 * 32 * 32 * 64 * 64, 1, 0, "scale"),
+                OpSpec::Pool { elems_out: (4 * 32 * 32 * 64 * 64) / 8, win: 8, name: "avgpool" },
+                ew((4 * 32 * 32 * 64 * 64) / 8, 1, 0, "bias_add"),
+                ew((4 * 32 * 32 * 64 * 64) / 8, 1, 0, "scale"),
+            ],
+        ),
+        mk(
+            "59_Matmul_Swish_Scaling",
+            vec![
+                OpSpec::Matmul { m: 2048, n: 1024, k: 512 },
+                act(2048 * 1024, "swish"),
+                ew(2048 * 1024, 1, 0, "scale"),
+            ],
+        ),
+        mk(
+            "5_ConvTranspose2d_Subtract_Tanh",
+            vec![
+                OpSpec::ConvTranspose2d { n: 16, c_in: 32, c_out: 16, h: 64, w: 64, kh: 4, kw: 4 },
+                ew(16 * 16 * 64 * 64, 1, 0, "subtract"),
+                act(16 * 16 * 64 * 64, "tanh"),
+            ],
+        ),
+        mk(
+            "67_Conv2d_GELU_GlobalAvgPool",
+            vec![
+                conv(32, 64, 64, 3),
+                act(16 * 64 * 62 * 62, "gelu"),
+                OpSpec::Reduction { elems: 16 * 64 * 62 * 62, outputs: 16 * 64, name: "global_avgpool" },
+            ],
+        ),
+        mk(
+            "70_Gemm_Sigmoid_Scaling_ResidualAdd",
+            vec![
+                OpSpec::Matmul { m: 1024, n: 2048, k: 512 },
+                act(1024 * 2048, "sigmoid"),
+                ew(1024 * 2048, 1, 0, "scale"),
+                ew(1024 * 2048, 1, 0, "residual_add"),
+            ],
+        ),
+        mk(
+            "73_Conv2d_BatchNorm_Scaling",
+            vec![
+                conv(32, 64, 64, 3),
+                OpSpec::Norm { elems: 16 * 64 * 62 * 62, groups: 64, name: "batchnorm" },
+                ew(16 * 64 * 62 * 62, 1, 0, "scale"),
+            ],
+        ),
+        mk(
+            "82_Conv2d_Tanh_Scaling_BiasAdd_Max",
+            vec![
+                conv(32, 64, 64, 3),
+                act(16 * 64 * 62 * 62, "tanh"),
+                ew(16 * 64 * 62 * 62, 1, 0, "scale"),
+                ew(16 * 64 * 62 * 62, 1, 0, "bias_add"),
+                OpSpec::Pool { elems_out: 16 * 64 * 31 * 31, win: 4, name: "maxpool" },
+            ],
+        ),
+        mk(
+            "85_Conv2d_GroupNorm_Scale_MaxPool_Clamp",
+            vec![
+                conv(32, 64, 64, 3),
+                OpSpec::Norm { elems: 16 * 64 * 62 * 62, groups: 16 * 8, name: "groupnorm" },
+                ew(16 * 64 * 62 * 62, 1, 0, "scale"),
+                OpSpec::Pool { elems_out: 16 * 64 * 31 * 31, win: 4, name: "maxpool" },
+                ew(16 * 64 * 31 * 31, 2, 0, "clamp"),
+            ],
+        ),
+        mk(
+            "97_Matmul_BatchNorm_BiasAdd_Divide_Swish",
+            vec![
+                OpSpec::Matmul { m: 2048, n: 1024, k: 512 },
+                OpSpec::Norm { elems: 2048 * 1024, groups: 1024, name: "batchnorm" },
+                ew(2048 * 1024, 1, 0, "bias_add"),
+                ew(2048 * 1024, 1, 1, "divide"),
+                act(2048 * 1024, "swish"),
+            ],
+        ),
+        mk(
+            "99_Matmul_GELU_Softmax",
+            vec![
+                OpSpec::Matmul { m: 1024, n: 1024, k: 512 },
+                act(1024 * 1024, "gelu"),
+                OpSpec::Softmax { rows: 1024, cols: 1024 },
+            ],
+        ),
+    ]
+}
+
+/// The 12 robust-kbench tasks with published best kernels (Table 7).
+pub fn robust_kbench() -> Vec<TaskSpec> {
+    let mk = |id: &str, ops: Vec<OpSpec>, backward: bool| {
+        let mut t = TaskSpec::new(id, Suite::RobustKBench, ops);
+        t.backward = backward;
+        t
+    };
+    vec![
+        mk(
+            "layernorm_forward",
+            vec![OpSpec::Norm { elems: 64 * MB, groups: 64 * 1024, name: "layernorm" }],
+            false,
+        ),
+        mk(
+            "llama_ffw",
+            vec![
+                OpSpec::Matmul { m: 2048, n: 5504, k: 2048 },
+                ew(2048 * 5504, 4, 1, "silu_gate"),
+                OpSpec::Matmul { m: 2048, n: 2048, k: 5504 },
+            ],
+            false,
+        ),
+        mk(
+            "llama_rmsnorm_forward",
+            vec![OpSpec::Norm { elems: 2048 * 2048, groups: 2048, name: "rmsnorm" }],
+            false,
+        ),
+        mk(
+            "mnist_conv_relu_pool_forward",
+            vec![
+                OpSpec::Conv2d { n: 256, c_in: 1, c_out: 32, h: 28, w: 28, kh: 3, kw: 3 },
+                ew(256 * 32 * 26 * 26, 1, 0, "relu"),
+                OpSpec::Pool { elems_out: 256 * 32 * 13 * 13, win: 4, name: "maxpool" },
+            ],
+            false,
+        ),
+        mk(
+            "mnist_cross_entropy_backward",
+            vec![ew(256 * 10, 4, 1, "ce_grad"), OpSpec::Reduction { elems: 256 * 10, outputs: 256, name: "grad_reduce" }],
+            true,
+        ),
+        mk(
+            "mnist_cross_entropy_forward",
+            vec![OpSpec::Softmax { rows: 256, cols: 10 }, OpSpec::Reduction { elems: 256 * 10, outputs: 1, name: "nll" }],
+            false,
+        ),
+        mk(
+            "mnist_linear_backward",
+            vec![
+                OpSpec::Matmul { m: 784, n: 128, k: 256 },
+                OpSpec::Matmul { m: 256, n: 784, k: 128 },
+            ],
+            true,
+        ),
+        mk("mnist_linear_forward", vec![OpSpec::Matmul { m: 256, n: 128, k: 784 }], false),
+        mk(
+            "mnist_linear_relu_backward",
+            vec![
+                ew(256 * 128, 1, 0, "relu_grad"),
+                OpSpec::Matmul { m: 784, n: 128, k: 256 },
+                OpSpec::Matmul { m: 256, n: 784, k: 128 },
+            ],
+            true,
+        ),
+        mk(
+            "mnist_linear_relu_forward",
+            vec![OpSpec::Matmul { m: 256, n: 128, k: 784 }, ew(256 * 128, 1, 0, "relu")],
+            false,
+        ),
+        mk(
+            "mnist_pool_backward",
+            vec![OpSpec::Pool { elems_out: 256 * 32 * 26 * 26, win: 4, name: "maxpool_grad" }],
+            true,
+        ),
+        mk(
+            "resnet_block",
+            vec![
+                OpSpec::Conv2d { n: 16, c_in: 64, c_out: 64, h: 56, w: 56, kh: 3, kw: 3 },
+                OpSpec::Norm { elems: 16 * 64 * 56 * 56, groups: 64, name: "batchnorm" },
+                ew(16 * 64 * 56 * 56, 1, 0, "relu"),
+                OpSpec::Conv2d { n: 16, c_in: 64, c_out: 64, h: 56, w: 56, kh: 3, kw: 3 },
+                OpSpec::Norm { elems: 16 * 64 * 56 * 56, groups: 64, name: "batchnorm" },
+                ew(16 * 64 * 56 * 56, 2, 0, "residual_relu"),
+            ],
+            false,
+        ),
+    ]
+}
+
+/// §5.4 oneDNN comparison operations (Table 4).
+pub fn onednn_tasks() -> Vec<TaskSpec> {
+    let mut concat_ln = TaskSpec::new(
+        "concat_layernorm",
+        Suite::OneDnn,
+        vec![
+            OpSpec::Norm { elems: 8 * MB, groups: 8192, name: "layernorm" },
+            OpSpec::Concat { elems_out: 16 * MB },
+        ],
+    );
+    concat_ln.has_initial_impl = true;
+
+    let mut softmax = TaskSpec::new(
+        "softmax",
+        Suite::OneDnn,
+        vec![OpSpec::Softmax { rows: 16384, cols: 1024 }],
+    );
+    softmax.user_instructions = Some(
+        "Reduce the load on special function units: use the exp2-based \
+         online softmax formulation inspired by Flash Attention 4, keeping \
+         a running maximum and rescaling the running sum."
+            .to_string(),
+    );
+
+    vec![
+        concat_ln,
+        TaskSpec::new(
+            "matmul_relu_postop",
+            Suite::OneDnn,
+            vec![OpSpec::Matmul { m: 4096, n: 4096, k: 4096 }, ew(4096 * 4096, 1, 0, "relu")],
+        ),
+        TaskSpec::new(
+            "maxpool_linear",
+            Suite::OneDnn,
+            vec![
+                OpSpec::Pool { elems_out: 4 * MB, win: 4, name: "maxpool" },
+                OpSpec::Matmul { m: 4096, n: 512, k: 1024 },
+            ],
+        ),
+        TaskSpec::new(
+            "sum_reduction",
+            Suite::OneDnn,
+            vec![OpSpec::Reduction { elems: 64 * MB, outputs: 1024, name: "sum_reduce" }],
+        ),
+        softmax,
+    ]
+}
+
+/// §5.5 Llama 3.2 rotary-positional-embedding case-study task.
+pub fn llama_rope_task() -> TaskSpec {
+    let mut t = TaskSpec::new(
+        "llama_rope",
+        Suite::Custom,
+        vec![OpSpec::Rope { elems: 2 * 2048 * 32 * 64 }],
+    );
+    t.user_instructions = Some(
+        "Optimize apply_rotary_pos_emb (unsqueeze + rotate-half) for the \
+         Llama 3.2 1B attention block. Reduced precision is acceptable as \
+         long as a full model forward pass yields identical results."
+            .to_string(),
+    );
+    t
+}
+
+/// The 40-task representative subset (20 L1 + 20 L2) used in most
+/// experiments.
+pub fn representative_set() -> Vec<TaskSpec> {
+    let mut v = kernelbench_l1();
+    v.extend(kernelbench_l2());
+    v
+}
+
+/// The filtered KernelBench set (111 tasks: 80 L1, 31 L2) used in
+/// Table 2's first block. The 40 named representative tasks are included;
+/// the remainder are procedurally generated shape/op variants marked
+/// clean under the App. D criteria (the paper's additional 71 tasks are
+/// KernelBench problems we do not have verbatim — see DESIGN.md §2).
+pub fn filtered_kernelbench() -> Vec<TaskSpec> {
+    let mut v = representative_set();
+    let acts: [(&'static str, u64, u64); 6] = [
+        ("relu", 1, 0),
+        ("gelu", 4, 1),
+        ("tanh", 3, 1),
+        ("elu", 3, 1),
+        ("softplus", 3, 1),
+        ("hardsigmoid", 2, 0),
+    ];
+    // 60 extra L1 variants: activations, reductions, matmuls, convs.
+    for i in 0..60u64 {
+        let id = format!("L1_extra_{i:02}");
+        let ops = match i % 5 {
+            0 => {
+                let (name, f, s) = acts[(i / 5) as usize % acts.len()];
+                vec![ew((4 + (i % 4)) * 4 * MB, f, s, name)]
+            }
+            1 => vec![OpSpec::Matmul {
+                m: 512 << (i % 3),
+                n: 512 << ((i / 3) % 3),
+                k: 256 << (i % 4),
+            }],
+            2 => vec![OpSpec::Reduction {
+                elems: (8 + (i % 8)) * MB,
+                outputs: 1 << (4 + i % 8),
+                name: "sum_reduce",
+            }],
+            3 => vec![OpSpec::Conv2d {
+                n: 8,
+                c_in: 16 << (i % 3),
+                c_out: 32,
+                h: 64 << (i % 2),
+                w: 64 << (i % 2),
+                kh: 1 + 2 * (i % 3),
+                kw: 1 + 2 * (i % 3),
+            }],
+            _ => vec![OpSpec::Norm {
+                elems: (4 + (i % 6)) * 4 * MB,
+                groups: 1 << (6 + i % 6),
+                name: if i % 2 == 0 { "layernorm" } else { "rmsnorm" },
+            }],
+        };
+        v.push(TaskSpec::new(&id, Suite::KernelBenchL1, ops));
+    }
+    // 11 extra L2 fusion variants.
+    for i in 0..11u64 {
+        let id = format!("L2_extra_{i:02}");
+        let elems = (2 + (i % 4)) * 4 * MB;
+        let (name, f, s) = acts[i as usize % acts.len()];
+        let mut ops = vec![
+            OpSpec::Matmul { m: 1024, n: 1024, k: 256 << (i % 3) },
+            ew(1024 * 1024, f, s, name),
+        ];
+        if i % 2 == 0 {
+            ops.push(OpSpec::Norm { elems, groups: 1024, name: "layernorm" });
+        }
+        if i % 3 == 0 {
+            ops.push(OpSpec::Softmax { rows: 1024, cols: 1024 });
+        }
+        v.push(TaskSpec::new(&id, Suite::KernelBenchL2, ops));
+    }
+    v
+}
+
+/// Example compromised tasks (for App. D filtering tests): each trips one
+/// of the Lange et al. criteria.
+pub fn compromised_examples() -> Vec<TaskSpec> {
+    let mut a = TaskSpec::new("comp_small_range", Suite::KernelBenchL1, vec![ew(MB, 1, 0, "clip")]);
+    a.flags = FilterFlags { small_range: true, ..FilterFlags::clean() };
+    let mut b = TaskSpec::new("comp_axis_std", Suite::KernelBenchL1, vec![ew(MB, 1, 0, "mul")]);
+    b.flags = FilterFlags { small_axis_std: true, ..FilterFlags::clean() };
+    let mut c = TaskSpec::new(
+        "comp_slow_baseline",
+        Suite::KernelBenchL2,
+        vec![ew(MB, 1, 0, "chain")],
+    );
+    c.flags = FilterFlags { inefficient_baseline: true, ..FilterFlags::clean() };
+    vec![a, b, c]
+}
+
+/// Look up any task across all suites by id.
+pub fn find_task(id: &str) -> Option<TaskSpec> {
+    all_tasks().into_iter().find(|t| t.id == id)
+}
+
+pub fn all_tasks() -> Vec<TaskSpec> {
+    let mut v = filtered_kernelbench();
+    v.extend(robust_kbench());
+    v.extend(onednn_tasks());
+    v.push(llama_rope_task());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_sizes_match_paper() {
+        assert_eq!(kernelbench_l1().len(), 20);
+        assert_eq!(kernelbench_l2().len(), 20);
+        assert_eq!(robust_kbench().len(), 12);
+        assert_eq!(onednn_tasks().len(), 5);
+        assert_eq!(representative_set().len(), 40);
+        assert_eq!(filtered_kernelbench().len(), 111);
+    }
+
+    #[test]
+    fn task_ids_unique() {
+        let all = all_tasks();
+        let mut ids: Vec<&str> = all.iter().map(|t| t.id.as_str()).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn l2_tasks_are_fusion_chains() {
+        for t in kernelbench_l2() {
+            assert!(t.n_ops() >= 2, "{} has {} ops", t.id, t.n_ops());
+            assert!(t.fused_bytes() < t.eager_bytes(), "{}", t.id);
+        }
+    }
+
+    #[test]
+    fn backward_flags_match_table7() {
+        let rkb = robust_kbench();
+        let backward: Vec<&str> = rkb
+            .iter()
+            .filter(|t| t.backward)
+            .map(|t| t.id.as_str())
+            .collect();
+        assert_eq!(
+            backward,
+            vec![
+                "mnist_cross_entropy_backward",
+                "mnist_linear_backward",
+                "mnist_linear_relu_backward",
+                "mnist_pool_backward"
+            ]
+        );
+    }
+
+    #[test]
+    fn onednn_custom_inputs() {
+        let tasks = onednn_tasks();
+        let concat = tasks.iter().find(|t| t.id == "concat_layernorm").unwrap();
+        assert!(concat.has_initial_impl);
+        let softmax = tasks.iter().find(|t| t.id == "softmax").unwrap();
+        assert!(softmax.user_instructions.as_ref().unwrap().contains("exp2"));
+    }
+
+    #[test]
+    fn representative_tasks_clean_under_filters() {
+        for t in representative_set() {
+            assert!(!t.flags.compromised_strict(), "{}", t.id);
+        }
+        for t in compromised_examples() {
+            assert!(t.flags.compromised_strict(), "{}", t.id);
+        }
+    }
+
+    #[test]
+    fn find_task_by_id() {
+        assert!(find_task("99_Matmul_GELU_Softmax").is_some());
+        assert!(find_task("llama_rope").is_some());
+        assert!(find_task("nonexistent").is_none());
+    }
+}

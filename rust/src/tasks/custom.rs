@@ -1,0 +1,252 @@
+//! Custom task input layer (App. C).
+//!
+//! "Tasks are defined by a set of files with special markers … a config
+//! file in YAML format containing hyperparameters; a python module with a
+//! build function and correctness and performance tests defined in the
+//! pytest framework; and a language-specific file for the generated code.
+//! Special markers are used to define sections for the reference code,
+//! optional user instructions, and optional initial kernel
+//! implementations passed to the model."
+//!
+//! This module parses that exact format. The pytest hooks are represented
+//! by the test command recorded in the config (executed by the evaluation
+//! pipeline's custom-task path).
+
+use super::{OpSpec, Suite, TaskSpec};
+use crate::util::json::Json;
+use crate::util::yamlite;
+use std::path::Path;
+
+/// Section markers in the language-specific source file.
+pub const MARK_REFERENCE: &str = "### KF:REFERENCE ###";
+pub const MARK_INSTRUCTIONS: &str = "### KF:INSTRUCTIONS ###";
+pub const MARK_INITIAL: &str = "### KF:INITIAL_KERNEL ###";
+pub const MARK_END: &str = "### KF:END ###";
+
+/// A parsed custom task bundle.
+#[derive(Debug, Clone)]
+pub struct CustomTask {
+    pub spec: TaskSpec,
+    pub config: Json,
+    pub reference_code: String,
+    pub initial_kernel: Option<String>,
+    /// pytest invocation for user-defined correctness/perf tests.
+    pub test_command: Option<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CustomTaskError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("yaml error: {0}")]
+    Yaml(#[from] yamlite::YamlError),
+    #[error("marker error: {0}")]
+    Marker(String),
+}
+
+/// Load a custom task from a directory containing `task.yaml` and a
+/// marker-annotated source file (`task.py` / `kernel.cpp`).
+pub fn load_dir(dir: &Path) -> Result<CustomTask, CustomTaskError> {
+    let config_text = std::fs::read_to_string(dir.join("task.yaml"))?;
+    let source_path = ["task.py", "kernel.cpp", "kernel.cu"]
+        .iter()
+        .map(|f| dir.join(f))
+        .find(|p| p.exists())
+        .ok_or_else(|| CustomTaskError::Marker("no task.py / kernel.cpp found".into()))?;
+    let source_text = std::fs::read_to_string(source_path)?;
+    load_strings(&config_text, &source_text)
+}
+
+/// Parse from in-memory strings (used by tests and the example).
+pub fn load_strings(config_text: &str, source_text: &str) -> Result<CustomTask, CustomTaskError> {
+    let config = yamlite::parse(config_text)?;
+    let id = config
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| CustomTaskError::Config("missing 'name'".into()))?
+        .to_string();
+
+    let reference_code = extract_section(source_text, MARK_REFERENCE)
+        .ok_or_else(|| CustomTaskError::Marker(format!("missing {MARK_REFERENCE} section")))?;
+    let instructions = extract_section(source_text, MARK_INSTRUCTIONS);
+    let initial_kernel = extract_section(source_text, MARK_INITIAL);
+
+    let ops = parse_workload(&config)?;
+    let mut spec = TaskSpec::new(&id, Suite::Custom, ops);
+    spec.user_instructions = instructions;
+    spec.has_initial_impl = initial_kernel.is_some();
+    if let Some(b) = config.get("backward").and_then(|v| v.as_bool()) {
+        spec.backward = b;
+    }
+
+    let test_command = config
+        .get_path("tests.command")
+        .and_then(|v| v.as_str())
+        .map(String::from);
+
+    Ok(CustomTask {
+        spec,
+        config,
+        reference_code,
+        initial_kernel,
+        test_command,
+    })
+}
+
+/// Extract the text between a marker and the next marker / MARK_END.
+fn extract_section(source: &str, marker: &str) -> Option<String> {
+    let start = source.find(marker)? + marker.len();
+    let rest = &source[start..];
+    let end = [MARK_REFERENCE, MARK_INSTRUCTIONS, MARK_INITIAL, MARK_END]
+        .iter()
+        .filter_map(|m| rest.find(m))
+        .min()
+        .unwrap_or(rest.len());
+    let text = rest[..end].trim();
+    if text.is_empty() {
+        None
+    } else {
+        Some(text.to_string())
+    }
+}
+
+/// Workload description from the config (so the hardware simulator can
+/// cost custom tasks):
+///
+/// ```yaml
+/// workload:
+///   - op: matmul
+///     m: 1024
+///     n: 1024
+///     k: 512
+///   - op: elementwise
+///     elems: 1048576
+///     flops_per_elem: 4
+///     sfu_per_elem: 1
+/// ```
+fn parse_workload(config: &Json) -> Result<Vec<OpSpec>, CustomTaskError> {
+    let items = config
+        .get("workload")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| CustomTaskError::Config("missing 'workload' list".into()))?;
+    let geti = |o: &Json, k: &str, default: u64| -> u64 {
+        o.get(k).and_then(|v| v.as_i64()).map(|v| v as u64).unwrap_or(default)
+    };
+    let mut ops = Vec::new();
+    for item in items {
+        let kind = item
+            .get("op")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| CustomTaskError::Config("workload item missing 'op'".into()))?;
+        let op = match kind {
+            "matmul" => OpSpec::Matmul {
+                m: geti(item, "m", 1024),
+                n: geti(item, "n", 1024),
+                k: geti(item, "k", 1024),
+            },
+            "elementwise" => OpSpec::Elementwise {
+                elems: geti(item, "elems", 1 << 20),
+                flops_per_elem: geti(item, "flops_per_elem", 1),
+                sfu_per_elem: geti(item, "sfu_per_elem", 0),
+                name: "custom_elementwise",
+            },
+            "softmax" => OpSpec::Softmax {
+                rows: geti(item, "rows", 1024),
+                cols: geti(item, "cols", 1024),
+            },
+            "norm" => OpSpec::Norm {
+                elems: geti(item, "elems", 1 << 20),
+                groups: geti(item, "groups", 1024),
+                name: "custom_norm",
+            },
+            "reduction" => OpSpec::Reduction {
+                elems: geti(item, "elems", 1 << 20),
+                outputs: geti(item, "outputs", 1),
+                name: "custom_reduce",
+            },
+            "rope" => OpSpec::Rope {
+                elems: geti(item, "elems", 1 << 20),
+            },
+            other => {
+                return Err(CustomTaskError::Config(format!("unknown op kind '{other}'")))
+            }
+        };
+        ops.push(op);
+    }
+    if ops.is_empty() {
+        return Err(CustomTaskError::Config("empty workload".into()));
+    }
+    Ok(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CONFIG: &str = "\
+name: rope_task
+backward: false
+workload:
+  - op: rope
+    elems: 8388608
+tests:
+  command: pytest python/tests/test_rope.py -q
+evolution:
+  max_generations: 10
+";
+
+    const SOURCE: &str = "\
+### KF:REFERENCE ###
+def apply_rotary_pos_emb(q, k, cos, sin):
+    return (q * cos) + (rotate_half(q) * sin), (k * cos) + (rotate_half(k) * sin)
+### KF:INSTRUCTIONS ###
+Optimize for Intel B580; reduced precision allowed.
+### KF:INITIAL_KERNEL ###
+// naive elementwise rope kernel
+### KF:END ###
+";
+
+    #[test]
+    fn parses_full_bundle() {
+        let t = load_strings(CONFIG, SOURCE).unwrap();
+        assert_eq!(t.spec.id, "rope_task");
+        assert_eq!(t.spec.suite, Suite::Custom);
+        assert!(t.reference_code.contains("apply_rotary_pos_emb"));
+        assert_eq!(
+            t.spec.user_instructions.as_deref(),
+            Some("Optimize for Intel B580; reduced precision allowed.")
+        );
+        assert!(t.initial_kernel.is_some());
+        assert!(t.spec.has_initial_impl);
+        assert_eq!(
+            t.test_command.as_deref(),
+            Some("pytest python/tests/test_rope.py -q")
+        );
+        assert_eq!(t.spec.ops.len(), 1);
+    }
+
+    #[test]
+    fn instructions_and_initial_optional() {
+        let src = "### KF:REFERENCE ###\nref code\n### KF:END ###\n";
+        let t = load_strings(CONFIG, src).unwrap();
+        assert!(t.spec.user_instructions.is_none());
+        assert!(t.initial_kernel.is_none());
+    }
+
+    #[test]
+    fn missing_reference_fails() {
+        let src = "### KF:INSTRUCTIONS ###\nhello\n### KF:END ###\n";
+        assert!(load_strings(CONFIG, src).is_err());
+    }
+
+    #[test]
+    fn bad_workload_fails() {
+        let cfg = "name: x\nworkload:\n  - op: warpdrive\n";
+        let src = "### KF:REFERENCE ###\nref\n### KF:END ###\n";
+        assert!(load_strings(cfg, src).is_err());
+        let cfg2 = "name: x\n";
+        assert!(load_strings(cfg2, src).is_err());
+    }
+}

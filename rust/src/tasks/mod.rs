@@ -1,0 +1,421 @@
+//! Task model: the problems kernels are generated for.
+//!
+//! A [`TaskSpec`] corresponds to one KernelBench / robust-kbench / custom
+//! task: an operation chain with concrete tensor shapes, a workload
+//! accounting model (bytes moved, FLOPs, special-function ops) used by the
+//! hardware simulator, and metadata driving task filtering (App. D) and
+//! the custom input layer (App. C).
+
+pub mod catalog;
+pub mod custom;
+
+use crate::util::json::Json;
+
+/// Benchmark family a task belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Suite {
+    /// KernelBench level 1: single operators.
+    KernelBenchL1,
+    /// KernelBench level 2: fusion patterns.
+    KernelBenchL2,
+    /// robust-kbench (includes forward-backward operations).
+    RobustKBench,
+    /// §5.4 oneDNN comparison ops.
+    OneDnn,
+    /// User-provided custom task (App. C format).
+    Custom,
+}
+
+impl Suite {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Suite::KernelBenchL1 => "kernelbench-l1",
+            Suite::KernelBenchL2 => "kernelbench-l2",
+            Suite::RobustKBench => "robust-kbench",
+            Suite::OneDnn => "onednn",
+            Suite::Custom => "custom",
+        }
+    }
+}
+
+/// One logical operation in a task's op chain, with enough shape
+/// information to account for its memory traffic and compute.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpSpec {
+    /// Dense matmul  (m×k)·(k×n).
+    Matmul { m: u64, n: u64, k: u64 },
+    /// 2-D convolution over NCHW input.
+    Conv2d { n: u64, c_in: u64, c_out: u64, h: u64, w: u64, kh: u64, kw: u64 },
+    /// 3-D convolution.
+    Conv3d { n: u64, c_in: u64, c_out: u64, d: u64, h: u64, w: u64, k: u64 },
+    /// Transposed convolution (same accounting as conv with swapped channels).
+    ConvTranspose2d { n: u64, c_in: u64, c_out: u64, h: u64, w: u64, kh: u64, kw: u64 },
+    ConvTranspose3d { n: u64, c_in: u64, c_out: u64, d: u64, h: u64, w: u64, k: u64 },
+    /// Elementwise op over `elems` elements; `flops_per_elem` arithmetic
+    /// ops and `sfu_per_elem` special-function ops (exp/tanh/erf/div).
+    Elementwise { elems: u64, flops_per_elem: u64, sfu_per_elem: u64, name: &'static str },
+    /// Reduction of `elems` inputs down to `outputs` values.
+    Reduction { elems: u64, outputs: u64, name: &'static str },
+    /// Row-wise softmax over `rows` rows of `cols` (2 passes + exp).
+    Softmax { rows: u64, cols: u64 },
+    /// Normalization (layernorm / instancenorm / batchnorm / rmsnorm /
+    /// groupnorm) over `elems` with `groups` statistics groups.
+    Norm { elems: u64, groups: u64, name: &'static str },
+    /// Pooling with window `win` over `elems` outputs.
+    Pool { elems_out: u64, win: u64, name: &'static str },
+    /// Concatenation producing `elems_out` elements.
+    Concat { elems_out: u64 },
+    /// Cumulative sum along rows.
+    Cumsum { rows: u64, cols: u64 },
+    /// Rotary positional embedding applied to q/k of `elems` elements.
+    Rope { elems: u64 },
+}
+
+pub const F32: u64 = 4;
+
+impl OpSpec {
+    /// Bytes read from global memory when the op runs standalone.
+    pub fn bytes_read(&self) -> u64 {
+        match self {
+            OpSpec::Matmul { m, n, k } => (m * k + k * n) * F32,
+            OpSpec::Conv2d { n, c_in, c_out, h, w, kh, kw } => {
+                (n * c_in * h * w + c_out * c_in * kh * kw) * F32
+            }
+            OpSpec::Conv3d { n, c_in, c_out, d, h, w, k } => {
+                (n * c_in * d * h * w + c_out * c_in * k * k * k) * F32
+            }
+            OpSpec::ConvTranspose2d { n, c_in, c_out, h, w, kh, kw } => {
+                (n * c_in * h * w + c_in * c_out * kh * kw) * F32
+            }
+            OpSpec::ConvTranspose3d { n, c_in, c_out, d, h, w, k } => {
+                (n * c_in * d * h * w + c_in * c_out * k * k * k) * F32
+            }
+            OpSpec::Elementwise { elems, .. } => elems * F32,
+            OpSpec::Reduction { elems, .. } => elems * F32,
+            OpSpec::Softmax { rows, cols } => 2 * rows * cols * F32, // two passes
+            OpSpec::Norm { elems, .. } => 2 * elems * F32,           // stats + normalize
+            OpSpec::Pool { elems_out, win, .. } => elems_out * win * F32,
+            OpSpec::Concat { elems_out } => elems_out * F32,
+            OpSpec::Cumsum { rows, cols } => rows * cols * F32,
+            OpSpec::Rope { elems } => (elems + elems / 2) * F32, // x + cos/sin tables
+        }
+    }
+
+    /// Bytes written to global memory when the op runs standalone.
+    pub fn bytes_written(&self) -> u64 {
+        match self {
+            OpSpec::Matmul { m, n, .. } => m * n * F32,
+            OpSpec::Conv2d { n, c_out, h, w, .. } => n * c_out * h * w * F32,
+            OpSpec::Conv3d { n, c_out, d, h, w, .. } => n * c_out * d * h * w * F32,
+            OpSpec::ConvTranspose2d { n, c_out, h, w, .. } => n * c_out * h * w * F32,
+            OpSpec::ConvTranspose3d { n, c_out, d, h, w, .. } => n * c_out * d * h * w * F32,
+            OpSpec::Elementwise { elems, .. } => elems * F32,
+            OpSpec::Reduction { outputs, .. } => outputs * F32,
+            OpSpec::Softmax { rows, cols } => rows * cols * F32,
+            OpSpec::Norm { elems, .. } => elems * F32,
+            OpSpec::Pool { elems_out, .. } => elems_out * F32,
+            OpSpec::Concat { elems_out } => elems_out * F32,
+            OpSpec::Cumsum { rows, cols } => rows * cols * F32,
+            OpSpec::Rope { elems } => elems * F32,
+        }
+    }
+
+    /// Floating-point operations.
+    pub fn flops(&self) -> u64 {
+        match self {
+            OpSpec::Matmul { m, n, k } => 2 * m * n * k,
+            OpSpec::Conv2d { n, c_in, c_out, h, w, kh, kw } => 2 * n * c_out * h * w * c_in * kh * kw,
+            OpSpec::Conv3d { n, c_in, c_out, d, h, w, k } => {
+                2 * n * c_out * d * h * w * c_in * k * k * k
+            }
+            OpSpec::ConvTranspose2d { n, c_in, c_out, h, w, kh, kw } => {
+                2 * n * c_out * h * w * c_in * kh * kw
+            }
+            OpSpec::ConvTranspose3d { n, c_in, c_out, d, h, w, k } => {
+                2 * n * c_out * d * h * w * c_in * k * k * k
+            }
+            OpSpec::Elementwise { elems, flops_per_elem, .. } => elems * flops_per_elem,
+            OpSpec::Reduction { elems, .. } => *elems,
+            OpSpec::Softmax { rows, cols } => 4 * rows * cols,
+            OpSpec::Norm { elems, .. } => 6 * elems,
+            OpSpec::Pool { elems_out, win, .. } => elems_out * win,
+            OpSpec::Concat { .. } => 0,
+            OpSpec::Cumsum { rows, cols } => rows * cols,
+            OpSpec::Rope { elems } => 4 * elems,
+        }
+    }
+
+    /// Special-function-unit operations (exp, tanh, erf, rsqrt, div).
+    pub fn sfu_ops(&self) -> u64 {
+        match self {
+            OpSpec::Softmax { rows, cols } => rows * cols + rows, // exp per element + div per row
+            OpSpec::Norm { elems, groups, .. } => groups + elems, // rsqrt + div
+            OpSpec::Elementwise { elems, sfu_per_elem, .. } => elems * sfu_per_elem,
+            OpSpec::Rope { elems } => *elems, // sin/cos application
+            _ => 0,
+        }
+    }
+
+    /// Bytes of this op's inputs that are *parameters / second streams*
+    /// (weights, tables) rather than the activation produced by a
+    /// predecessor — the traffic a fused kernel must still pay.
+    pub fn param_bytes(&self) -> u64 {
+        match self {
+            OpSpec::Matmul { n, k, .. } => k * n * F32,
+            OpSpec::Conv2d { c_in, c_out, kh, kw, .. } => c_out * c_in * kh * kw * F32,
+            OpSpec::Conv3d { c_in, c_out, k, .. } => c_out * c_in * k * k * k * F32,
+            OpSpec::ConvTranspose2d { c_in, c_out, kh, kw, .. } => c_in * c_out * kh * kw * F32,
+            OpSpec::ConvTranspose3d { c_in, c_out, k, .. } => c_in * c_out * k * k * k * F32,
+            OpSpec::Rope { elems } => elems / 2 * F32, // cos/sin tables
+            // Pure activation transforms: nothing extra to read when fused.
+            _ => 0,
+        }
+    }
+
+    /// Whether this op admits an algorithmic reformulation (online
+    /// normalization / flash-style streaming), enabling d_algo = 2.
+    pub fn supports_reformulation(&self) -> bool {
+        matches!(
+            self,
+            OpSpec::Softmax { .. } | OpSpec::Norm { .. } | OpSpec::Cumsum { .. }
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpSpec::Matmul { .. } => "matmul",
+            OpSpec::Conv2d { .. } => "conv2d",
+            OpSpec::Conv3d { .. } => "conv3d",
+            OpSpec::ConvTranspose2d { .. } => "conv_transpose2d",
+            OpSpec::ConvTranspose3d { .. } => "conv_transpose3d",
+            OpSpec::Elementwise { name, .. } => name,
+            OpSpec::Reduction { name, .. } => name,
+            OpSpec::Softmax { .. } => "softmax",
+            OpSpec::Norm { name, .. } => name,
+            OpSpec::Pool { name, .. } => name,
+            OpSpec::Concat { .. } => "concat",
+            OpSpec::Cumsum { .. } => "cumsum",
+            OpSpec::Rope { .. } => "rope",
+        }
+    }
+
+    /// Compute-bound ops benefit from tiling; memory-bound ops benefit
+    /// mostly from coalescing/fusion. Arithmetic intensity in FLOP/byte.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let bytes = (self.bytes_read() + self.bytes_written()) as f64;
+        if bytes == 0.0 {
+            0.0
+        } else {
+            self.flops() as f64 / bytes
+        }
+    }
+}
+
+/// App. D filtering flags (Lange et al. criteria 1–5).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FilterFlags {
+    /// (1) small output value range.
+    pub small_range: bool,
+    /// (2) small output standard deviation.
+    pub small_std: bool,
+    /// (3) small output StD across some axis.
+    pub small_axis_std: bool,
+    /// (4) small impact of inputs on the output.
+    pub input_insensitive: bool,
+    /// (5) baseline inefficiencies.
+    pub inefficient_baseline: bool,
+}
+
+impl FilterFlags {
+    pub fn clean() -> FilterFlags {
+        FilterFlags::default()
+    }
+
+    /// Compromised under the strict (1)–(5) criteria (robust-kbench set).
+    pub fn compromised_strict(&self) -> bool {
+        self.small_range
+            || self.small_std
+            || self.small_axis_std
+            || self.input_insensitive
+            || self.inefficient_baseline
+    }
+
+    /// Compromised under the relaxed criteria the paper argues for
+    /// (App. D): only (1), (2) and (4).
+    pub fn compromised_relaxed(&self) -> bool {
+        self.small_range || self.small_std || self.input_insensitive
+    }
+}
+
+/// A complete task specification.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub id: String,
+    pub suite: Suite,
+    /// The operation chain; length > 1 for fusion (L2) tasks.
+    pub ops: Vec<OpSpec>,
+    /// robust-kbench backward tasks measure through torch.autograd on the
+    /// baseline side (App. B.2), which inflates baseline time.
+    pub backward: bool,
+    pub flags: FilterFlags,
+    /// Free-form user instructions (custom tasks, §5.4 softmax guidance).
+    pub user_instructions: Option<String>,
+    /// Whether the task ships an initial kernel implementation to start
+    /// from (custom tasks, §5.4 concat+layernorm).
+    pub has_initial_impl: bool,
+}
+
+impl TaskSpec {
+    pub fn new(id: &str, suite: Suite, ops: Vec<OpSpec>) -> TaskSpec {
+        TaskSpec {
+            id: id.to_string(),
+            suite,
+            ops,
+            backward: false,
+            flags: FilterFlags::clean(),
+            user_instructions: None,
+            has_initial_impl: false,
+        }
+    }
+
+    /// Total standalone (op-by-op) memory traffic in bytes — what the
+    /// eager baseline moves.
+    pub fn eager_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|o| o.bytes_read() + o.bytes_written())
+            .sum()
+    }
+
+    /// Memory traffic of a perfectly fused single-pass kernel: external
+    /// inputs of the first op + the final output + the parameter traffic
+    /// (weights, tables) of downstream ops. Intermediate activations stay
+    /// in registers/SLM and cost nothing.
+    pub fn fused_bytes(&self) -> u64 {
+        let first_read = self.ops.first().map(|o| o.bytes_read()).unwrap_or(0);
+        let last_write = self.ops.last().map(|o| o.bytes_written()).unwrap_or(0);
+        let params: u64 = self.ops.iter().skip(1).map(|o| o.param_bytes()).sum();
+        first_read + last_write + params
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.ops.iter().map(|o| o.flops()).sum()
+    }
+
+    pub fn total_sfu(&self) -> u64 {
+        self.ops.iter().map(|o| o.sfu_ops()).sum()
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn supports_reformulation(&self) -> bool {
+        self.ops.iter().any(|o| o.supports_reformulation())
+    }
+
+    /// Dominant arithmetic intensity, used by hwsim and by the simulated
+    /// model's "analysis" of likely bottlenecks.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.total_flops() as f64 / self.eager_bytes().max(1) as f64
+    }
+
+    /// SFU pressure: special-function ops per byte moved.
+    pub fn sfu_intensity(&self) -> f64 {
+        self.total_sfu() as f64 / self.eager_bytes().max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", self.id.as_str())
+            .set("suite", self.suite.name())
+            .set("n_ops", self.n_ops())
+            .set("backward", self.backward)
+            .set("flops", self.total_flops() as f64)
+            .set("eager_bytes", self.eager_bytes() as f64)
+            .set("fused_bytes", self.fused_bytes() as f64)
+            .set("sfu_ops", self.total_sfu() as f64);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_workload_accounting() {
+        let m = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        assert_eq!(m.flops(), 2 * 64 * 64 * 64);
+        assert_eq!(m.bytes_read(), 2 * 64 * 64 * 4);
+        assert_eq!(m.bytes_written(), 64 * 64 * 4);
+        assert!(m.arithmetic_intensity() > 10.0);
+    }
+
+    #[test]
+    fn elementwise_is_memory_bound() {
+        let e = OpSpec::Elementwise { elems: 1 << 20, flops_per_elem: 2, sfu_per_elem: 0, name: "relu" };
+        assert!(e.arithmetic_intensity() < 1.0);
+    }
+
+    #[test]
+    fn fusion_reduces_traffic() {
+        let elems = 1u64 << 20;
+        let chain = TaskSpec::new(
+            "fused",
+            Suite::KernelBenchL2,
+            vec![
+                OpSpec::Elementwise { elems, flops_per_elem: 1, sfu_per_elem: 0, name: "bias" },
+                OpSpec::Elementwise { elems, flops_per_elem: 4, sfu_per_elem: 1, name: "gelu" },
+                OpSpec::Elementwise { elems, flops_per_elem: 1, sfu_per_elem: 0, name: "scale" },
+            ],
+        );
+        // Eager: 3 × (read + write); fused: 1 × (read + write).
+        assert_eq!(chain.eager_bytes(), 3 * 2 * elems * F32);
+        assert_eq!(chain.fused_bytes(), 2 * elems * F32);
+    }
+
+    #[test]
+    fn fused_bytes_keeps_parameter_traffic() {
+        // matmul -> norm: the norm re-reads stats but its input comes from
+        // the matmul; weight traffic of the matmul is preserved.
+        let t = TaskSpec::new(
+            "mm_norm",
+            Suite::KernelBenchL2,
+            vec![
+                OpSpec::Matmul { m: 128, n: 128, k: 128 },
+                OpSpec::Norm { elems: 128 * 128, groups: 128, name: "layernorm" },
+            ],
+        );
+        assert!(t.fused_bytes() < t.eager_bytes());
+        assert!(t.fused_bytes() >= t.ops[0].bytes_read());
+    }
+
+    #[test]
+    fn softmax_supports_reformulation() {
+        let t = TaskSpec::new(
+            "softmax",
+            Suite::KernelBenchL1,
+            vec![OpSpec::Softmax { rows: 1024, cols: 1024 }],
+        );
+        assert!(t.supports_reformulation());
+        assert!(t.total_sfu() > 0);
+    }
+
+    #[test]
+    fn filter_flags_strict_vs_relaxed() {
+        let f = FilterFlags {
+            small_axis_std: true,
+            ..FilterFlags::clean()
+        };
+        assert!(f.compromised_strict());
+        assert!(!f.compromised_relaxed()); // criterion (3) relaxed away
+
+        let g = FilterFlags {
+            inefficient_baseline: true,
+            ..FilterFlags::clean()
+        };
+        assert!(g.compromised_strict());
+        assert!(!g.compromised_relaxed()); // criterion (5) relaxed away
+    }
+}

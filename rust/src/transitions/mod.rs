@@ -1,0 +1,215 @@
+//! Transition tracking (§3.3, Fig. 2).
+//!
+//! A circular buffer of recent parent→child transitions. Each record
+//! stores the parent and child behavioral coordinates, the fitness delta,
+//! the transition outcome (improvement / neutral / regression), and a
+//! timestamp + iteration number for temporal weighting.
+
+use crate::archive::InsertOutcome;
+use crate::classify::Coords;
+
+/// Outcome of a transition, as the paper defines it: *improvement* when
+/// the child becomes an elite or discovers a new cell, *neutral* when it
+/// is competitive but does not update the archive, *regression* when
+/// fitness decreases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Improvement,
+    Neutral,
+    Regression,
+}
+
+impl Outcome {
+    /// Derive the outcome from the archive insertion result and the
+    /// fitness delta.
+    pub fn from_insertion(insert: InsertOutcome, delta_f: f64) -> Outcome {
+        match insert {
+            InsertOutcome::NewCell | InsertOutcome::Improved => Outcome::Improvement,
+            InsertOutcome::Neutral => {
+                if delta_f < 0.0 {
+                    Outcome::Regression
+                } else {
+                    Outcome::Neutral
+                }
+            }
+            InsertOutcome::Rejected => Outcome::Regression,
+        }
+    }
+}
+
+/// One parent→child transition record.
+#[derive(Debug, Clone, Copy)]
+pub struct Transition {
+    pub parent_coords: Coords,
+    pub child_coords: Coords,
+    pub parent_fitness: f64,
+    pub child_fitness: f64,
+    pub outcome: Outcome,
+    /// Iteration at which the transition happened (for time decay).
+    pub iteration: usize,
+}
+
+impl Transition {
+    pub fn delta_f(&self) -> f64 {
+        self.child_fitness - self.parent_fitness
+    }
+
+    /// Signed movement along behavioral dimension `d`.
+    pub fn delta_b(&self, d: usize) -> i64 {
+        self.child_coords[d] as i64 - self.parent_coords[d] as i64
+    }
+}
+
+/// Fixed-capacity circular buffer of transitions.
+#[derive(Debug, Clone)]
+pub struct TransitionTracker {
+    buf: Vec<Transition>,
+    capacity: usize,
+    head: usize,
+    total_recorded: usize,
+}
+
+impl TransitionTracker {
+    pub fn new(capacity: usize) -> TransitionTracker {
+        assert!(capacity > 0);
+        TransitionTracker {
+            buf: Vec::with_capacity(capacity),
+            capacity,
+            head: 0,
+            total_recorded: 0,
+        }
+    }
+
+    pub fn record(&mut self, t: Transition) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.head] = t;
+            self.head = (self.head + 1) % self.capacity;
+        }
+        self.total_recorded += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn total_recorded(&self) -> usize {
+        self.total_recorded
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Transition> {
+        self.buf.iter()
+    }
+
+    /// Transitions originating from a given cell — the set `T` in eq. 1.
+    pub fn from_cell(&self, coords: Coords) -> Vec<&Transition> {
+        self.buf
+            .iter()
+            .filter(|t| t.parent_coords == coords)
+            .collect()
+    }
+
+    /// Fraction of recorded (in-buffer) transitions that improved.
+    pub fn improvement_rate(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf
+            .iter()
+            .filter(|t| t.outcome == Outcome::Improvement)
+            .count() as f64
+            / self.buf.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(parent: Coords, child: Coords, pf: f64, cf: f64, iter: usize) -> Transition {
+        Transition {
+            parent_coords: parent,
+            child_coords: child,
+            parent_fitness: pf,
+            child_fitness: cf,
+            outcome: if cf > pf {
+                Outcome::Improvement
+            } else if cf == pf {
+                Outcome::Neutral
+            } else {
+                Outcome::Regression
+            },
+            iteration: iter,
+        }
+    }
+
+    #[test]
+    fn circular_overwrite() {
+        let mut tr = TransitionTracker::new(3);
+        for i in 0..5 {
+            tr.record(t([0, 0, 0], [1, 0, 0], 0.1, 0.2, i));
+        }
+        assert_eq!(tr.len(), 3);
+        assert_eq!(tr.total_recorded(), 5);
+        // Oldest two (iterations 0, 1) were evicted.
+        let iters: Vec<usize> = tr.iter().map(|x| x.iteration).collect();
+        assert!(iters.contains(&4) && iters.contains(&3) && iters.contains(&2));
+    }
+
+    #[test]
+    fn from_cell_filters() {
+        let mut tr = TransitionTracker::new(8);
+        tr.record(t([0, 0, 0], [1, 0, 0], 0.1, 0.3, 0));
+        tr.record(t([1, 1, 1], [1, 2, 1], 0.3, 0.4, 1));
+        tr.record(t([0, 0, 0], [0, 1, 0], 0.1, 0.05, 2));
+        assert_eq!(tr.from_cell([0, 0, 0]).len(), 2);
+        assert_eq!(tr.from_cell([1, 1, 1]).len(), 1);
+        assert_eq!(tr.from_cell([2, 2, 2]).len(), 0);
+    }
+
+    #[test]
+    fn outcome_from_insertion_matches_paper() {
+        assert_eq!(
+            Outcome::from_insertion(InsertOutcome::NewCell, 0.1),
+            Outcome::Improvement
+        );
+        assert_eq!(
+            Outcome::from_insertion(InsertOutcome::Improved, 0.1),
+            Outcome::Improvement
+        );
+        assert_eq!(
+            Outcome::from_insertion(InsertOutcome::Neutral, 0.0),
+            Outcome::Neutral
+        );
+        assert_eq!(
+            Outcome::from_insertion(InsertOutcome::Neutral, -0.01),
+            Outcome::Regression
+        );
+        assert_eq!(
+            Outcome::from_insertion(InsertOutcome::Rejected, -0.5),
+            Outcome::Regression
+        );
+    }
+
+    #[test]
+    fn deltas() {
+        let x = t([1, 2, 0], [0, 2, 3], 0.5, 0.7, 0);
+        assert_eq!(x.delta_b(0), -1);
+        assert_eq!(x.delta_b(1), 0);
+        assert_eq!(x.delta_b(2), 3);
+        assert!((x.delta_f() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn improvement_rate() {
+        let mut tr = TransitionTracker::new(8);
+        tr.record(t([0; 3], [1, 0, 0], 0.1, 0.3, 0)); // improvement
+        tr.record(t([0; 3], [1, 0, 0], 0.3, 0.1, 1)); // regression
+        assert!((tr.improvement_rate() - 0.5).abs() < 1e-12);
+    }
+}

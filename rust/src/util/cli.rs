@@ -1,0 +1,190 @@
+//! Tiny declarative CLI argument parser (replacement for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command {
+            name,
+            about,
+            args: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Command {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Command {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for a in &self.args {
+            let val = if a.takes_value { " <value>" } else { "" };
+            let def = a
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{val}\t{}{def}\n", a.name, a.help));
+        }
+        s
+    }
+
+    /// Parse a raw arg list (not including argv[0] / subcommand token).
+    pub fn parse(&self, raw: &[String]) -> Result<Parsed, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positional: Vec<String> = Vec::new();
+        for spec in &self.args {
+            if let Some(d) = spec.default {
+                values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?;
+                if spec.takes_value {
+                    let v = if let Some(v) = inline {
+                        v
+                    } else {
+                        i += 1;
+                        raw.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("option --{key} needs a value"))?
+                    };
+                    values.insert(key, v);
+                } else {
+                    flags.push(key);
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(Parsed {
+            values,
+            flags,
+            positional,
+        })
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key)?.parse().ok()
+    }
+
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key)?.parse().ok()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        self.get(key)?.parse().ok()
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run an experiment")
+            .opt("iters", "40", "iteration count")
+            .opt("device", "b580", "target device")
+            .flag("verbose", "chatty output")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = cmd().parse(&s(&["--iters", "10"])).unwrap();
+        assert_eq!(p.get_usize("iters"), Some(10));
+        assert_eq!(p.get("device"), Some("b580"));
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_flags_and_positionals() {
+        let p = cmd()
+            .parse(&s(&["--device=lnl", "--verbose", "task_01"]))
+            .unwrap();
+        assert_eq!(p.get("device"), Some("lnl"));
+        assert!(p.has_flag("verbose"));
+        assert_eq!(p.positional, vec!["task_01".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&s(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cmd().help_text();
+        assert!(h.contains("--iters"));
+        assert!(h.contains("default: 40"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Infrastructure substrate.
+//!
+//! The build environment has no network access and only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (serde,
+//! rand, clap, criterion, proptest, tokio) are unavailable. This module
+//! provides small, well-tested in-repo replacements (see DESIGN.md §2,
+//! substitution table).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod textdiff;
+pub mod yamlite;

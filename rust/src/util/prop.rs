@@ -1,0 +1,181 @@
+//! Micro property-testing framework (replacement for `proptest`,
+//! unavailable offline).
+//!
+//! Provides seeded random-input generation, a fixed number of cases per
+//! property, and greedy input shrinking for integer/vec generators. Used
+//! by the coordinator-invariant property tests (archive insertion,
+//! selection, gradient bounds, routing/batching).
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with `KF_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("KF_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// A generator of random values with optional shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values, tried in order during shrinking.
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run `prop` against `cases` random inputs from `gen`. On failure,
+/// greedily shrinks and panics with the minimal counterexample found.
+pub fn check<G: Gen>(seed: u64, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    check_cases(seed, default_cases(), gen, prop)
+}
+
+pub fn check_cases<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if !prop(&value) {
+            let minimal = shrink_loop(gen, value, &prop);
+            panic!(
+                "property failed (seed {seed}, case {case})\nminimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut value: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    // Greedy descent, bounded to avoid pathological loops.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for candidate in gen.shrink(&value) {
+            if !prop(&candidate) {
+                value = candidate;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    value
+}
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub struct F64In(pub f64, pub f64);
+
+impl Gen for F64In {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        self.0 + rng.f64() * (self.1 - self.0)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if *v != self.0 {
+            vec![self.0, self.0 + (*v - self.0) / 2.0]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vector of values from an element generator, length in [0, max_len].
+pub struct VecOf<G: Gen>(pub G, pub usize);
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = rng.below(self.1 + 1);
+        (0..len).map(|_| self.0.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+            // Shrink one element.
+            for cand in self.0.shrink(&v[0]) {
+                let mut copy = v.clone();
+                copy[0] = cand;
+                out.push(copy);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairOf<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(1, &UsizeIn(0, 100), |v| *v <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample: 51")]
+    fn failing_property_shrinks_to_boundary() {
+        // Property "v <= 50" fails for 51..=100; shrinking should land on 51.
+        check(2, &UsizeIn(0, 100), |v| *v <= 50);
+    }
+
+    #[test]
+    fn vec_generator_produces_varied_lengths() {
+        let mut rng = Rng::new(3);
+        let gen = VecOf(UsizeIn(0, 9), 8);
+        let lens: Vec<usize> = (0..64).map(|_| gen.generate(&mut rng).len()).collect();
+        assert!(lens.iter().any(|l| *l == 0));
+        assert!(lens.iter().any(|l| *l >= 6));
+    }
+
+    #[test]
+    fn pair_shrinks_both_sides() {
+        let gen = PairOf(UsizeIn(0, 10), F64In(0.0, 1.0));
+        let shrunk = gen.shrink(&(10, 0.5));
+        assert!(shrunk.iter().any(|(a, _)| *a < 10));
+        assert!(shrunk.iter().any(|(_, b)| *b < 0.5));
+    }
+}

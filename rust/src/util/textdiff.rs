@@ -1,0 +1,153 @@
+//! SEARCH/REPLACE diff application (§3.5).
+//!
+//! The meta-prompter "prescribes targeted updates as SEARCH/REPLACE diffs
+//! restricted to the evolvable regions". This module parses and applies
+//! that diff format:
+//!
+//! ```text
+//! <<<<<<< SEARCH
+//! old text
+//! =======
+//! new text
+//! >>>>>>> REPLACE
+//! ```
+
+/// One parsed SEARCH/REPLACE hunk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hunk {
+    pub search: String,
+    pub replace: String,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DiffError {
+    #[error("malformed diff: {0}")]
+    Malformed(String),
+    #[error("search text not found: {0:?}")]
+    NotFound(String),
+    #[error("search text is ambiguous ({count} matches): {snippet:?}")]
+    Ambiguous { snippet: String, count: usize },
+}
+
+/// Parse a diff document containing zero or more hunks.
+pub fn parse_hunks(diff: &str) -> Result<Vec<Hunk>, DiffError> {
+    let mut hunks = Vec::new();
+    let mut lines = diff.lines().peekable();
+    while let Some(line) = lines.next() {
+        if !line.trim_start().starts_with("<<<<<<< SEARCH") {
+            continue;
+        }
+        let mut search = String::new();
+        let mut replace = String::new();
+        let mut found_sep = false;
+        let mut closed = false;
+        for inner in lines.by_ref() {
+            if inner.trim_start().starts_with("=======") && !found_sep {
+                found_sep = true;
+            } else if inner.trim_start().starts_with(">>>>>>> REPLACE") {
+                closed = true;
+                break;
+            } else if found_sep {
+                replace.push_str(inner);
+                replace.push('\n');
+            } else {
+                search.push_str(inner);
+                search.push('\n');
+            }
+        }
+        if !found_sep || !closed {
+            return Err(DiffError::Malformed(
+                "hunk missing ======= or >>>>>>> REPLACE".into(),
+            ));
+        }
+        hunks.push(Hunk {
+            search: search.trim_end_matches('\n').to_string(),
+            replace: replace.trim_end_matches('\n').to_string(),
+        });
+    }
+    Ok(hunks)
+}
+
+/// Apply one hunk: the search text must occur exactly once.
+pub fn apply_hunk(text: &str, hunk: &Hunk) -> Result<String, DiffError> {
+    if hunk.search.is_empty() {
+        return Err(DiffError::Malformed("empty SEARCH section".into()));
+    }
+    let count = text.matches(&hunk.search).count();
+    match count {
+        0 => Err(DiffError::NotFound(snippet(&hunk.search))),
+        1 => Ok(text.replacen(&hunk.search, &hunk.replace, 1)),
+        _ => Err(DiffError::Ambiguous {
+            snippet: snippet(&hunk.search),
+            count,
+        }),
+    }
+}
+
+/// Apply all hunks in order; stops at the first failure.
+pub fn apply_all(text: &str, hunks: &[Hunk]) -> Result<String, DiffError> {
+    let mut cur = text.to_string();
+    for h in hunks {
+        cur = apply_hunk(&cur, h)?;
+    }
+    Ok(cur)
+}
+
+fn snippet(s: &str) -> String {
+    let s: String = s.chars().take(60).collect();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIFF: &str = "\
+<<<<<<< SEARCH
+prioritize compute
+=======
+prioritize memory bandwidth utilization before compute optimization
+>>>>>>> REPLACE
+";
+
+    #[test]
+    fn parse_and_apply() {
+        let hunks = parse_hunks(DIFF).unwrap();
+        assert_eq!(hunks.len(), 1);
+        let out = apply_all("strategy: prioritize compute.\n", &hunks).unwrap();
+        assert!(out.contains("memory bandwidth utilization"));
+        assert!(!out.contains("prioritize compute."));
+    }
+
+    #[test]
+    fn multiple_hunks_in_order() {
+        let diff = format!("{DIFF}\n<<<<<<< SEARCH\nbandwidth utilization\n=======\nBW use\n>>>>>>> REPLACE\n");
+        let hunks = parse_hunks(&diff).unwrap();
+        assert_eq!(hunks.len(), 2);
+        let out = apply_all("prioritize compute", &hunks).unwrap();
+        assert!(out.contains("BW use"));
+    }
+
+    #[test]
+    fn not_found_and_ambiguous() {
+        let hunks = parse_hunks(DIFF).unwrap();
+        assert!(matches!(
+            apply_all("nothing here", &hunks),
+            Err(DiffError::NotFound(_))
+        ));
+        assert!(matches!(
+            apply_all("prioritize compute prioritize compute", &hunks),
+            Err(DiffError::Ambiguous { count: 2, .. })
+        ));
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(parse_hunks("<<<<<<< SEARCH\nabc\n").is_err());
+    }
+
+    #[test]
+    fn no_hunks_is_ok() {
+        assert!(parse_hunks("plain text").unwrap().is_empty());
+    }
+}

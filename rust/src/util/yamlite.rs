@@ -1,0 +1,299 @@
+//! Parser for the YAML subset used by task configuration files (App. C:
+//! "a config file in YAML format containing hyperparameters").
+//!
+//! Supported: nested mappings by 2-space indentation, block sequences
+//! (`- item`), inline scalars (string / number / bool / null), quoted
+//! strings, comments (`#`), and flow sequences (`[a, b]`). This covers
+//! every config file in the repo; anchors, multi-line scalars and flow
+//! mappings are intentionally out of scope.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+#[error("yaml parse error at line {line}: {msg}")]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a YAML document into the shared `Json` value model.
+pub fn parse(input: &str) -> Result<Json, YamlError> {
+    let lines: Vec<Line> = input
+        .lines()
+        .enumerate()
+        .filter_map(|(no, raw)| {
+            let without_comment = strip_comment(raw);
+            let trimmed = without_comment.trim_end();
+            if trimmed.trim().is_empty() {
+                return None;
+            }
+            let indent = trimmed.len() - trimmed.trim_start().len();
+            Some(Line {
+                no: no + 1,
+                indent,
+                text: trimmed.trim_start().to_string(),
+            })
+        })
+        .collect();
+    if lines.is_empty() {
+        return Ok(Json::obj());
+    }
+    let mut pos = 0;
+    let v = parse_block(&lines, &mut pos, lines[0].indent)?;
+    if pos != lines.len() {
+        return Err(YamlError {
+            line: lines[pos].no,
+            msg: "unexpected dedent/indent structure".into(),
+        });
+    }
+    Ok(v)
+}
+
+struct Line {
+    no: usize,
+    indent: usize,
+    text: String,
+}
+
+fn strip_comment(s: &str) -> String {
+    let mut out = String::new();
+    let mut in_quote: Option<char> = None;
+    for c in s.chars() {
+        match (c, in_quote) {
+            ('#', None) => break,
+            ('"', None) => in_quote = Some('"'),
+            ('\'', None) => in_quote = Some('\''),
+            ('"', Some('"')) | ('\'', Some('\'')) => in_quote = None,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    if lines[*pos].text.starts_with("- ") || lines[*pos].text == "-" {
+        parse_seq(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_seq(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() && lines[*pos].indent == indent && lines[*pos].text.starts_with('-') {
+        let line = &lines[*pos];
+        let rest = line.text[1..].trim_start().to_string();
+        *pos += 1;
+        if rest.is_empty() {
+            // Nested block under the dash.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent)?);
+            } else {
+                items.push(Json::Null);
+            }
+        } else if rest.contains(": ") || rest.ends_with(':') {
+            // Inline mapping start: "- key: value" — the rest of the map is
+            // indented deeper than the dash.
+            let mut map = BTreeMap::new();
+            insert_kv(&mut map, &rest, lines, pos, line.no, indent + 2)?;
+            while *pos < lines.len()
+                && lines[*pos].indent > indent
+                && !lines[*pos].text.starts_with("- ")
+            {
+                let text = lines[*pos].text.clone();
+                let no = lines[*pos].no;
+                let inner_indent = lines[*pos].indent;
+                *pos += 1;
+                insert_kv(&mut map, &text, lines, pos, no, inner_indent)?;
+            }
+            items.push(Json::Obj(map));
+        } else {
+            items.push(scalar(&rest));
+        }
+    }
+    Ok(Json::Arr(items))
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let mut map = BTreeMap::new();
+    while *pos < lines.len() && lines[*pos].indent == indent && !lines[*pos].text.starts_with("- ")
+    {
+        let text = lines[*pos].text.clone();
+        let no = lines[*pos].no;
+        *pos += 1;
+        insert_kv(&mut map, &text, lines, pos, no, indent)?;
+    }
+    Ok(Json::Obj(map))
+}
+
+fn insert_kv(
+    map: &mut BTreeMap<String, Json>,
+    text: &str,
+    lines: &[Line],
+    pos: &mut usize,
+    line_no: usize,
+    indent: usize,
+) -> Result<(), YamlError> {
+    let colon = find_key_colon(text).ok_or(YamlError {
+        line: line_no,
+        msg: format!("expected 'key: value', got '{text}'"),
+    })?;
+    let key = unquote(text[..colon].trim());
+    let rest = text[colon + 1..].trim();
+    if rest.is_empty() {
+        // Nested block (map or sequence) or empty value.
+        if *pos < lines.len() && lines[*pos].indent > indent {
+            let child_indent = lines[*pos].indent;
+            let v = parse_block(lines, pos, child_indent)?;
+            map.insert(key, v);
+        } else {
+            map.insert(key, Json::Null);
+        }
+    } else {
+        map.insert(key, scalar(rest));
+    }
+    Ok(())
+}
+
+/// Find the colon that separates key from value (respecting quotes).
+fn find_key_colon(s: &str) -> Option<usize> {
+    let bytes = s.as_bytes();
+    let mut in_quote: Option<u8> = None;
+    for (i, &b) in bytes.iter().enumerate() {
+        match (b, in_quote) {
+            (b'"', None) => in_quote = Some(b'"'),
+            (b'\'', None) => in_quote = Some(b'\''),
+            (b'"', Some(b'"')) | (b'\'', Some(b'\'')) => in_quote = None,
+            (b':', None) => {
+                if i + 1 == bytes.len() || bytes[i + 1] == b' ' {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+/// Interpret an inline scalar (or flow sequence).
+fn scalar(s: &str) -> Json {
+    let s = s.trim();
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        if inner.trim().is_empty() {
+            return Json::Arr(vec![]);
+        }
+        return Json::Arr(split_flow(inner).iter().map(|p| scalar(p)).collect());
+    }
+    if s.starts_with('"') || s.starts_with('\'') {
+        return Json::Str(unquote(s));
+    }
+    match s {
+        "null" | "~" | "" => return Json::Null,
+        "true" | "True" => return Json::Bool(true),
+        "false" | "False" => return Json::Bool(false),
+        _ => {}
+    }
+    if let Ok(n) = s.parse::<f64>() {
+        if !s.contains(|c: char| c.is_ascii_alphabetic() && c != 'e' && c != 'E') || s.parse::<i64>().is_ok() {
+            return Json::Num(n);
+        }
+    }
+    Json::Str(s.to_string())
+}
+
+/// Split a flow sequence body on top-level commas.
+fn split_flow(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut cur = String::new();
+    let mut in_quote: Option<char> = None;
+    for c in s.chars() {
+        match (c, in_quote) {
+            ('"', None) => in_quote = Some('"'),
+            ('\'', None) => in_quote = Some('\''),
+            ('"', Some('"')) | ('\'', Some('\'')) => in_quote = None,
+            ('[', None) => depth += 1,
+            (']', None) => depth -= 1,
+            (',', None) if depth == 0 => {
+                parts.push(cur.trim().to_string());
+                cur.clear();
+                continue;
+            }
+            _ => {}
+        }
+        cur.push(c);
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur.trim().to_string());
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_maps_and_scalars() {
+        let y = "evolution:\n  max_generations: 40\n  selection: curiosity\n  enabled: true\nname: \"demo task\"\n";
+        let v = parse(y).unwrap();
+        assert_eq!(
+            v.get_path("evolution.max_generations").unwrap().as_i64(),
+            Some(40)
+        );
+        assert_eq!(
+            v.get_path("evolution.selection").unwrap().as_str(),
+            Some("curiosity")
+        );
+        assert_eq!(v.get("name").unwrap().as_str(), Some("demo task"));
+    }
+
+    #[test]
+    fn sequences_block_and_flow() {
+        let y = "models:\n  - gpt-4.1\n  - gpt-5-mini\nbins: [4, 4, 4]\n";
+        let v = parse(y).unwrap();
+        let models = v.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].as_str(), Some("gpt-4.1"));
+        let bins = v.get("bins").unwrap().as_arr().unwrap();
+        assert_eq!(bins.iter().filter_map(|b| b.as_i64()).sum::<i64>(), 12);
+    }
+
+    #[test]
+    fn sequence_of_maps() {
+        let y = "workers:\n  - kind: compile\n    count: 2\n  - kind: execute\n    count: 4\n";
+        let v = parse(y).unwrap();
+        let ws = v.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[1].get("kind").unwrap().as_str(), Some("execute"));
+        assert_eq!(ws[1].get("count").unwrap().as_i64(), Some(4));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let y = "# header\na: 1  # trailing\n\nb: 'x # not comment'\n";
+        let v = parse(y).unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x # not comment"));
+    }
+
+    #[test]
+    fn error_on_bad_line() {
+        assert!(parse("just a line without colon\n").is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Integration tests: whole-system flows across coordinator, eval,
+//! dist, runtime and config.
+
+use kernelfoundry::config::FoundryConfig;
+use kernelfoundry::coordinator::{openevolve_like, EvolutionEngine};
+use kernelfoundry::dist::{ClusterConfig, Database, DbRow, WorkerPool};
+use kernelfoundry::eval::ExecBackend;
+use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::metrics::{aggregate, TaskResult};
+use kernelfoundry::runtime::{Manifest, PjrtBackend};
+use kernelfoundry::tasks::catalog;
+use std::path::Path;
+
+fn quick_config() -> FoundryConfig {
+    let mut c = FoundryConfig::paper_defaults();
+    c.evolution.max_generations = 10;
+    c.evolution.population = 4;
+    c
+}
+
+/// Full sweep over a small task set: evolution produces correct kernels
+/// with aggregate speedup > 1 on L2 fusion tasks.
+#[test]
+fn evolution_sweep_over_l2_subset() {
+    let tasks: Vec<_> = catalog::kernelbench_l2().into_iter().take(5).collect();
+    let mut results = Vec::new();
+    for task in &tasks {
+        let mut engine = EvolutionEngine::new(
+            quick_config(),
+            task.clone(),
+            ExecBackend::HwSim(DeviceProfile::b580()),
+        );
+        results.push(engine.run(true).task_result());
+    }
+    let agg = aggregate(&results);
+    assert!(agg.correct_rate >= 0.8, "correct rate {}", agg.correct_rate);
+    assert!(agg.avg_speedup > 1.2, "avg speedup {}", agg.avg_speedup);
+}
+
+/// Ours vs OpenEvolve-like: with few iterations, the kernel-specific QD
+/// machinery converges faster on average (Table 2's 10-iteration gap).
+#[test]
+fn ours_beats_openevolve_at_low_iterations() {
+    let tasks: Vec<_> = catalog::kernelbench_l2().into_iter().take(6).collect();
+    let config = quick_config();
+    let mut ours_total = 0.0;
+    let mut open_total = 0.0;
+    for task in &tasks {
+        let mut engine = EvolutionEngine::new(
+            config.clone(),
+            task.clone(),
+            ExecBackend::HwSim(DeviceProfile::b580()),
+        );
+        ours_total += engine.run(false).best_speedup();
+        let open = openevolve_like(
+            &config,
+            task,
+            ExecBackend::HwSim(DeviceProfile::b580()),
+            10,
+        );
+        open_total += open.best_speedup();
+    }
+    assert!(
+        ours_total > open_total * 0.95,
+        "ours {ours_total:.2} vs openevolve {open_total:.2}"
+    );
+}
+
+/// The distributed pool and the inline pipeline agree on outcomes.
+#[test]
+fn dist_pool_matches_inline_outcomes() {
+    let task = catalog::find_task("1_Conv2D_ReLU_BiasAdd").unwrap();
+    let genomes: Vec<_> = (0..12)
+        .map(|i| {
+            let mut g = kernelfoundry::ir::KernelGenome::direct_translation(&task.id);
+            g.id = i;
+            g.mem = kernelfoundry::ir::MemoryPattern::from_level((i % 4) as usize);
+            g.params.slm_pad = true;
+            g
+        })
+        .collect();
+    let pool = WorkerPool::new(ClusterConfig::default());
+    let records = pool.evaluate_batch(&task, genomes.clone());
+    // Outcome class depends only on the genome (determinism of the
+    // compile/correctness stages), so pool and inline agree.
+    let mut inline = kernelfoundry::eval::EvalPipeline::new(
+        task.clone(),
+        ExecBackend::HwSim(DeviceProfile::b580()),
+        ClusterConfig::default().seed,
+    );
+    for (g, r) in genomes.iter().zip(records.iter()) {
+        let i = inline.evaluate(g);
+        assert_eq!(i.outcome, r.outcome, "genome {}", g.id);
+    }
+}
+
+/// Engine → database → report round trip.
+#[test]
+fn database_records_full_run() {
+    let task = catalog::find_task("59_Matmul_Swish_Scaling").unwrap();
+    let mut engine = EvolutionEngine::new(
+        quick_config(),
+        task,
+        ExecBackend::HwSim(DeviceProfile::b580()),
+    );
+    let report = engine.run(false);
+    let db = Database::new();
+    for (i, rec) in engine.records.values().enumerate() {
+        db.insert(DbRow::from_record("it", "kernelfoundry", i, rec));
+    }
+    assert_eq!(db.len(), report.evaluations);
+    let best = db.best_per_task("kernelfoundry");
+    assert_eq!(best.len(), 1);
+    assert!((best[0].speedup - report.best_speedup()).abs() < 1e-9);
+}
+
+/// YAML config drives the engine end to end (App. C config layer).
+#[test]
+fn yaml_config_controls_run() {
+    let yaml = "\
+evolution:
+  max_generations: 6
+  population: 3
+  selection: uniform
+llm:
+  models: [sonnet-4.5]
+device: lnl
+";
+    let config = FoundryConfig::from_yaml(yaml).unwrap();
+    let task = catalog::find_task("20_LeakyReLU").unwrap();
+    let device = DeviceProfile::by_name(&config.device).unwrap();
+    let mut engine = EvolutionEngine::new(config, task, ExecBackend::HwSim(device));
+    let report = engine.run(false);
+    assert_eq!(report.series.len(), 6);
+    assert_eq!(report.evaluations, 18);
+}
+
+/// App. D task filtering: strict criteria exclude all compromised tasks,
+/// relaxed criteria keep criterion-(3)/(5) tasks.
+#[test]
+fn task_filtering_appendix_d() {
+    let mut all = catalog::representative_set();
+    all.extend(catalog::compromised_examples());
+    let strict: Vec<_> = all.iter().filter(|t| !t.flags.compromised_strict()).collect();
+    let relaxed: Vec<_> = all.iter().filter(|t| !t.flags.compromised_relaxed()).collect();
+    assert_eq!(strict.len(), 40);
+    assert_eq!(relaxed.len(), 42); // comp_axis_std & comp_slow_baseline retained
+    assert!(relaxed.len() > strict.len());
+}
+
+/// Real-backend integration (requires `make artifacts`; skips otherwise).
+#[test]
+fn real_backend_evolution_llama_rope() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let backend = PjrtBackend::new(manifest).unwrap();
+    let task = catalog::llama_rope_task();
+    let mut config = quick_config();
+    config.evolution.max_generations = 4;
+    config.evolution.population = 3;
+    let mut engine = EvolutionEngine::new(config, task, ExecBackend::Real(Box::new(backend)));
+    let report = engine.run(false);
+    let best = report.best.expect("correct kernel on the real backend");
+    assert!(best.time_ms > 0.0);
+    assert!(best.correctness.unwrap().correct);
+}

@@ -1,0 +1,236 @@
+//! Property-based tests over coordinator invariants (archive semantics,
+//! selection, gradients, fitness, queue state), using the in-repo
+//! property-testing substrate (`util::prop`, the proptest replacement).
+
+use kernelfoundry::archive::{Elite, MapElites};
+use kernelfoundry::classify::{cell_index, coords_of};
+use kernelfoundry::eval::fitness::fitness;
+use kernelfoundry::gradient::GradientEstimator;
+use kernelfoundry::ir::KernelGenome;
+use kernelfoundry::metrics;
+use kernelfoundry::selection::{Selector, Strategy};
+use kernelfoundry::transitions::{Outcome, Transition, TransitionTracker};
+use kernelfoundry::util::prop::{check_cases, F64In, Gen, PairOf, UsizeIn, VecOf};
+use kernelfoundry::util::rng::Rng;
+
+fn elite(coords: [usize; 3], f: f64) -> Elite {
+    Elite {
+        genome: KernelGenome::direct_translation("p"),
+        coords,
+        fitness: f,
+        speedup: f,
+        runtime_ms: 1.0,
+        iteration: 0,
+    }
+}
+
+/// Generator of random insertion sequences: (cell index, fitness).
+struct Insertions;
+impl Gen for Insertions {
+    type Value = Vec<(usize, f64)>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = rng.below(120);
+        (0..n).map(|_| (rng.below(64), rng.f64())).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        if v.is_empty() {
+            vec![]
+        } else {
+            vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+        }
+    }
+}
+
+/// Archive invariant: each occupied cell holds exactly the maximum
+/// fitness ever inserted into it; unoccupied cells received nothing.
+#[test]
+fn prop_archive_keeps_per_cell_maximum() {
+    check_cases(11, 200, &Insertions, |seq| {
+        let mut archive = MapElites::new(4);
+        let mut best: std::collections::HashMap<usize, f64> = Default::default();
+        for (cell, f) in seq {
+            archive.insert(elite(coords_of(*cell, 4), *f));
+            let e = best.entry(*cell).or_insert(f64::MIN);
+            if *f > *e {
+                *e = *f;
+            }
+        }
+        for idx in 0..64 {
+            let got = archive.get(coords_of(idx, 4)).map(|e| e.fitness);
+            match (got, best.get(&idx)) {
+                (None, None) => {}
+                (Some(g), Some(b)) => {
+                    if (g - b).abs() > 1e-12 {
+                        return false;
+                    }
+                }
+                _ => return false,
+            }
+        }
+        // QD score equals the sum of per-cell maxima.
+        let qd: f64 = best.values().sum();
+        (archive.qd_score() - qd).abs() < 1e-9
+    });
+}
+
+/// Selection invariant: every strategy returns an occupied cell, for any
+/// archive occupancy pattern.
+#[test]
+fn prop_selection_returns_occupied() {
+    check_cases(12, 100, &Insertions, |seq| {
+        let mut archive = MapElites::new(4);
+        for (cell, f) in seq {
+            archive.insert(elite(coords_of(*cell, 4), *f));
+        }
+        let tracker = TransitionTracker::new(16);
+        let mut rng = Rng::new(99);
+        for strat in [
+            Strategy::Uniform,
+            Strategy::FitnessProportionate,
+            Strategy::Curiosity,
+            Strategy::Island,
+        ] {
+            let sel = Selector::new(strat);
+            for it in 0..4 {
+                match sel.select(&archive, &tracker, it, &mut rng) {
+                    Some(c) => {
+                        if archive.get(c).is_none() {
+                            return false;
+                        }
+                    }
+                    None => {
+                        if archive.n_occupied() != 0 {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+/// Transition generator for gradient properties.
+struct Transitions;
+impl Gen for Transitions {
+    type Value = Vec<Transition>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = rng.below(80);
+        (0..n)
+            .map(|i| {
+                let pf = rng.f64();
+                let cf = rng.f64();
+                Transition {
+                    parent_coords: [rng.below(4), rng.below(4), rng.below(4)],
+                    child_coords: [rng.below(4), rng.below(4), rng.below(4)],
+                    parent_fitness: pf,
+                    child_fitness: cf,
+                    outcome: if cf > pf {
+                        Outcome::Improvement
+                    } else {
+                        Outcome::Regression
+                    },
+                    iteration: i,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Gradient bounds: ∇R components are probability differences in
+/// [-1, 1]; all estimates are finite for any history.
+#[test]
+fn prop_gradient_bounds() {
+    check_cases(13, 150, &Transitions, |ts| {
+        let mut tracker = TransitionTracker::new(64);
+        for t in ts {
+            tracker.record(*t);
+        }
+        let mut archive = MapElites::new(4);
+        archive.insert(elite([0, 0, 0], 0.5));
+        let est = GradientEstimator::default();
+        let g = est.estimate(&tracker, &archive, [0, 0, 0], ts.len());
+        g.improvement.d.iter().all(|x| (-1.0..=1.0).contains(x))
+            && g.combined.d.iter().all(|x| x.is_finite())
+            && g.exploration.magnitude() <= 1.0 + 1e-9
+    });
+}
+
+/// Fitness function bounds and the correctness-dominance ordering
+/// (§3.2): any correct kernel outscores any incorrect/failed one.
+#[test]
+fn prop_fitness_bounds_and_dominance() {
+    let gen = PairOf(F64In(0.0, 60.0), F64In(0.5, 8.0));
+    check_cases(14, 300, &gen, |(speedup, target)| {
+        let f_ok = fitness(true, true, *speedup, *target);
+        let f_bad = fitness(true, false, *speedup, *target);
+        let f_cc = fitness(false, false, *speedup, *target);
+        (0.5..=1.0).contains(&f_ok) && f_bad == 0.1 && f_cc == 0.0 && f_ok > f_bad && f_bad > f_cc
+    });
+}
+
+/// fast_p is monotone non-increasing in p and bounded by correct-rate.
+#[test]
+fn prop_fastp_monotone() {
+    let gen = VecOf(F64In(0.0, 5.0), 40);
+    check_cases(15, 200, &gen, |speeds| {
+        let results: Vec<metrics::TaskResult> = speeds
+            .iter()
+            .enumerate()
+            .map(|(i, s)| metrics::TaskResult {
+                task_id: format!("t{i}"),
+                correct: *s > 0.0,
+                speedup: *s,
+                time_ms: 1.0,
+            })
+            .collect();
+        let agg = metrics::aggregate(&results);
+        let f05 = metrics::fast_p(&results, 0.5);
+        let f1 = metrics::fast_p(&results, 1.0);
+        let f2 = metrics::fast_p(&results, 2.0);
+        f05 >= f1 && f1 >= f2 && f05 <= agg.correct_rate + 1e-12
+    });
+}
+
+/// Cell index bijection over arbitrary bins.
+#[test]
+fn prop_cell_index_bijection() {
+    let gen = PairOf(UsizeIn(2, 8), UsizeIn(0, 511));
+    check_cases(16, 200, &gen, |(bins, raw)| {
+        let idx = raw % (bins * bins * bins);
+        cell_index(coords_of(idx, *bins), *bins) == idx
+    });
+}
+
+/// End-to-end state invariant: random evolution runs never violate
+/// record accounting (evaluations = compile_errors + incorrect +
+/// correct-evals; series is monotone; archive never exceeds 64 cells).
+#[test]
+fn prop_engine_accounting() {
+    use kernelfoundry::config::FoundryConfig;
+    use kernelfoundry::coordinator::EvolutionEngine;
+    use kernelfoundry::eval::ExecBackend;
+    use kernelfoundry::hwsim::DeviceProfile;
+    use kernelfoundry::tasks::catalog;
+
+    let gen = PairOf(UsizeIn(0, 1000), UsizeIn(2, 5));
+    check_cases(17, 12, &gen, |(seed, pop)| {
+        let mut config = FoundryConfig::paper_defaults();
+        config.seed = *seed as u64;
+        config.evolution.max_generations = 6;
+        config.evolution.population = *pop;
+        let task = catalog::find_task("46_Conv2d_Subtract_Tanh_Subtract_AvgPool").unwrap();
+        let mut engine =
+            EvolutionEngine::new(config, task, ExecBackend::HwSim(DeviceProfile::b580()));
+        let report = engine.run(false);
+        let monotone = report
+            .series
+            .windows(2)
+            .all(|w| w[1].best_speedup >= w[0].best_speedup - 1e-12);
+        let correct_evals = report.evaluations - report.compile_errors - report.incorrect;
+        report.evaluations == 6 * pop
+            && monotone
+            && correct_evals <= report.evaluations
+            && report.archive.map(|a| a.occupied <= 64).unwrap_or(false)
+    });
+}

@@ -1,0 +1,14 @@
+# Build-time artifact generation for the `pjrt` feature (§5.5 / App. C):
+# lower the JAX/Pallas kernels to HLO text once, at build time — Python
+# never runs on the Rust hot path. Requires jax; see python/compile/aot.py.
+#
+# The artifacts land at <repo>/artifacts, where the Rust side looks for
+# them (CARGO_MANIFEST_DIR/artifacts).
+
+.PHONY: artifacts clean-artifacts
+
+artifacts:
+	cd python/compile && python3 aot.py --out ../../artifacts
+
+clean-artifacts:
+	rm -rf artifacts

@@ -20,7 +20,7 @@ use kernelfoundry::runtime::{Manifest, PjrtBackend, PjrtRuntime};
 use kernelfoundry::tasks::catalog;
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> kernelfoundry::util::error::Result<()> {
     let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {
         eprintln!("artifacts not built — run `make artifacts` first");

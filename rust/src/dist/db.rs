@@ -1,0 +1,370 @@
+//! The results database server (Fig. 4 worker type 4, App. C).
+//!
+//! Every evaluation — including compile failures — is persisted so runs
+//! are reproducible and reportable after the fact. The store is an
+//! append-only table of [`DbRow`]s with JSONL persistence via the in-repo
+//! [`crate::util::json`] model (one compact JSON object per line), which
+//! is what the `kernelfoundry report --db runs.jsonl` subcommand reads.
+//!
+//! [`Database`] uses interior mutability (a mutex around the row table) so
+//! concurrent workers can insert through a shared reference, matching its
+//! role as the single server many workers report to.
+
+use crate::eval::{EvalOutcome, EvalRecord};
+use crate::util::error::{Context, Error};
+use crate::util::json::{self, Json};
+use std::fs;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// One persisted evaluation: the App. C database schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DbRow {
+    /// Run identifier (groups rows of one experiment).
+    pub run: String,
+    /// Method that produced the kernel (e.g. `kernelfoundry`, `openevolve`).
+    pub method: String,
+    /// Evaluation index within the run.
+    pub idx: usize,
+    /// Task the kernel implements.
+    pub task_id: String,
+    /// Genome id within the run (0 = unassigned).
+    pub genome_id: u64,
+    /// Model of the ensemble that produced the kernel.
+    pub produced_by: String,
+    /// Outcome class: `compile_error` | `incorrect` | `correct`.
+    pub outcome: String,
+    /// Behavioral coordinates assigned by the classifier.
+    pub coords: [usize; 3],
+    /// §3.2 fitness.
+    pub fitness: f64,
+    /// Speedup over the eager baseline (0 unless correct).
+    pub speedup: f64,
+    /// Measured kernel time, ms (0 unless correct).
+    pub time_ms: f64,
+    /// Eager baseline time, ms.
+    pub baseline_ms: f64,
+}
+
+fn outcome_name(o: EvalOutcome) -> &'static str {
+    match o {
+        EvalOutcome::CompileError => "compile_error",
+        EvalOutcome::Incorrect => "incorrect",
+        EvalOutcome::Correct => "correct",
+    }
+}
+
+impl DbRow {
+    /// Build a row from one evaluation record.
+    pub fn from_record(run: &str, method: &str, idx: usize, rec: &EvalRecord) -> DbRow {
+        DbRow {
+            run: run.to_string(),
+            method: method.to_string(),
+            idx,
+            task_id: rec.genome.task_id.clone(),
+            genome_id: rec.genome.id,
+            produced_by: rec.genome.produced_by.clone(),
+            outcome: outcome_name(rec.outcome).to_string(),
+            coords: rec.coords,
+            fitness: rec.fitness,
+            speedup: rec.speedup,
+            time_ms: rec.time_ms,
+            baseline_ms: rec.baseline_ms,
+        }
+    }
+
+    /// Serialize to the JSONL object form.
+    ///
+    /// Non-finite metric values (a real backend can report an infinite
+    /// baseline on failure) are clamped to the largest finite f64 — the
+    /// JSON model would otherwise emit `null`, and a single such row
+    /// would make the whole file unloadable.
+    pub fn to_json(&self) -> Json {
+        fn finite(v: f64) -> f64 {
+            if v.is_finite() {
+                v
+            } else if v.is_nan() {
+                0.0
+            } else if v > 0.0 {
+                f64::MAX
+            } else {
+                f64::MIN
+            }
+        }
+        let mut o = Json::obj();
+        o.set("run", self.run.as_str())
+            .set("method", self.method.as_str())
+            .set("idx", self.idx)
+            .set("task_id", self.task_id.as_str())
+            // As a string: u64 ids above 2^53 would lose precision in a
+            // JSON double, and save/load must round-trip exactly.
+            .set("genome_id", self.genome_id.to_string())
+            .set("produced_by", self.produced_by.as_str())
+            .set("outcome", self.outcome.as_str())
+            .set("coords", self.coords.to_vec())
+            .set("fitness", finite(self.fitness))
+            .set("speedup", finite(self.speedup))
+            .set("time_ms", finite(self.time_ms))
+            .set("baseline_ms", finite(self.baseline_ms));
+        o
+    }
+
+    /// Parse a row back from its JSON object form.
+    pub fn from_json(v: &Json) -> Option<DbRow> {
+        let coords_arr = v.get("coords")?.as_arr()?;
+        if coords_arr.len() != 3 {
+            return None;
+        }
+        let coords = [
+            coords_arr[0].as_usize()?,
+            coords_arr[1].as_usize()?,
+            coords_arr[2].as_usize()?,
+        ];
+        Some(DbRow {
+            run: v.get("run")?.as_str()?.to_string(),
+            method: v.get("method")?.as_str()?.to_string(),
+            idx: v.get("idx")?.as_usize()?,
+            task_id: v.get("task_id")?.as_str()?.to_string(),
+            genome_id: v.get("genome_id")?.as_str()?.parse().ok()?,
+            produced_by: v.get("produced_by")?.as_str()?.to_string(),
+            outcome: v.get("outcome")?.as_str()?.to_string(),
+            coords,
+            fitness: v.get("fitness")?.as_f64()?,
+            speedup: v.get("speedup")?.as_f64()?,
+            time_ms: v.get("time_ms")?.as_f64()?,
+            baseline_ms: v.get("baseline_ms")?.as_f64()?,
+        })
+    }
+
+    /// Whether the row records a numerically-correct kernel.
+    pub fn is_correct(&self) -> bool {
+        self.outcome == "correct"
+    }
+}
+
+/// The append-only results store.
+#[derive(Debug, Default)]
+pub struct Database {
+    rows: Mutex<Vec<DbRow>>,
+}
+
+impl Database {
+    /// Create an empty database.
+    pub fn new() -> Database {
+        Database::default()
+    }
+
+    /// Append one row (callable through a shared reference, so concurrent
+    /// workers can report into one server).
+    pub fn insert(&self, row: DbRow) {
+        self.rows.lock().unwrap().push(row);
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.rows.lock().unwrap().len()
+    }
+
+    /// Whether the database holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of every row.
+    pub fn rows(&self) -> Vec<DbRow> {
+        self.rows.lock().unwrap().clone()
+    }
+
+    /// Persist every row as JSONL (one compact object per line).
+    pub fn save(&self, path: &Path) -> Result<(), Error> {
+        let rows = self.rows.lock().unwrap();
+        let mut out = String::with_capacity(rows.len() * 160);
+        for row in rows.iter() {
+            out.push_str(&row.to_json().to_string_compact());
+            out.push('\n');
+        }
+        fs::write(path, out).with_context(|| format!("writing database {}", path.display()))
+    }
+
+    /// Load a JSONL file, appending its rows; returns how many rows were
+    /// added. Blank lines are skipped; malformed lines are errors.
+    pub fn load(&self, path: &Path) -> Result<usize, Error> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading database {}", path.display()))?;
+        let mut loaded = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = json::parse(line)
+                .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+            let row = DbRow::from_json(&v).with_context(|| {
+                format!("{}:{}: not a database row", path.display(), lineno + 1)
+            })?;
+            loaded.push(row);
+        }
+        let n = loaded.len();
+        self.rows.lock().unwrap().extend(loaded);
+        Ok(n)
+    }
+
+    /// The best row per task for a method: maximum fitness, ties broken by
+    /// speedup (matching the engine's best-kernel rule, so a report over a
+    /// full run reproduces the run's own best). Rows are returned sorted
+    /// by task id.
+    pub fn best_per_task(&self, method: &str) -> Vec<DbRow> {
+        let rows = self.rows.lock().unwrap();
+        let mut best: std::collections::BTreeMap<&str, &DbRow> = Default::default();
+        for row in rows.iter().filter(|r| r.method == method) {
+            let replace = match best.get(row.task_id.as_str()) {
+                Some(cur) => {
+                    row.fitness > cur.fitness
+                        || (row.fitness == cur.fitness && row.speedup > cur.speedup)
+                }
+                None => true,
+            };
+            if replace {
+                best.insert(row.task_id.as_str(), row);
+            }
+        }
+        best.into_values().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn row(task: &str, method: &str, fitness: f64, speedup: f64) -> DbRow {
+        DbRow {
+            run: "r1".to_string(),
+            method: method.to_string(),
+            idx: 0,
+            task_id: task.to_string(),
+            genome_id: 7,
+            produced_by: "gpt-4.1".to_string(),
+            outcome: "correct".to_string(),
+            coords: [2, 1, 0],
+            fitness,
+            speedup,
+            time_ms: 0.5,
+            baseline_ms: 1.0,
+        }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kf_dist_{}_{}.jsonl", name, std::process::id()))
+    }
+
+    /// Satellite-task test: insert → save → load → best_per_task round
+    /// trip through the JSONL file format.
+    #[test]
+    fn jsonl_roundtrip_and_best_per_task() {
+        let db = Database::new();
+        db.insert(row("t1", "kernelfoundry", 0.9, 1.8));
+        db.insert(row("t1", "kernelfoundry", 0.7, 1.4));
+        db.insert(row("t2", "kernelfoundry", 1.0, 2.5));
+        db.insert(row("t2", "openevolve", 1.0, 9.9)); // other method
+        let path = tmp_path("roundtrip");
+        db.save(&path).unwrap();
+
+        let loaded = Database::new();
+        assert_eq!(loaded.load(&path).unwrap(), 4);
+        assert_eq!(loaded.len(), 4);
+        assert_eq!(loaded.rows(), db.rows(), "rows survive the round trip exactly");
+
+        let best = loaded.best_per_task("kernelfoundry");
+        assert_eq!(best.len(), 2);
+        assert_eq!(best[0].task_id, "t1");
+        assert_eq!(best[0].fitness, 0.9);
+        assert_eq!(best[1].task_id, "t2");
+        assert_eq!(best[1].speedup, 2.5, "openevolve row must not leak in");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn best_per_task_breaks_fitness_ties_by_speedup() {
+        let db = Database::new();
+        db.insert(row("t", "m", 1.0, 2.0));
+        db.insert(row("t", "m", 1.0, 3.0)); // saturated fitness, faster kernel
+        db.insert(row("t", "m", 0.6, 9.0)); // fast but lower fitness
+        let best = db.best_per_task("m");
+        assert_eq!(best.len(), 1);
+        assert_eq!(best[0].speedup, 3.0);
+    }
+
+    #[test]
+    fn load_rejects_malformed_lines() {
+        let path = tmp_path("malformed");
+        std::fs::write(&path, "{\"not\": \"a row\"}\n").unwrap();
+        let db = Database::new();
+        let err = db.load(&path).unwrap_err().to_string();
+        assert!(err.contains("not a database row"), "{err}");
+        std::fs::write(&path, "not json at all\n").unwrap();
+        let err = db.load(&path).unwrap_err().to_string();
+        assert!(err.contains("json parse error"), "{err}");
+        assert_eq!(db.len(), 0, "failed loads must not append rows");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn from_record_captures_the_contracted_fields() {
+        let mut genome = crate::ir::KernelGenome::direct_translation("task_x");
+        genome.id = 42;
+        genome.produced_by = "sonnet-4.5".to_string();
+        let rec = EvalRecord {
+            source: String::new(),
+            genome,
+            outcome: EvalOutcome::Correct,
+            coords: [1, 2, 3],
+            correctness: None,
+            time_ms: 0.25,
+            baseline_ms: 1.0,
+            speedup: 4.0,
+            fitness: 1.0,
+            log: String::new(),
+            best_params: None,
+            param_sweep: Vec::new(),
+        };
+        let r = DbRow::from_record("run-a", "kernelfoundry", 9, &rec);
+        assert_eq!(r.task_id, "task_x");
+        assert_eq!(r.genome_id, 42);
+        assert_eq!(r.produced_by, "sonnet-4.5");
+        assert_eq!(r.coords, [1, 2, 3]);
+        assert_eq!(r.outcome, "correct");
+        assert!(r.is_correct());
+        assert_eq!(r.idx, 9);
+        assert_eq!(DbRow::from_json(&r.to_json()), Some(r.clone()));
+
+        // Ids beyond 2^53 must survive the JSON round trip exactly.
+        let mut big = r;
+        big.genome_id = u64::MAX;
+        assert_eq!(DbRow::from_json(&big.to_json()), Some(big.clone()));
+
+        // Non-finite metrics must still produce a loadable row (clamped),
+        // never a null that poisons the whole file on load.
+        big.baseline_ms = f64::INFINITY;
+        big.speedup = f64::NAN;
+        let reloaded = DbRow::from_json(&big.to_json()).expect("row stays loadable");
+        assert!(reloaded.baseline_ms.is_finite());
+        assert_eq!(reloaded.speedup, 0.0);
+    }
+
+    #[test]
+    fn concurrent_inserts_through_shared_reference() {
+        let db = Database::new();
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let db = &db;
+                s.spawn(move || {
+                    for i in 0..25 {
+                        db.insert(row(&format!("t{w}"), "m", 0.5, i as f64));
+                    }
+                });
+            }
+        });
+        assert_eq!(db.len(), 100);
+        assert_eq!(db.best_per_task("m").len(), 4);
+    }
+}

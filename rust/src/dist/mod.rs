@@ -1,0 +1,84 @@
+//! Distributed evaluation framework (§3.6, App. C, Fig. 4).
+//!
+//! KernelFoundry's systems contribution is that candidate evaluation — the
+//! dominant cost of evolutionary kernel optimization — runs as a
+//! *distributed framework with remote access to diverse hardware*. The
+//! paper's Fig. 4 topology has four worker types:
+//!
+//! 1. **generation workers** (LLM inference) — in this reproduction, the
+//!    simulated code model runs inline in the coordinator;
+//! 2. **compilation workers** — CPU-only machines that render and compile
+//!    candidates, rejecting defective ones *before* they ever occupy a GPU;
+//! 3. **execution workers** — one (simulated) GPU each, measuring
+//!    correctness and runtime;
+//! 4. **the database server** — persists every evaluation record for
+//!    reproducibility and later reporting.
+//!
+//! This module implements types 2–4 for a single process: [`WorkerPool`]
+//! runs a multi-threaded compile→execute pipeline behind bounded,
+//! backpressured queues, and [`Database`] is the append-only JSONL results
+//! store served by the `kernelfoundry serve` / `report` subcommands. The
+//! physical GPUs are replaced by [`crate::hwsim`] device profiles per the
+//! DESIGN.md §2 substitution table; the worker topology, queue discipline,
+//! early-reject accounting and database schema are the real thing.
+//!
+//! Determinism contract: the pool produces, for every submitted genome, an
+//! evaluation record whose *outcome class* (compile error / incorrect /
+//! correct) is identical to what the inline [`crate::eval::EvalPipeline`]
+//! would produce for the same seed — worker scheduling must never perturb
+//! per-genome determinism (pinned by `tests/integration.rs`).
+
+mod db;
+mod pool;
+
+pub use db::{Database, DbRow};
+pub use pool::{PoolMetrics, WorkerPool};
+
+use crate::hwsim::DeviceProfile;
+
+/// Configuration of one evaluation cluster (Fig. 4 topology knobs).
+///
+/// `Default` matches the single-node demo configuration: 2 compile workers
+/// feeding 4 execution workers on the B580 profile through queues of 64.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of compilation workers (CPU-only; no GPU required).
+    pub compile_workers: usize,
+    /// Number of execution workers (one simulated device each).
+    pub exec_workers: usize,
+    /// Device profile every execution worker simulates.
+    pub device: DeviceProfile,
+    /// Capacity of each inter-stage queue. Bounded queues give
+    /// backpressure: generation cannot outrun compilation, and
+    /// compilation cannot outrun the devices.
+    pub queue_capacity: usize,
+    /// RNG seed for the execution workers' evaluation pipelines (the same
+    /// seed an inline [`crate::eval::EvalPipeline`] would be given).
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig {
+            compile_workers: 2,
+            exec_workers: 4,
+            device: DeviceProfile::b580(),
+            queue_capacity: 64,
+            seed: 20260710,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_cluster_is_the_demo_topology() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.compile_workers, 2);
+        assert_eq!(c.exec_workers, 4);
+        assert_eq!(c.device.name, "b580");
+        assert_eq!(c.queue_capacity, 64);
+    }
+}

@@ -15,5 +15,8 @@ pub mod profiler;
 pub use benchmark::{BenchConfig, BenchResult, Benchmarker};
 pub use correctness::{check_correctness, cosine_similarity, nu_criterion, CorrectnessReport};
 pub use fitness::{fitness, FITNESS_COMPILE_FAIL, FITNESS_INCORRECT};
-pub use pipeline::{EvalOutcome, EvalPipeline, EvalRecord, ExecBackend, RealBackend, RealRun};
+pub use pipeline::{
+    compile_check, compile_reject_record, EvalOutcome, EvalPipeline, EvalRecord, ExecBackend,
+    RealBackend, RealRun,
+};
 pub use profiler::{profiler_feedback, ProfileReport};

@@ -9,6 +9,7 @@ use crate::hwsim::{baseline_cost, kernel_cost, DeviceProfile, NoisyClock};
 use crate::ir::{check_legality, render_sycl, DefectKind, KernelGenome, ParamSet};
 use crate::ir::render::syntax_check;
 use crate::tasks::TaskSpec;
+use crate::util::error;
 use crate::util::rng::Rng;
 
 /// Execution backend: the simulated GPU, or a real executor (the PJRT
@@ -22,8 +23,8 @@ pub enum ExecBackend {
 /// measured time for a genome (see `runtime::PjrtBackend`).
 pub trait RealBackend {
     fn device_description(&self) -> String;
-    fn baseline_ms(&mut self, task: &TaskSpec) -> anyhow::Result<f64>;
-    fn run(&mut self, task: &TaskSpec, genome: &KernelGenome) -> anyhow::Result<RealRun>;
+    fn baseline_ms(&mut self, task: &TaskSpec) -> error::Result<f64>;
+    fn run(&mut self, task: &TaskSpec, genome: &KernelGenome) -> error::Result<RealRun>;
 }
 
 /// Outputs + timing from a real backend.
@@ -74,12 +75,57 @@ impl EvalRecord {
     }
 }
 
+/// Compile-stage checks, shared verbatim by the inline pipeline and the
+/// distributed compile workers ([`crate::dist::WorkerPool`]) so the two
+/// paths can never drift: syntax first, then legality against the device
+/// limits. `Err` carries the compiler-style log line.
+pub fn compile_check(
+    genome: &KernelGenome,
+    source: &str,
+    limits: &crate::ir::legality::DeviceLimits,
+) -> Result<(), String> {
+    if let Err(e) = syntax_check(source) {
+        return Err(e);
+    }
+    if let Err(e) = check_legality(genome, limits) {
+        return Err(format!("kernel.cpp: error: {e}"));
+    }
+    Ok(())
+}
+
+/// The `CompileError` evaluation record for a candidate rejected by
+/// [`compile_check`] — shared by the inline pipeline and the distributed
+/// compile workers so reject records are identical wherever they are
+/// produced.
+pub fn compile_reject_record(
+    genome: &KernelGenome,
+    source: String,
+    log: String,
+    baseline_ms: f64,
+) -> EvalRecord {
+    EvalRecord {
+        genome: genome.clone(),
+        outcome: EvalOutcome::CompileError,
+        coords: genome.intended_coords(),
+        correctness: None,
+        time_ms: 0.0,
+        baseline_ms,
+        speedup: 0.0,
+        fitness: fitness::FITNESS_COMPILE_FAIL,
+        source,
+        log,
+        best_params: None,
+        param_sweep: Vec::new(),
+    }
+}
+
 /// The evaluation pipeline, bound to one task and one backend.
 pub struct EvalPipeline {
     pub task: TaskSpec,
     pub backend: ExecBackend,
     pub bench_config: BenchConfig,
     pub target_speedup: f64,
+    seed: u64,
     rng: Rng,
     baseline_ms_cache: Option<f64>,
 }
@@ -91,9 +137,21 @@ impl EvalPipeline {
             backend,
             bench_config: BenchConfig::quick(),
             target_speedup: fitness::DEFAULT_TARGET_SPEEDUP,
+            seed,
             rng: Rng::with_stream(seed, 0xe7a1),
             baseline_ms_cache: None,
         }
+    }
+
+    /// Re-seed only the timing-noise stream (the measurement-noise RNG
+    /// behind [`crate::hwsim::NoisyClock`]), leaving the verdict
+    /// derivation — a pure function of (pipeline seed, genome id) —
+    /// untouched. The distributed pool calls this with a per-worker
+    /// stream so parallel devices produce independent noise realizations
+    /// instead of duplicating one stream, without perturbing any
+    /// outcome class.
+    pub fn reseed_timing_noise(&mut self, stream: u64) {
+        self.rng = Rng::with_stream(self.seed, 0xe7a1 ^ stream);
     }
 
     /// PyTorch-eager baseline time for the task (cached).
@@ -112,20 +170,27 @@ impl EvalPipeline {
     /// Evaluate one candidate genome end-to-end.
     pub fn evaluate(&mut self, genome: &KernelGenome) -> EvalRecord {
         let source = render_sycl(genome);
-        let baseline_ms = self.baseline_ms();
 
         // ---- compile stage -------------------------------------------------
         let limits = match &self.backend {
             ExecBackend::HwSim(dev) => dev.limits(),
             ExecBackend::Real(_) => crate::ir::legality::DeviceLimits::default(),
         };
-        if let Err(e) = syntax_check(&source) {
-            return self.failed_compile(genome, source, e.to_string(), baseline_ms);
+        if let Err(log) = compile_check(genome, &source, &limits) {
+            let baseline_ms = self.baseline_ms();
+            return compile_reject_record(genome, source, log, baseline_ms);
         }
-        if let Err(e) = check_legality(genome, &limits) {
-            let log = format!("kernel.cpp: error: {e}");
-            return self.failed_compile(genome, source, log, baseline_ms);
-        }
+
+        self.evaluate_compiled(genome, source)
+    }
+
+    /// Evaluate a candidate whose compile stage already passed, reusing
+    /// its rendered source — the entry point the distributed pool's
+    /// execution workers use so they never redo the compile workers'
+    /// render + checks. For a compilable genome,
+    /// `evaluate(g) == evaluate_compiled(g, render_sycl(g))`.
+    pub fn evaluate_compiled(&mut self, genome: &KernelGenome, source: String) -> EvalRecord {
+        let baseline_ms = self.baseline_ms();
 
         // ---- behavioral classification (static, on source) ------------------
         let coords = classify::classify(genome, &source);
@@ -213,32 +278,15 @@ impl EvalPipeline {
         }
     }
 
-    fn failed_compile(
-        &self,
-        genome: &KernelGenome,
-        source: String,
-        log: String,
-        baseline_ms: f64,
-    ) -> EvalRecord {
-        EvalRecord {
-            genome: genome.clone(),
-            outcome: EvalOutcome::CompileError,
-            coords: genome.intended_coords(),
-            correctness: None,
-            time_ms: 0.0,
-            baseline_ms,
-            speedup: 0.0,
-            fitness: fitness::FITNESS_COMPILE_FAIL,
-            source,
-            log,
-            best_params: None,
-            param_sweep: Vec::new(),
-        }
-    }
-
     /// Simulated correctness + timing: synthesize outputs whose error
     /// profile reflects the genome's latent defects, then run them through
     /// the same ν-criterion code the real backend uses.
+    ///
+    /// The defect-noise stream is derived purely from (pipeline seed,
+    /// genome id) — never from mutable pipeline state — so the verdict for
+    /// a genome is independent of evaluation order. That is the
+    /// determinism contract the distributed pool relies on
+    /// (`crate::dist`): worker scheduling cannot perturb outcomes.
     fn run_simulated(
         &mut self,
         genome: &KernelGenome,
@@ -246,7 +294,10 @@ impl EvalPipeline {
     ) -> (CorrectnessReport, f64, String) {
         const N: usize = 512;
         let mut expected = Vec::with_capacity(N);
-        let mut rng = self.rng.split(genome.id ^ 0x0a7);
+        let mut rng = Rng::with_stream(
+            self.seed ^ genome.id.wrapping_mul(0x9e3779b97f4a7c15),
+            0x0a7,
+        );
         for i in 0..N {
             // Deterministic pseudo-reference values of mixed magnitude.
             expected.push((((i * 37 + 11) % 97) as f32 / 17.0 - 2.0) * 1.7);

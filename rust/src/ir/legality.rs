@@ -24,23 +24,40 @@ impl Default for DeviceLimits {
     }
 }
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum LegalityError {
-    #[error("work-group size {got} exceeds device maximum {max}")]
     WorkGroupTooLarge { got: u64, max: u64 },
-    #[error("SLM footprint {got} B exceeds device budget {max} B")]
     SlmOverflow { got: u64, max: u64 },
-    #[error("vector width {0} is not a power of two in 1..=8")]
     BadVecWidth(u32),
-    #[error("unroll factor {0} out of range 1..=16")]
     BadUnroll(u32),
-    #[error("register blocking {0} out of range 1..=8")]
     BadRegBlock(u32),
-    #[error("work-group dimension is zero")]
     ZeroDim,
-    #[error("tile dimension is zero")]
     ZeroTile,
 }
+
+impl std::fmt::Display for LegalityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LegalityError::WorkGroupTooLarge { got, max } => {
+                write!(f, "work-group size {got} exceeds device maximum {max}")
+            }
+            LegalityError::SlmOverflow { got, max } => {
+                write!(f, "SLM footprint {got} B exceeds device budget {max} B")
+            }
+            LegalityError::BadVecWidth(w) => {
+                write!(f, "vector width {w} is not a power of two in 1..=8")
+            }
+            LegalityError::BadUnroll(u) => write!(f, "unroll factor {u} out of range 1..=16"),
+            LegalityError::BadRegBlock(r) => {
+                write!(f, "register blocking {r} out of range 1..=8")
+            }
+            LegalityError::ZeroDim => write!(f, "work-group dimension is zero"),
+            LegalityError::ZeroTile => write!(f, "tile dimension is zero"),
+        }
+    }
+}
+
+impl std::error::Error for LegalityError {}
 
 /// Check a genome against device limits. The first violation is returned
 /// (a real compiler stops at the first hard error too).

@@ -12,7 +12,10 @@
 //! performance simulator, KernelBench-like task suites, PJRT runtime for
 //! real AOT-compiled Pallas kernels).
 //!
-//! See `DESIGN.md` for the paper→module map and the substitution table.
+//! See `DESIGN.md` for the paper→module map and the substitution table,
+//! and `README.md` for the CLI quickstart.
+
+#![warn(missing_docs)]
 
 pub mod archive;
 pub mod config;
@@ -33,6 +36,7 @@ pub mod hwsim;
 pub mod ir;
 pub mod util;
 
+/// The crate version (from Cargo.toml), shown by `kernelfoundry --help`.
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")
 }

@@ -180,11 +180,22 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         .opt("compile-workers", "2", "compilation workers (no GPU)")
         .opt("exec-workers", "4", "execution workers (one device each)")
         .opt("batch", "32", "candidates per batch")
-        .opt("device", "b580", "device profile");
+        .opt("device", "b580", "device profile")
+        .opt("db", "runs.jsonl", "JSONL database every evaluation is persisted to ('' = off)");
     let p = cmd.parse(args)?;
     let task = catalog::find_task(p.get("task").unwrap())
         .ok_or_else(|| "unknown task".to_string())?;
     let device = DeviceProfile::by_name(p.get("device").unwrap()).ok_or("unknown device")?;
+    // Database server role (Fig. 4 worker type 4). The store is
+    // append-only: fold in rows a previous run persisted. Validate the
+    // existing file *before* evaluating, so a corrupt database cannot
+    // cost the batch (and is never overwritten).
+    let db_path = p.get("db").unwrap_or_default().to_string();
+    let db = Database::new();
+    if !db_path.is_empty() && Path::new(&db_path).exists() {
+        db.load(Path::new(&db_path))
+            .map_err(|e| format!("existing database not loadable, refusing to overwrite: {e}"))?;
+    }
     let pool = WorkerPool::new(ClusterConfig {
         compile_workers: p.get_usize("compile-workers").unwrap_or(2),
         exec_workers: p.get_usize("exec-workers").unwrap_or(4),
@@ -214,6 +225,17 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         correct,
         pool.metrics.compile_rejected.load(std::sync::atomic::Ordering::Relaxed),
     );
+    if !db_path.is_empty() {
+        let idx0 = db.len();
+        for (i, rec) in records.iter().enumerate() {
+            db.insert(DbRow::from_record("serve", "kernelfoundry", idx0 + i, rec));
+        }
+        db.save(Path::new(&db_path)).map_err(|e| e.to_string())?;
+        println!(
+            "database: {} rows -> {db_path} (inspect with `kernelfoundry report --db {db_path}`)",
+            db.len()
+        );
+    }
     Ok(())
 }
 

@@ -8,7 +8,7 @@ use super::pjrt::PjrtRuntime;
 use crate::eval::{BenchConfig, Benchmarker, RealBackend, RealRun};
 use crate::ir::{AlgoStructure, KernelGenome};
 use crate::tasks::TaskSpec;
-use anyhow::{anyhow, Result};
+use crate::util::error::{Error, Result};
 use std::collections::HashMap;
 
 /// Real backend over the artifact library.
@@ -36,7 +36,7 @@ impl PjrtBackend {
     pub fn resolve(&self, task: &str, genome: &KernelGenome) -> Result<&ArtifactInfo> {
         let variants = self.manifest.variants_for(task);
         if variants.is_empty() {
-            return Err(anyhow!("no variants for task {task}"));
+            return Err(Error::msg(format!("no variants for task {task}")));
         }
         let fused = !matches!(genome.algo, AlgoStructure::DirectTranslation);
         let reformulated = matches!(
@@ -73,7 +73,7 @@ impl PjrtBackend {
             "block_fwd" => variants.first().copied(),
             _ => variants.first().copied(),
         };
-        chosen.ok_or_else(|| anyhow!("no matching variant for task {task}"))
+        chosen.ok_or_else(|| Error::msg(format!("no matching variant for task {task}")))
     }
 
     fn time_artifact(&mut self, art: &ArtifactInfo) -> Result<f64> {
@@ -81,7 +81,7 @@ impl PjrtBackend {
         self.runtime.load(art)?;
         let _ = self.runtime.execute(art)?;
         let runtime = &mut self.runtime;
-        let mut err: Option<anyhow::Error> = None;
+        let mut err: Option<Error> = None;
         let mut source = |iters: usize| -> f64 {
             match runtime.time_batch(art, iters) {
                 Ok(ms) => ms,
@@ -124,7 +124,7 @@ impl RealBackend for PjrtBackend {
         let reference = self
             .manifest
             .reference_for(&task.id)
-            .ok_or_else(|| anyhow!("no reference artifact for {}", task.id))?
+            .ok_or_else(|| Error::msg(format!("no reference artifact for {}", task.id)))?
             .clone();
         let t = self.time_artifact(&reference)?;
         self.baseline_cache.insert(task.id.clone(), t);
@@ -135,7 +135,7 @@ impl RealBackend for PjrtBackend {
         let reference = self
             .manifest
             .reference_for(&task.id)
-            .ok_or_else(|| anyhow!("no reference artifact for {}", task.id))?
+            .ok_or_else(|| Error::msg(format!("no reference artifact for {}", task.id)))?
             .clone();
         let variant = self.resolve(&task.id, genome)?.clone();
         let expected: Vec<f32> = self.runtime.execute(&reference)?.concat();

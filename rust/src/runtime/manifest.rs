@@ -47,14 +47,43 @@ pub struct Manifest {
     pub artifacts: BTreeMap<String, ArtifactInfo>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json: {0}")]
-    Json(#[from] json::ParseError),
-    #[error("manifest structure: {0}")]
+    Io(std::io::Error),
+    Json(json::ParseError),
     Structure(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "io: {e}"),
+            ManifestError::Json(e) => write!(f, "json: {e}"),
+            ManifestError::Structure(s) => write!(f, "manifest structure: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(e) => Some(e),
+            ManifestError::Json(e) => Some(e),
+            ManifestError::Structure(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> ManifestError {
+        ManifestError::Io(e)
+    }
+}
+
+impl From<json::ParseError> for ManifestError {
+    fn from(e: json::ParseError) -> ManifestError {
+        ManifestError::Json(e)
+    }
 }
 
 impl Manifest {

@@ -34,16 +34,45 @@ pub struct CustomTask {
     pub test_command: Option<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CustomTaskError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("config error: {0}")]
+    Io(std::io::Error),
     Config(String),
-    #[error("yaml error: {0}")]
-    Yaml(#[from] yamlite::YamlError),
-    #[error("marker error: {0}")]
+    Yaml(yamlite::YamlError),
     Marker(String),
+}
+
+impl std::fmt::Display for CustomTaskError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CustomTaskError::Io(e) => write!(f, "io error: {e}"),
+            CustomTaskError::Config(s) => write!(f, "config error: {s}"),
+            CustomTaskError::Yaml(e) => write!(f, "yaml error: {e}"),
+            CustomTaskError::Marker(s) => write!(f, "marker error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for CustomTaskError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CustomTaskError::Io(e) => Some(e),
+            CustomTaskError::Yaml(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CustomTaskError {
+    fn from(e: std::io::Error) -> CustomTaskError {
+        CustomTaskError::Io(e)
+    }
+}
+
+impl From<yamlite::YamlError> for CustomTaskError {
+    fn from(e: yamlite::YamlError) -> CustomTaskError {
+        CustomTaskError::Yaml(e)
+    }
 }
 
 /// Load a custom task from a directory containing `task.yaml` and a

@@ -1,0 +1,162 @@
+//! Minimal dynamic error type (replacement for `anyhow`, unavailable
+//! offline).
+//!
+//! [`Error`] boxes any `std::error::Error + Send + Sync` root cause and
+//! carries a stack of human-readable context messages, printed outermost
+//! first (`"loading manifest: io: No such file"`), mirroring how `anyhow`
+//! renders its context chain. The [`Context`] extension trait adds
+//! `.context(..)` / `.with_context(..)` to both `Result` and `Option`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Crate-standard result alias (the `anyhow::Result` stand-in).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed dynamic error with context messages.
+pub struct Error {
+    /// Context messages, outermost first.
+    context: Vec<String>,
+    /// The root cause.
+    root: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// Plain-message root cause for [`Error::msg`].
+#[derive(Debug)]
+struct MsgError(String);
+
+impl fmt::Display for MsgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MsgError {}
+
+impl Error {
+    /// Construct an error from a message (the `anyhow!` stand-in).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error {
+            context: Vec::new(),
+            root: Box::new(MsgError(m.to_string())),
+        }
+    }
+
+    /// Attach an outer context message.
+    pub fn wrap(mut self, c: impl fmt::Display) -> Error {
+        self.context.insert(0, c.to_string());
+        self
+    }
+
+    /// The root cause, for downcasting-free inspection.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        &*self.root
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Context messages, then the root's own Display. The root's
+        // `source()` chain is deliberately NOT appended: wrapped error
+        // enums (ManifestError, CustomTaskError, ...) already embed their
+        // cause in their Display, and appending it again would print the
+        // cause twice.
+        for c in &self.context {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.root)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error {
+            context: Vec::new(),
+            root: Box::new(e),
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn message_errors_display() {
+        let e = Error::msg(format!("no variants for task {}", "t1"));
+        assert_eq!(e.to_string(), "no variants for task t1");
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r
+            .context("reading manifest")
+            .map_err(|e| e.wrap("loading artifacts"))
+            .unwrap_err();
+        assert_eq!(e.to_string(), "loading artifacts: reading manifest: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("value missing").unwrap_err();
+        assert_eq!(e.to_string(), "value missing");
+        let w: Option<u32> = Some(7);
+        assert_eq!(w.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn debug_matches_display() {
+        let e = Error::msg("boom").wrap("outer");
+        assert_eq!(format!("{e}"), format!("{e:?}"));
+    }
+}

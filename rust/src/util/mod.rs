@@ -1,12 +1,14 @@
 //! Infrastructure substrate.
 //!
-//! The build environment has no network access and only the `xla` crate's
-//! dependency closure vendored, so the usual ecosystem crates (serde,
-//! rand, clap, criterion, proptest, tokio) are unavailable. This module
-//! provides small, well-tested in-repo replacements (see DESIGN.md §2,
-//! substitution table).
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (serde, rand, clap, criterion, proptest, tokio, anyhow, thiserror) are
+//! unavailable. This module provides small, well-tested in-repo
+//! replacements (see DESIGN.md §2, substitution table). The optional
+//! `pjrt` feature is the sole exception: it reintroduces the `xla` crate
+//! for real artifact execution.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod log;
 pub mod prop;

@@ -32,8 +32,14 @@ impl Rng {
         rng
     }
 
-    /// Derive a child generator (for per-task / per-island reproducibility
-    /// independent of evaluation order).
+    /// Derive a child generator from the current state.
+    ///
+    /// The child depends on how many draws preceded the split, so two
+    /// splits with the same label at different points yield different
+    /// streams. Do NOT use this for anything that must be independent of
+    /// evaluation order (e.g. the eval pipeline's verdict streams — the
+    /// dist determinism contract); derive those with [`Rng::with_stream`]
+    /// from stable identifiers instead.
     pub fn split(&mut self, label: u64) -> Rng {
         Rng::with_stream(self.next_u64() ^ label, label.wrapping_mul(0x9e3779b97f4a7c15) | 1)
     }

@@ -19,15 +19,26 @@ pub struct Hunk {
     pub replace: String,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum DiffError {
-    #[error("malformed diff: {0}")]
     Malformed(String),
-    #[error("search text not found: {0:?}")]
     NotFound(String),
-    #[error("search text is ambiguous ({count} matches): {snippet:?}")]
     Ambiguous { snippet: String, count: usize },
 }
+
+impl std::fmt::Display for DiffError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DiffError::Malformed(m) => write!(f, "malformed diff: {m}"),
+            DiffError::NotFound(s) => write!(f, "search text not found: {s:?}"),
+            DiffError::Ambiguous { snippet, count } => {
+                write!(f, "search text is ambiguous ({count} matches): {snippet:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DiffError {}
 
 /// Parse a diff document containing zero or more hunks.
 pub fn parse_hunks(diff: &str) -> Result<Vec<Hunk>, DiffError> {

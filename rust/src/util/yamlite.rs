@@ -10,12 +10,19 @@
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
-#[error("yaml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct YamlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for YamlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "yaml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
 
 /// Parse a YAML document into the shared `Json` value model.
 pub fn parse(input: &str) -> Result<Json, YamlError> {

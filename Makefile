@@ -5,10 +5,15 @@
 # The artifacts land at <repo>/artifacts, where the Rust side looks for
 # them (CARGO_MANIFEST_DIR/artifacts).
 
-.PHONY: artifacts clean-artifacts
+.PHONY: artifacts clean-artifacts bench-service
 
 artifacts:
 	cd python/compile && python3 aot.py --out ../../artifacts
 
 clean-artifacts:
 	rm -rf artifacts
+
+# Service-layer perf trajectory: jobs/sec, cache hit rate and per-device
+# utilization through the `service` subsystem; emits BENCH_service.json.
+bench-service:
+	cargo bench --bench service_throughput

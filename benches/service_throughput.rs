@@ -1,0 +1,111 @@
+//! Service-layer throughput bench: jobs/sec through the fleet
+//! scheduler, the cache-hit fast path, and per-device utilization.
+//!
+//! Harness-free (`fn main()`), like every bench in this repo. Emits
+//! `BENCH_service.json` so CI and later PRs can track the serving-path
+//! perf trajectory (`make bench-service`).
+
+use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::service::{DeviceTarget, JobSpec, KernelService, ServiceConfig};
+use kernelfoundry::tasks::catalog;
+use kernelfoundry::util::json::Json;
+use std::time::{Duration, Instant};
+
+const JOBS: usize = 6;
+
+fn specs() -> Vec<JobSpec> {
+    catalog::kernelbench_l1()
+        .into_iter()
+        .take(JOBS)
+        .map(|task| {
+            let mut spec = JobSpec::catalog(&task.id, "b580");
+            // Fan out: every job runs on every fleet device.
+            spec.device = DeviceTarget::FanOut;
+            spec.iters = 3;
+            spec.population = 2;
+            spec.seed = 11;
+            spec
+        })
+        .collect()
+}
+
+fn run_wave(service: &KernelService, label: &str) -> (f64, usize) {
+    let start = Instant::now();
+    let ids: Vec<u64> = specs()
+        .into_iter()
+        .map(|spec| service.submit(spec).expect("submit").job_id)
+        .collect();
+    let mut cached_units = 0;
+    for id in ids {
+        let job = service
+            .wait(id, Duration::from_secs(120))
+            .expect("job exists");
+        assert!(job.state().finished(), "{label}: job {id} did not finish");
+        cached_units += job
+            .units
+            .iter()
+            .filter(|u| u.result.as_ref().map(|r| r.cached).unwrap_or(false))
+            .count();
+    }
+    (start.elapsed().as_secs_f64(), cached_units)
+}
+
+fn main() {
+    let devices = vec![DeviceProfile::lnl(), DeviceProfile::b580()];
+    let n_devices = devices.len();
+    let service = KernelService::start(ServiceConfig {
+        devices,
+        compile_workers: 1,
+        exec_workers: 2,
+        queue_capacity: 64,
+        db_path: None,
+    })
+    .expect("service starts");
+
+    println!("## service_throughput — {JOBS} fan-out jobs x {n_devices} devices\n");
+
+    let (cold_s, cold_cached) = run_wave(&service, "cold");
+    assert_eq!(cold_cached, 0, "cold wave must not hit the cache");
+    let (warm_s, warm_cached) = run_wave(&service, "warm");
+    assert_eq!(
+        warm_cached,
+        JOBS * n_devices,
+        "warm wave must be served entirely from the cache"
+    );
+
+    let stats = service.stats();
+    let hit_rate = stats
+        .get_path("cache.hit_rate")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+
+    println!("{:>8} {:>10} {:>12} {:>12}", "wave", "time [s]", "jobs/s", "units/s");
+    for (name, secs) in [("cold", cold_s), ("warm", warm_s)] {
+        println!(
+            "{:>8} {:>10.3} {:>12.1} {:>12.1}",
+            name,
+            secs,
+            JOBS as f64 / secs,
+            (JOBS * n_devices) as f64 / secs
+        );
+    }
+    println!("\ncache hit rate: {hit_rate:.3}");
+    println!("fleet: {}", stats.get("fleet").unwrap().to_string_compact());
+
+    let mut out = Json::obj();
+    out.set("bench", "service_throughput")
+        .set("jobs", JOBS)
+        .set("devices", n_devices)
+        .set("units", JOBS * n_devices)
+        .set("cold_seconds", cold_s)
+        .set("cold_jobs_per_sec", JOBS as f64 / cold_s)
+        .set("warm_seconds", warm_s)
+        .set("warm_jobs_per_sec", JOBS as f64 / warm_s)
+        .set("cache", stats.get("cache").unwrap().clone())
+        .set("fleet", stats.get("fleet").unwrap().clone());
+    std::fs::write("BENCH_service.json", out.to_string_pretty() + "\n")
+        .expect("writing BENCH_service.json");
+    println!("\nwrote BENCH_service.json");
+
+    service.stop();
+}

@@ -3,6 +3,7 @@
 use super::report::{IterationPoint, RunReport};
 use crate::archive::{Elite, InsertOutcome, MapElites};
 use crate::config::FoundryConfig;
+use crate::dist::WorkerPool;
 use crate::eval::{EvalOutcome, EvalPipeline, EvalRecord, ExecBackend};
 use crate::gradient::{hints_for, GradientEstimator};
 use crate::prompts::{EvolvablePrompt, MetaPrompter, Prompt, PromptArchive, PromptBuilder};
@@ -179,7 +180,15 @@ impl EvolutionEngine {
         genome.id = self.next_genome_id;
         self.next_genome_id += 1;
         let record = self.pipeline.evaluate(&genome);
+        self.absorb_record(record)
+    }
 
+    /// Fold an evaluation record — produced by the inline pipeline or by a
+    /// distributed [`WorkerPool`] — into the evolutionary state: outcome
+    /// counters, archive insertion, transition tracking, prompt credit and
+    /// best-kernel bookkeeping. Returns the record for the caller's own
+    /// bookkeeping. The genome id must already be assigned.
+    pub fn absorb_record(&mut self, record: EvalRecord) -> EvalRecord {
         match record.outcome {
             EvalOutcome::CompileError => self.compile_errors += 1,
             EvalOutcome::Incorrect => self.incorrect += 1,
@@ -253,6 +262,38 @@ impl EvolutionEngine {
             let record = self.process_candidate(genome);
             self.last = Some(record);
         }
+        self.finish_generation();
+    }
+
+    /// One generation evaluated through a distributed [`WorkerPool`]
+    /// (Fig. 4 / §3.6) instead of the inline pipeline: the whole
+    /// population is submitted as one batch, compile workers early-reject
+    /// defective candidates, and every record is folded back into the
+    /// evolutionary state in submission order. The pool must be built for
+    /// this engine's device and seeded with
+    /// [`EvalPipeline::seed`](crate::eval::EvalPipeline::seed) so outcome
+    /// classes match the inline path exactly.
+    pub fn step_distributed(&mut self, pool: &WorkerPool) {
+        let prompt = self.build_prompt();
+        self.prompt_archive.note_use(self.current_prompt_id);
+        let mut candidates =
+            self.ensemble
+                .generate(&prompt, self.config.evolution.population, self.iteration);
+        for genome in candidates.iter_mut() {
+            genome.id = self.next_genome_id;
+            self.next_genome_id += 1;
+        }
+        let records = pool.evaluate_batch(&self.task, candidates);
+        for record in records {
+            let record = self.absorb_record(record);
+            self.last = Some(record);
+        }
+        self.finish_generation();
+    }
+
+    /// Shared per-generation epilogue: island rotation, the §3.5
+    /// meta-prompt schedule and the Fig. 3 series point.
+    fn finish_generation(&mut self) {
         self.selector.islands.advance_generation();
 
         // Meta-prompt evolution every N generations (§3.5).
@@ -320,6 +361,16 @@ impl EvolutionEngine {
         }
         if param_opt {
             self.run_param_opt();
+        }
+        self.report("kernelfoundry")
+    }
+
+    /// Run the configured number of generations with every population
+    /// batch evaluated through a distributed [`WorkerPool`] — the path the
+    /// `service` subsystem's fleet lanes drive (§3.6 / Fig. 4).
+    pub fn run_distributed(&mut self, pool: &WorkerPool) -> RunReport {
+        for _ in 0..self.config.evolution.max_generations {
+            self.step_distributed(pool);
         }
         self.report("kernelfoundry")
     }
@@ -441,6 +492,63 @@ mod tests {
                 || r1.incorrect != r2.incorrect
                 || (r1.best_speedup() - r2.best_speedup()).abs() > 1e-9
         );
+    }
+
+    /// The service path: running the whole evolution through a
+    /// WorkerPool produces a full, correct run report.
+    #[test]
+    fn run_distributed_finds_correct_kernel() {
+        let task = catalog::find_task("1_Conv2D_ReLU_BiasAdd").unwrap();
+        let mut e = EvolutionEngine::new(
+            quick_config(),
+            task,
+            ExecBackend::HwSim(DeviceProfile::b580()),
+        );
+        let pool = crate::dist::WorkerPool::new(crate::dist::ClusterConfig {
+            compile_workers: 2,
+            exec_workers: 4,
+            device: DeviceProfile::b580(),
+            queue_capacity: 16,
+            seed: e.pipeline.seed(),
+        });
+        let report = e.run_distributed(&pool);
+        assert!(report.correct(), "distributed run found no correct kernel");
+        assert_eq!(report.series.len(), 12);
+        assert_eq!(report.evaluations, 12 * 4, "one record per candidate");
+        assert!(report.best_speedup() > 1.0);
+    }
+
+    /// With a matched pool seed, the first generation (no feedback state
+    /// yet) produces identical candidates and identical outcome classes
+    /// inline and distributed — the dist determinism contract observed
+    /// from the coordinator's side.
+    #[test]
+    fn first_distributed_generation_matches_inline_outcomes() {
+        let task = catalog::find_task("20_LeakyReLU").unwrap();
+        let mut inline_e = EvolutionEngine::new(
+            quick_config(),
+            task.clone(),
+            ExecBackend::HwSim(DeviceProfile::b580()),
+        );
+        let mut dist_e = EvolutionEngine::new(
+            quick_config(),
+            task,
+            ExecBackend::HwSim(DeviceProfile::b580()),
+        );
+        let pool = crate::dist::WorkerPool::new(crate::dist::ClusterConfig {
+            compile_workers: 1,
+            exec_workers: 2,
+            device: DeviceProfile::b580(),
+            queue_capacity: 4,
+            seed: dist_e.pipeline.seed(),
+        });
+        inline_e.step();
+        dist_e.step_distributed(&pool);
+        assert_eq!(inline_e.records.len(), dist_e.records.len());
+        for (id, inline_rec) in &inline_e.records {
+            let dist_rec = dist_e.records.get(id).expect("same genome ids");
+            assert_eq!(inline_rec.outcome, dist_rec.outcome, "genome {id}");
+        }
     }
 
     #[test]

@@ -143,6 +143,15 @@ impl EvalPipeline {
         }
     }
 
+    /// The seed this pipeline was constructed with. A distributed
+    /// [`crate::dist::WorkerPool`] whose `ClusterConfig::seed` equals this
+    /// value produces the same outcome class for every genome as this
+    /// pipeline — the hook the service fleet uses to keep pool evaluation
+    /// verdict-identical to the engine's inline path.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
     /// Re-seed only the timing-noise stream (the measurement-noise RNG
     /// behind [`crate::hwsim::NoisyClock`]), leaving the verdict
     /// derivation — a pure function of (pipeline seed, genome id) —

@@ -7,7 +7,9 @@
 //! diversity search with kernel-specific behavioral descriptors,
 //! gradient-informed evolution, meta-prompt co-evolution, templated
 //! parameter tuning, the distributed evaluation framework, and the
-//! rigorous benchmarking methodology — plus every substrate it depends on
+//! rigorous benchmarking methodology — plus a kernel-as-a-service layer
+//! (`service`: fleet scheduler, result cache, TCP job API over the §3.6
+//! distributed framework) and every substrate it depends on
 //! (simulated LLM code model, SYCL-like kernel IR + renderer, hardware
 //! performance simulator, KernelBench-like task suites, PJRT runtime for
 //! real AOT-compiled Pallas kernels).
@@ -29,6 +31,7 @@ pub mod gradient;
 pub mod prompts;
 pub mod runtime;
 pub mod selection;
+pub mod service;
 pub mod simllm;
 pub mod tasks;
 pub mod transitions;

@@ -4,8 +4,10 @@
 //! kernelfoundry run        --task <id> --device b580 --iters 40 [--param-opt]
 //! kernelfoundry bench      --table 1|2|3|4|11|fig3  [--out results/]
 //! kernelfoundry serve      --compile-workers N --exec-workers M (distributed demo)
-//! kernelfoundry tasks      [--suite l1|l2|rkb|onednn]
-//! kernelfoundry report     --db runs.jsonl
+//! kernelfoundry daemon     --addr 127.0.0.1:7341 --devices lnl,b580,a6000 (service)
+//! kernelfoundry submit     --addr 127.0.0.1:7341 --task <id> --device b580|all
+//! kernelfoundry tasks      [--suite l1|l2|rkb|onednn] [--json]
+//! kernelfoundry report     --db runs.jsonl [--top N] [--json]
 //! ```
 
 use kernelfoundry::config::FoundryConfig;
@@ -14,10 +16,13 @@ use kernelfoundry::dist::{ClusterConfig, Database, DbRow, WorkerPool};
 use kernelfoundry::eval::ExecBackend;
 use kernelfoundry::experiments::{self, ExperimentScale};
 use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::service::{self, proto, Client, KernelService, Server, ServiceConfig};
 use kernelfoundry::tasks::catalog;
 use kernelfoundry::util::cli::Command;
+use kernelfoundry::util::json::Json;
 use std::path::Path;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -29,6 +34,8 @@ fn main() -> ExitCode {
         "run" => cmd_run(rest),
         "bench" => cmd_bench(rest),
         "serve" => cmd_serve(rest),
+        "daemon" => cmd_daemon(rest),
+        "submit" => cmd_submit(rest),
         "tasks" => cmd_tasks(rest),
         "report" => cmd_report(rest),
         "--help" | "-h" | "help" => {
@@ -49,7 +56,7 @@ fn main() -> ExitCode {
 fn print_usage() {
     println!(
         "kernelfoundry {} — hardware-aware evolutionary GPU kernel optimization (reproduction)\n\n\
-         subcommands:\n  run      optimize kernels for one task\n  bench    regenerate a paper table/figure\n  serve    distributed worker-pool demo\n  tasks    list benchmark tasks\n  report   summarize a results database\n\nuse <subcommand> --help for options",
+         subcommands:\n  run      optimize kernels for one task\n  bench    regenerate a paper table/figure\n  serve    distributed worker-pool demo\n  daemon   long-running kernel-generation service (TCP JSON RPC)\n  submit   client for a running daemon (submit/status/result/cancel/stats)\n  tasks    list benchmark tasks\n  report   summarize a results database\n\nuse <subcommand> --help for options",
         kernelfoundry::version()
     );
 }
@@ -181,11 +188,17 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         .opt("exec-workers", "4", "execution workers (one device each)")
         .opt("batch", "32", "candidates per batch")
         .opt("device", "b580", "device profile")
+        .opt("queue-capacity", "", "inter-stage queue capacity (defaults to the cluster default)")
+        .opt("seed", "", "execution-pipeline RNG seed (defaults to the cluster default)")
         .opt("db", "runs.jsonl", "JSONL database every evaluation is persisted to ('' = off)");
     let p = cmd.parse(args)?;
     let task = catalog::find_task(p.get("task").unwrap())
         .ok_or_else(|| "unknown task".to_string())?;
     let device = DeviceProfile::by_name(p.get("device").unwrap()).ok_or("unknown device")?;
+    // Unset flags fall back to ClusterConfig::default() (the single
+    // source of truth for the demo topology) instead of divergent
+    // hardcoded values.
+    let defaults = ClusterConfig::default();
     // Database server role (Fig. 4 worker type 4). The store is
     // append-only: fold in rows a previous run persisted. Validate the
     // existing file *before* evaluating, so a corrupt database cannot
@@ -197,11 +210,11 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
             .map_err(|e| format!("existing database not loadable, refusing to overwrite: {e}"))?;
     }
     let pool = WorkerPool::new(ClusterConfig {
-        compile_workers: p.get_usize("compile-workers").unwrap_or(2),
-        exec_workers: p.get_usize("exec-workers").unwrap_or(4),
+        compile_workers: p.get_usize("compile-workers").unwrap_or(defaults.compile_workers),
+        exec_workers: p.get_usize("exec-workers").unwrap_or(defaults.exec_workers),
         device,
-        queue_capacity: 64,
-        seed: 1,
+        queue_capacity: p.get_usize("queue-capacity").unwrap_or(defaults.queue_capacity),
+        seed: p.get_u64("seed").unwrap_or(defaults.seed),
     });
     let n = p.get_usize("batch").unwrap_or(32);
     let genomes: Vec<_> = (0..n)
@@ -239,9 +252,213 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_daemon(args: &[String]) -> Result<(), String> {
+    let about = "long-running kernel-generation service (newline-JSON RPC over TCP)";
+    let cmd = Command::new("daemon", about)
+        .opt("addr", "127.0.0.1:7341", "listen address (port 0 = ephemeral)")
+        .opt("devices", "lnl,b580,a6000", "fleet device profiles, comma-separated")
+        .opt("compile-workers", "", "compile workers per lane (default: cluster default)")
+        .opt("exec-workers", "", "execution workers per lane (default: cluster default)")
+        .opt("queue-capacity", "", "job/pool queue capacity (default: cluster default)")
+        .opt("db", "", "JSONL path for cache persistence ('' = in-memory only)")
+        .flag("verbose", "debug logging");
+    let p = cmd.parse(args)?;
+    if p.has_flag("verbose") {
+        kernelfoundry::util::log::set_level(kernelfoundry::util::log::Level::Debug);
+    }
+    let mut devices = Vec::new();
+    for name in p.get("devices").unwrap().split(',').filter(|s| !s.is_empty()) {
+        let device =
+            DeviceProfile::by_name(name).ok_or_else(|| format!("unknown device '{name}'"))?;
+        devices.push(device);
+    }
+    let defaults = ClusterConfig::default();
+    let cfg = ServiceConfig {
+        devices,
+        compile_workers: p.get_usize("compile-workers").unwrap_or(defaults.compile_workers),
+        exec_workers: p.get_usize("exec-workers").unwrap_or(defaults.exec_workers),
+        queue_capacity: p.get_usize("queue-capacity").unwrap_or(defaults.queue_capacity),
+        db_path: p.get("db").filter(|s| !s.is_empty()).map(Into::into),
+    };
+    let service = KernelService::start(cfg)?;
+    let mut server = Server::start(Arc::clone(&service), p.get("addr").unwrap())
+        .map_err(|e| format!("binding {}: {e}", p.get("addr").unwrap()))?;
+    println!(
+        "kernelfoundry daemon listening on {} (fleet: {})",
+        server.addr(),
+        service.device_names().join(", ")
+    );
+    println!("stop with: kernelfoundry submit --addr {} --verb shutdown", server.addr());
+    server.wait();
+    println!("shutting down: draining queued jobs ...");
+    service.stop();
+    Ok(())
+}
+
+fn cmd_submit(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("submit", "client for a running kernelfoundry daemon")
+        .opt("addr", "127.0.0.1:7341", "daemon address")
+        .opt("verb", "submit", "submit | status | result | cancel | stats | shutdown")
+        .opt("job", "", "job id (status / result / cancel)")
+        .opt("task", "", "catalog task id (see `kernelfoundry tasks --json`)")
+        .opt("custom-dir", "", "directory with task.yaml + marked source (inline custom task)")
+        .opt("device", "b580", "fleet device name, or 'all' to fan out across the fleet")
+        .opt("iters", "8", "generations")
+        .opt("population", "4", "candidates per generation")
+        .opt("seed", "20260710", "RNG seed (part of the cache key)")
+        .opt("priority", "normal", "low | normal | high")
+        .opt("timeout", "600", "seconds to wait for completion")
+        .flag("cuda", "generate CUDA instead of SYCL")
+        .flag("no-wait", "return right after submission instead of polling to completion")
+        .flag("json", "print raw JSON responses");
+    let p = cmd.parse(args)?;
+    let addr = p.get("addr").unwrap();
+    let mut client =
+        Client::connect(addr).map_err(|e| format!("connecting to daemon at {addr}: {e}"))?;
+    let raw = p.has_flag("json");
+
+    let simple = |client: &mut Client, req: &proto::Request| -> Result<Json, String> {
+        client.request(req).map_err(|e| e.to_string())
+    };
+    match p.get("verb").unwrap() {
+        "stats" => {
+            let resp = simple(&mut client, &proto::Request::Stats)?;
+            println!("{}", if raw { resp.to_string_compact() } else { resp.to_string_pretty() });
+            return Ok(());
+        }
+        "shutdown" => {
+            let resp = simple(&mut client, &proto::Request::Shutdown)?;
+            println!("{}", resp.to_string_compact());
+            return Ok(());
+        }
+        verb @ ("status" | "result" | "cancel") => {
+            let id = p.get_u64("job").ok_or("--job <id> required for this verb")?;
+            let req = match verb {
+                "status" => proto::Request::Status(id),
+                "result" => proto::Request::Result(id),
+                _ => proto::Request::Cancel(id),
+            };
+            let resp = simple(&mut client, &req)?;
+            println!("{}", if raw { resp.to_string_compact() } else { resp.to_string_pretty() });
+            return Ok(());
+        }
+        "submit" => {}
+        other => return Err(format!("unknown verb '{other}'")),
+    }
+
+    // Build the submit spec: catalog id or inline custom bundle.
+    let task_opt = p.get("task").filter(|s| !s.is_empty());
+    let custom_opt = p.get("custom-dir").filter(|s| !s.is_empty());
+    let task = match (task_opt, custom_opt) {
+        (Some(id), None) => service::TaskSource::Catalog(id.to_string()),
+        (None, Some(dir)) => {
+            let dir = Path::new(dir);
+            let (config, source) = kernelfoundry::tasks::custom::read_dir_strings(dir)
+                .map_err(|e| format!("custom task bundle {}: {e}", dir.display()))?;
+            service::TaskSource::Custom { config, source }
+        }
+        (Some(_), Some(_)) => return Err("--task and --custom-dir are mutually exclusive".into()),
+        (None, None) => return Err("submit needs --task <id> or --custom-dir <dir>".into()),
+    };
+    let device = match p.get("device").unwrap() {
+        "all" => service::DeviceTarget::FanOut,
+        d => service::DeviceTarget::Named(d.to_string()),
+    };
+    let priority = service::JobPriority::parse(p.get("priority").unwrap())
+        .ok_or("priority must be low | normal | high")?;
+    let spec = service::JobSpec {
+        task,
+        device,
+        language: if p.has_flag("cuda") { "cuda" } else { "sycl" }.to_string(),
+        seed: p.get_u64("seed").unwrap_or(service::job::DEFAULT_SEED),
+        iters: p.get_usize("iters").unwrap_or(service::job::DEFAULT_ITERS),
+        population: p.get_usize("population").unwrap_or(service::job::DEFAULT_POPULATION),
+        priority,
+    };
+
+    let resp = simple(&mut client, &proto::Request::Submit(spec))?;
+    if !proto::response_ok(&resp) {
+        return Err(format!(
+            "submit rejected: {}",
+            resp.get("error").and_then(|e| e.as_str()).unwrap_or("unknown error")
+        ));
+    }
+    let id = resp
+        .get("job_id")
+        .and_then(|v| v.as_usize())
+        .ok_or("daemon returned no job_id")? as u64;
+    let state = resp.get("state").and_then(|s| s.as_str()).unwrap_or("queued").to_string();
+    if raw {
+        println!("{}", resp.to_string_compact());
+    } else {
+        println!("job {id}: {state}{}", if state == "done" { " (cache hit)" } else { "" });
+    }
+    if p.has_flag("no-wait") {
+        return Ok(());
+    }
+
+    // Poll to a terminal state, then fetch the full result.
+    let timeout = std::time::Duration::from_secs(p.get_u64("timeout").unwrap_or(600));
+    let started = std::time::Instant::now();
+    let mut state = state;
+    while !matches!(state.as_str(), "done" | "failed" | "cancelled") {
+        if started.elapsed() > timeout {
+            return Err(format!(
+                "timed out after {timeout:?} waiting for job {id} (state: {state})"
+            ));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let resp = simple(&mut client, &proto::Request::Status(id))?;
+        if !proto::response_ok(&resp) {
+            return Err(format!(
+                "status poll for job {id} failed: {}",
+                resp.get("error").and_then(|e| e.as_str()).unwrap_or("unknown error")
+            ));
+        }
+        state = resp.get("state").and_then(|s| s.as_str()).unwrap_or("?").to_string();
+    }
+    let resp = simple(&mut client, &proto::Request::Result(id))?;
+    if raw {
+        println!("{}", resp.to_string_compact());
+        return Ok(());
+    }
+    println!("job {id}: {state}");
+    if let Some(results) = resp.get("results").and_then(|r| r.as_arr()) {
+        for r in results {
+            let gets = |k: &str| r.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string();
+            let getf = |k: &str| r.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            println!(
+                "  {:<6} correct={} speedup {:.3}x ({:.4} ms vs baseline {:.4} ms) by {}{}",
+                gets("device"),
+                r.get("correct").and_then(|v| v.as_bool()).unwrap_or(false),
+                getf("speedup"),
+                getf("time_ms"),
+                getf("baseline_ms"),
+                gets("produced_by"),
+                if r.get("cached").and_then(|v| v.as_bool()).unwrap_or(false) {
+                    " [cached]"
+                } else {
+                    ""
+                },
+            );
+        }
+    }
+    if let Some(errors) = resp.get("errors").and_then(|e| e.as_arr()) {
+        for e in errors {
+            println!(
+                "  {:<6} FAILED: {}",
+                e.get("device").and_then(|v| v.as_str()).unwrap_or("?"),
+                e.get("error").and_then(|v| v.as_str()).unwrap_or("?")
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_tasks(args: &[String]) -> Result<(), String> {
     let cmd = Command::new("tasks", "list benchmark tasks")
-        .opt("suite", "all", "l1 | l2 | rkb | onednn | custom | all");
+        .opt("suite", "all", "l1 | l2 | rkb | onednn | custom | all")
+        .flag("json", "machine-readable output (one JSON array)");
     let p = cmd.parse(args)?;
     let tasks = match p.get("suite").unwrap() {
         "l1" => catalog::kernelbench_l1(),
@@ -251,6 +468,11 @@ fn cmd_tasks(args: &[String]) -> Result<(), String> {
         "custom" => vec![catalog::llama_rope_task()],
         _ => catalog::all_tasks(),
     };
+    if p.has_flag("json") {
+        let arr: Vec<Json> = tasks.iter().map(|t| t.to_json()).collect();
+        println!("{}", Json::Arr(arr).to_string_compact());
+        return Ok(());
+    }
     println!("{:<55} {:>6} {:>14} {:>12}", "task", "ops", "flops", "suite");
     for t in &tasks {
         println!(
@@ -268,14 +490,26 @@ fn cmd_tasks(args: &[String]) -> Result<(), String> {
 fn cmd_report(args: &[String]) -> Result<(), String> {
     let cmd = Command::new("report", "summarize a results database")
         .opt("db", "runs.jsonl", "JSONL database path")
-        .opt("method", "kernelfoundry", "method to summarize");
+        .opt("method", "kernelfoundry", "method to summarize")
+        .opt("top", "0", "show only the N best tasks by speedup (0 = all)")
+        .flag("json", "machine-readable output (one JSON array)");
     let p = cmd.parse(args)?;
     let db = Database::new();
     let n = db
         .load(Path::new(p.get("db").unwrap()))
         .map_err(|e| e.to_string())?;
+    let mut best: Vec<DbRow> = db.best_per_task(p.get("method").unwrap());
+    let top = p.get_usize("top").unwrap_or(0);
+    if top > 0 {
+        best.sort_by(|a, b| b.speedup.partial_cmp(&a.speedup).unwrap_or(std::cmp::Ordering::Equal));
+        best.truncate(top);
+    }
+    if p.has_flag("json") {
+        let arr: Vec<Json> = best.iter().map(|r| r.to_json()).collect();
+        println!("{}", Json::Arr(arr).to_string_compact());
+        return Ok(());
+    }
     println!("loaded {n} rows");
-    let best: Vec<DbRow> = db.best_per_task(p.get("method").unwrap());
     for row in &best {
         println!(
             "{:<55} fitness {:.3} speedup {:.3} cell {:?} by {}",

@@ -1,0 +1,226 @@
+//! TCP transport for the newline-JSON RPC: [`Server`] (the daemon side)
+//! and [`Client`] (the `submit` subcommand / test side).
+//!
+//! The server accepts connections on a `std::net::TcpListener` and
+//! spawns one handler thread per connection; each handler reads one
+//! JSON request per line and writes one JSON response per line, so a
+//! client can hold a single connection open for its whole
+//! submit-poll-fetch conversation. A `shutdown` request stops the
+//! accept loop (after acknowledging); the daemon then drains and joins
+//! the fleet via [`KernelService::stop`].
+
+use super::proto::{self, Request};
+use super::KernelService;
+use crate::util::error::{Context, Error};
+use crate::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+struct ServerState {
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+}
+
+/// The daemon's TCP front end.
+pub struct Server {
+    state: Arc<ServerState>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port) and start the
+    /// accept loop on a background thread.
+    pub fn start(service: Arc<KernelService>, addr: &str) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let state = Arc::new(ServerState {
+            shutdown: AtomicBool::new(false),
+            addr: listener.local_addr()?,
+        });
+        let accept_state = Arc::clone(&state);
+        let handle = thread::spawn(move || {
+            for stream in listener.incoming() {
+                if accept_state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let service = Arc::clone(&service);
+                let conn_state = Arc::clone(&accept_state);
+                thread::spawn(move || handle_connection(stream, service, conn_state));
+            }
+        });
+        Ok(Server {
+            state,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Whether a shutdown has been requested.
+    pub fn is_shutting_down(&self) -> bool {
+        self.state.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Request the accept loop to stop (same path as the RPC `shutdown`
+    /// verb) without joining it.
+    pub fn shutdown(&self) {
+        trigger_shutdown(&self.state);
+    }
+
+    /// Block until the accept loop exits (i.e. until shutdown).
+    pub fn wait(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            handle.join().ok();
+        }
+    }
+}
+
+/// Flip the shutdown flag and poke the listener with a dummy
+/// connection so the blocking `accept` observes it.
+fn trigger_shutdown(state: &ServerState) {
+    state.shutdown.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(state.addr);
+}
+
+fn handle_connection(stream: TcpStream, service: Arc<KernelService>, state: Arc<ServerState>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut writer = stream;
+    let reader = BufReader::new(read_half);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut stop = false;
+        let response = match json::parse(&line) {
+            Err(e) => proto::error_response(&format!("bad request json: {e}")),
+            Ok(v) => match Request::from_json(&v) {
+                Err(e) => proto::error_response(&e),
+                Ok(req) => {
+                    stop = matches!(req, Request::Shutdown);
+                    service.handle(&req)
+                }
+            },
+        };
+        let mut wire = response.to_string_compact();
+        wire.push('\n');
+        if writer.write_all(wire.as_bytes()).is_err() {
+            break;
+        }
+        if stop {
+            trigger_shutdown(&state);
+            break;
+        }
+    }
+}
+
+/// A blocking RPC client holding one connection.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a daemon at `addr` (e.g. `127.0.0.1:7341`).
+    pub fn connect(addr: &str) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client {
+            writer: stream,
+            reader,
+        })
+    }
+
+    /// Send one request object and read the response line.
+    pub fn request_json(&mut self, req: &Json) -> Result<Json, Error> {
+        let mut wire = req.to_string_compact();
+        wire.push('\n');
+        self.writer
+            .write_all(wire.as_bytes())
+            .context("sending request")?;
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .context("reading response")?;
+        if n == 0 {
+            return Err(Error::msg("server closed the connection"));
+        }
+        json::parse(line.trim()).context("parsing response")
+    }
+
+    /// Send a typed request.
+    pub fn request(&mut self, req: &Request) -> Result<Json, Error> {
+        self.request_json(&req.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::DeviceProfile;
+    use crate::service::{JobSpec, ServiceConfig};
+
+    fn serve() -> (Arc<KernelService>, Server) {
+        let service = KernelService::start(ServiceConfig {
+            devices: vec![DeviceProfile::b580()],
+            compile_workers: 1,
+            exec_workers: 2,
+            queue_capacity: 8,
+            db_path: None,
+        })
+        .unwrap();
+        let server = Server::start(Arc::clone(&service), "127.0.0.1:0").unwrap();
+        (service, server)
+    }
+
+    #[test]
+    fn rejects_garbage_and_unknown_verbs_without_dying() {
+        let (service, mut server) = serve();
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        let resp = client
+            .request_json(&json::parse(r#"{"verb":"warp"}"#).unwrap())
+            .unwrap();
+        assert!(!proto::response_ok(&resp));
+        // The same connection still serves valid requests afterwards.
+        let resp = client.request(&Request::Stats).unwrap();
+        assert!(proto::response_ok(&resp));
+        server.shutdown();
+        server.wait();
+        service.stop();
+    }
+
+    #[test]
+    fn shutdown_verb_stops_the_accept_loop() {
+        let (service, mut server) = serve();
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        let resp = client.request(&Request::Shutdown).unwrap();
+        assert!(proto::response_ok(&resp));
+        server.wait(); // returns because the accept loop exited
+        assert!(server.is_shutting_down());
+        service.stop();
+    }
+
+    #[test]
+    fn submit_over_tcp_reaches_the_service() {
+        let (service, mut server) = serve();
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        let mut spec = JobSpec::catalog("20_LeakyReLU", "b580");
+        spec.iters = 2;
+        spec.population = 2;
+        let resp = client.request(&Request::Submit(spec)).unwrap();
+        assert!(proto::response_ok(&resp), "{resp}");
+        let id = resp.get("job_id").unwrap().as_usize().unwrap() as u64;
+        let job = service.wait(id, std::time::Duration::from_secs(30)).unwrap();
+        assert!(job.state().finished());
+        server.shutdown();
+        server.wait();
+        service.stop();
+    }
+}

@@ -1,0 +1,329 @@
+//! The result cache: a warm daemon answers repeat requests without
+//! re-evolving.
+//!
+//! Entries are keyed by `(task fingerprint, device, language, seed,
+//! generation budget)` — everything that determines an evolution run's
+//! outcome. Catalog tasks fingerprint as their id; inline custom tasks
+//! (App. C) fingerprint as an FNV-1a hash over their config + source
+//! text, so two users submitting byte-identical bundles share one cache
+//! line. Hits and misses are counted for the `stats` verb, and correct
+//! results are write-through persisted as [`DbRow`]s via the existing
+//! [`Database`] JSONL store (Fig. 4 worker type 4), so a restarted
+//! daemon pointed at the same `--db` file restores its cache metrics
+//! (kernel sources are not persisted — restored hits carry metrics
+//! only).
+
+use super::job::{DeviceResult, JobSpec, TaskSource};
+use crate::coordinator::engine::hash_str_pub;
+use crate::dist::{Database, DbRow};
+use crate::util::error::Error;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// `method` column of persisted cache rows (distinguishes them from
+/// `serve`-subcommand rows sharing a database file).
+pub const CACHE_METHOD: &str = "service";
+
+/// Stable fingerprint of a job's task: the catalog id, or a content
+/// hash of the inline custom bundle.
+pub fn task_fingerprint(task: &TaskSource) -> String {
+    match task {
+        TaskSource::Catalog(id) => format!("cat:{id}"),
+        TaskSource::Custom { config, source } => {
+            format!("fp:{:016x}", hash_str_pub(&format!("{config}\u{0}{source}")))
+        }
+    }
+}
+
+/// The full cache key for one (spec × device) unit.
+pub fn cache_key(spec: &JobSpec, device: &str) -> String {
+    format!(
+        "{}|{}|{}|s{}|i{}|p{}",
+        task_fingerprint(&spec.task),
+        device,
+        spec.language,
+        spec.seed,
+        spec.iters,
+        spec.population
+    )
+}
+
+/// The shared result cache with hit/miss metrics and optional JSONL
+/// persistence.
+pub struct ResultCache {
+    entries: Mutex<HashMap<String, DeviceResult>>,
+    /// Lookups that found an entry.
+    pub hits: AtomicU64,
+    /// Lookups that found nothing.
+    pub misses: AtomicU64,
+    db: Option<(Database, PathBuf)>,
+}
+
+impl ResultCache {
+    /// A purely in-memory cache (daemon without `--db`).
+    pub fn in_memory() -> ResultCache {
+        ResultCache {
+            entries: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            db: None,
+        }
+    }
+
+    /// A cache persisted through the JSONL database at `path`. An
+    /// existing file is loaded and its `service` rows prewarm the cache
+    /// (metrics only — sources are not persisted); a corrupt file is an
+    /// error rather than silently overwritten, matching the `serve`
+    /// subcommand's discipline.
+    pub fn with_database(path: &Path) -> Result<ResultCache, Error> {
+        let db = Database::new();
+        let mut entries = HashMap::new();
+        if path.exists() {
+            db.load(path)?;
+            for row in db.rows() {
+                if row.method != CACHE_METHOD {
+                    continue;
+                }
+                let device = row.run.split('|').nth(1).unwrap_or("").to_string();
+                entries.insert(
+                    row.run.clone(),
+                    DeviceResult {
+                        device,
+                        task_id: row.task_id.clone(),
+                        correct: row.is_correct(),
+                        fitness: row.fitness,
+                        speedup: row.speedup,
+                        time_ms: row.time_ms,
+                        baseline_ms: row.baseline_ms,
+                        coords: row.coords,
+                        genome_id: row.genome_id,
+                        produced_by: row.produced_by.clone(),
+                        source: String::new(),
+                        evaluations: 0,
+                        compile_errors: 0,
+                        incorrect: 0,
+                        cached: true,
+                        wall_ms: 0.0,
+                    },
+                );
+            }
+        }
+        Ok(ResultCache {
+            entries: Mutex::new(entries),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            db: Some((db, path.to_path_buf())),
+        })
+    }
+
+    /// Number of cached entries.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Whether the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up a key, counting the hit or miss. A hit returns a clone
+    /// with `cached` set.
+    pub fn lookup(&self, key: &str) -> Option<DeviceResult> {
+        let entries = self.entries.lock().unwrap();
+        match entries.get(key) {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                let mut r = r.clone();
+                r.cached = true;
+                Some(r)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly-computed result, write-through persisting
+    /// correct results when a database is configured. Persistence is a
+    /// single-row O(1) append (the store is append-only JSONL — a full
+    /// `Database::save` would rewrite the ever-growing file on every
+    /// insert); errors are logged, not fatal — the in-memory cache stays
+    /// authoritative for this daemon's lifetime.
+    pub fn insert(&self, key: &str, result: DeviceResult) {
+        if let Some((db, path)) = &self.db {
+            if result.correct {
+                let row = DbRow {
+                    run: key.to_string(),
+                    method: CACHE_METHOD.to_string(),
+                    idx: db.len(),
+                    task_id: result.task_id.clone(),
+                    genome_id: result.genome_id,
+                    produced_by: result.produced_by.clone(),
+                    outcome: "correct".to_string(),
+                    coords: result.coords,
+                    fitness: result.fitness,
+                    speedup: result.speedup,
+                    time_ms: result.time_ms,
+                    baseline_ms: result.baseline_ms,
+                };
+                if let Err(e) = append_row(path, &row) {
+                    crate::log_warn!("cache persistence failed: {e}");
+                }
+                db.insert(row);
+            }
+        }
+        self.entries.lock().unwrap().insert(key.to_string(), result);
+    }
+
+    /// Cache metrics for the `stats` verb.
+    pub fn stats_json(&self) -> Json {
+        let hits = self.hits.load(Ordering::Relaxed);
+        let misses = self.misses.load(Ordering::Relaxed);
+        let total = hits + misses;
+        let mut o = Json::obj();
+        o.set("entries", self.len())
+            .set("hits", hits as f64)
+            .set("misses", misses as f64)
+            .set(
+                "hit_rate",
+                if total == 0 { 0.0 } else { hits as f64 / total as f64 },
+            );
+        o
+    }
+}
+
+/// Append one row to the JSONL store as a single O_APPEND write (a
+/// whole line per write call, so concurrent lane appends do not
+/// interleave mid-row).
+fn append_row(path: &Path, row: &DbRow) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut line = row.to_json().to_string_compact();
+    line.push('\n');
+    let mut file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    file.write_all(line.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::job::JobSpec;
+
+    fn result(device: &str, speedup: f64) -> DeviceResult {
+        DeviceResult {
+            device: device.to_string(),
+            task_id: "20_LeakyReLU".to_string(),
+            correct: true,
+            fitness: 0.9,
+            speedup,
+            time_ms: 0.4,
+            baseline_ms: 1.0,
+            coords: [1, 2, 0],
+            genome_id: 17,
+            produced_by: "gpt-4.1".to_string(),
+            source: "kernel source".to_string(),
+            evaluations: 16,
+            compile_errors: 2,
+            incorrect: 3,
+            cached: false,
+            wall_ms: 12.0,
+        }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kf_service_{}_{}.jsonl", name, std::process::id()))
+    }
+
+    #[test]
+    fn key_separates_every_component() {
+        let base = JobSpec::catalog("20_LeakyReLU", "b580");
+        let k = |f: &dyn Fn(&mut JobSpec)| {
+            let mut s = base.clone();
+            f(&mut s);
+            cache_key(&s, "b580")
+        };
+        let k0 = cache_key(&base, "b580");
+        assert_ne!(k0, cache_key(&base, "lnl"), "device in key");
+        assert_ne!(k0, k(&|s| s.language = "cuda".to_string()), "language in key");
+        assert_ne!(k0, k(&|s| s.seed = 1), "seed in key");
+        assert_ne!(k0, k(&|s| s.iters = 9), "iters in key");
+        assert_ne!(k0, k(&|s| s.population = 5), "population in key");
+        assert_ne!(
+            k0,
+            k(&|s| s.task = TaskSource::Catalog("1_Conv2D_ReLU_BiasAdd".to_string())),
+            "task in key"
+        );
+        // Priority is scheduling-only: it must NOT split the cache.
+        assert_eq!(k0, k(&|s| s.priority = super::super::job::JobPriority::High));
+    }
+
+    #[test]
+    fn custom_fingerprint_is_content_addressed() {
+        let a = TaskSource::Custom {
+            config: "name: x\n".to_string(),
+            source: "src".to_string(),
+        };
+        let b = TaskSource::Custom {
+            config: "name: x\n".to_string(),
+            source: "src".to_string(),
+        };
+        let c = TaskSource::Custom {
+            config: "name: y\n".to_string(),
+            source: "src".to_string(),
+        };
+        assert_eq!(task_fingerprint(&a), task_fingerprint(&b));
+        assert_ne!(task_fingerprint(&a), task_fingerprint(&c));
+    }
+
+    #[test]
+    fn hit_and_miss_counters() {
+        let cache = ResultCache::in_memory();
+        assert!(cache.lookup("k").is_none());
+        cache.insert("k", result("b580", 2.0));
+        let hit = cache.lookup("k").unwrap();
+        assert!(hit.cached, "hits are marked cached");
+        assert_eq!(hit.source, "kernel source", "in-memory hits keep the source");
+        assert_eq!(cache.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.misses.load(Ordering::Relaxed), 1);
+        let stats = cache.stats_json();
+        assert_eq!(stats.get("entries").unwrap().as_usize(), Some(1));
+        assert_eq!(stats.get("hit_rate").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn persists_and_prewarms_through_database() {
+        let path = tmp_path("prewarm");
+        std::fs::remove_file(&path).ok();
+        {
+            let cache = ResultCache::with_database(&path).unwrap();
+            cache.insert("fp:abc|b580|sycl|s1|i2|p2", result("b580", 1.7));
+        }
+        let warm = ResultCache::with_database(&path).unwrap();
+        assert_eq!(warm.len(), 1);
+        let hit = warm.lookup("fp:abc|b580|sycl|s1|i2|p2").unwrap();
+        assert!(hit.cached);
+        assert_eq!(hit.device, "b580", "device recovered from the key");
+        assert_eq!(hit.speedup, 1.7);
+        assert_eq!(hit.source, "", "sources are not persisted");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn incorrect_results_cached_in_memory_but_not_persisted() {
+        let path = tmp_path("incorrect");
+        std::fs::remove_file(&path).ok();
+        {
+            let cache = ResultCache::with_database(&path).unwrap();
+            let mut r = result("b580", 0.0);
+            r.correct = false;
+            cache.insert("k", r);
+            assert!(cache.lookup("k").is_some(), "negative results hit in memory");
+        }
+        let warm = ResultCache::with_database(&path).unwrap();
+        assert!(warm.is_empty(), "negative results do not survive restart");
+        std::fs::remove_file(&path).ok();
+    }
+}

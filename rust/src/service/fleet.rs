@@ -1,0 +1,378 @@
+//! The heterogeneous fleet scheduler: one lane per device profile.
+//!
+//! Each lane owns one (simulated) device and runs a worker thread that
+//! pops units routed to its device from the shared [`JobQueue`]. A
+//! popped unit becomes a full §3.1 evolution run: the lane builds an
+//! [`EvolutionEngine`] for the job's task and its own device, plus a
+//! [`WorkerPool`] (Fig. 4 compile→execute cluster) seeded to be
+//! verdict-identical to the engine's inline pipeline, and drives
+//! [`EvolutionEngine::run_distributed`]. Heterogeneity is the point:
+//! lanes for `lnl`, `b580` and `a6000` run simultaneously, so a routed
+//! job occupies one device while a fan-out job compares all of them —
+//! the paper's "remote access to diverse hardware" (§3.6).
+//!
+//! Per-lane counters (busy time, units, pipeline totals) feed the
+//! `stats` verb's utilization report.
+
+use super::cache::{cache_key, ResultCache};
+use super::job::{DeviceResult, JobState, JobTable, TaskSource};
+use super::queue::{JobQueue, QueuedUnit};
+use super::ServiceConfig;
+use crate::config::FoundryConfig;
+use crate::coordinator::EvolutionEngine;
+use crate::dist::{ClusterConfig, WorkerPool};
+use crate::eval::ExecBackend;
+use crate::hwsim::DeviceProfile;
+use crate::tasks::{catalog, custom};
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+/// Per-lane counters, accumulated over the lane's lifetime.
+#[derive(Debug, Default)]
+pub struct LaneStats {
+    /// Wall-clock microseconds the lane spent executing units.
+    pub busy_us: AtomicU64,
+    /// Units completed with a result.
+    pub units_done: AtomicU64,
+    /// Units that failed.
+    pub units_failed: AtomicU64,
+    /// Candidates executed on the lane's device across all units.
+    pub executed: AtomicU64,
+    /// Candidates early-rejected by the lane's compile workers.
+    pub compile_rejected: AtomicU64,
+}
+
+/// One device lane: the profile plus its live counters.
+pub struct LaneInfo {
+    /// The lane's device profile.
+    pub device: DeviceProfile,
+    /// The lane's counters.
+    pub stats: Arc<LaneStats>,
+}
+
+/// The fleet: every lane plus the worker threads driving them.
+pub struct Fleet {
+    lanes: Vec<LaneInfo>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+    started: Instant,
+}
+
+impl Fleet {
+    /// Spawn one lane thread per configured device. Lanes run until the
+    /// queue shuts down (draining remaining units first).
+    pub fn spawn(
+        cfg: &ServiceConfig,
+        queue: &Arc<JobQueue>,
+        jobs: &Arc<JobTable>,
+        cache: &Arc<ResultCache>,
+    ) -> Fleet {
+        let mut lanes = Vec::new();
+        let mut handles = Vec::new();
+        for device in &cfg.devices {
+            let stats = Arc::new(LaneStats::default());
+            lanes.push(LaneInfo {
+                device: device.clone(),
+                stats: Arc::clone(&stats),
+            });
+            let device = device.clone();
+            let queue = Arc::clone(queue);
+            let jobs = Arc::clone(jobs);
+            let cache = Arc::clone(cache);
+            let compile_workers = cfg.compile_workers;
+            let exec_workers = cfg.exec_workers;
+            let queue_capacity = cfg.queue_capacity;
+            handles.push(thread::spawn(move || {
+                lane_main(
+                    device,
+                    compile_workers,
+                    exec_workers,
+                    queue_capacity,
+                    queue,
+                    jobs,
+                    cache,
+                    stats,
+                )
+            }));
+        }
+        Fleet {
+            lanes,
+            handles: Mutex::new(handles),
+            started: Instant::now(),
+        }
+    }
+
+    /// Device names in lane order.
+    pub fn device_names(&self) -> Vec<String> {
+        self.lanes.iter().map(|l| l.device.name.to_string()).collect()
+    }
+
+    /// Whether a lane exists for the named device.
+    pub fn has_device(&self, name: &str) -> bool {
+        self.lanes.iter().any(|l| l.device.name == name)
+    }
+
+    /// Number of lanes.
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Whether the fleet has no lanes.
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    /// Per-device utilization report for the `stats` verb: busy time,
+    /// unit counts and pipeline totals, with `utilization` = busy
+    /// wall-clock over fleet uptime.
+    pub fn stats_json(&self) -> Json {
+        let uptime_us = self.started.elapsed().as_micros().max(1) as f64;
+        let rows: Vec<Json> = self
+            .lanes
+            .iter()
+            .map(|lane| {
+                let busy_us = lane.stats.busy_us.load(Ordering::Relaxed) as f64;
+                let mut o = Json::obj();
+                o.set("device", lane.device.name)
+                    .set("units_done", lane.stats.units_done.load(Ordering::Relaxed) as f64)
+                    .set(
+                        "units_failed",
+                        lane.stats.units_failed.load(Ordering::Relaxed) as f64,
+                    )
+                    .set("executed", lane.stats.executed.load(Ordering::Relaxed) as f64)
+                    .set(
+                        "compile_rejected",
+                        lane.stats.compile_rejected.load(Ordering::Relaxed) as f64,
+                    )
+                    .set("busy_ms", busy_us / 1000.0)
+                    .set("utilization", (busy_us / uptime_us).min(1.0));
+                o
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+
+    /// Join every lane thread (call after the queue has shut down).
+    pub fn join(&self) {
+        for handle in self.handles.lock().unwrap().drain(..) {
+            handle.join().ok();
+        }
+    }
+}
+
+/// One lane's worker loop: pop → run → record, until shutdown.
+#[allow(clippy::too_many_arguments)]
+fn lane_main(
+    device: DeviceProfile,
+    compile_workers: usize,
+    exec_workers: usize,
+    queue_capacity: usize,
+    queue: Arc<JobQueue>,
+    jobs: Arc<JobTable>,
+    cache: Arc<ResultCache>,
+    stats: Arc<LaneStats>,
+) {
+    while let Some(unit) = queue.pop_for(device.name) {
+        jobs.set_unit_state(unit.job_id, device.name, JobState::Generating);
+        let t0 = Instant::now();
+        // catch_unwind: a panicking unit must fail *that job*, not kill
+        // the lane — a dead lane would silently remove the device from
+        // the fleet while its queued units hang forever.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_unit(
+                &unit,
+                &device,
+                compile_workers,
+                exec_workers,
+                queue_capacity,
+                &jobs,
+                &stats,
+            )
+        }))
+        .unwrap_or_else(|_| Err("unit execution panicked (lane recovered)".to_string()));
+        stats
+            .busy_us
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        match outcome {
+            Ok(result) => {
+                cache.insert(&cache_key(&unit.spec, device.name), result.clone());
+                stats.units_done.fetch_add(1, Ordering::Relaxed);
+                jobs.complete_unit(unit.job_id, device.name, result);
+            }
+            Err(msg) => {
+                stats.units_failed.fetch_add(1, Ordering::Relaxed);
+                jobs.fail_unit(unit.job_id, device.name, msg);
+            }
+        }
+    }
+}
+
+/// Execute one unit: resolve the task, build engine + pool for this
+/// lane's device, run the evolution loop, summarize.
+fn run_unit(
+    unit: &QueuedUnit,
+    device: &DeviceProfile,
+    compile_workers: usize,
+    exec_workers: usize,
+    queue_capacity: usize,
+    jobs: &JobTable,
+    stats: &LaneStats,
+) -> Result<DeviceResult, String> {
+    let task = match &unit.spec.task {
+        TaskSource::Catalog(id) => {
+            catalog::find_task(id).ok_or_else(|| format!("unknown task '{id}'"))?
+        }
+        TaskSource::Custom { config, source } => custom::load_strings(config, source)
+            .map_err(|e| format!("custom task: {e}"))?
+            .spec,
+    };
+    let mut config = FoundryConfig::paper_defaults();
+    config.seed = unit.spec.seed;
+    config.device = device.name.to_string();
+    config.language = unit.spec.language.clone();
+    config.evolution.max_generations = unit.spec.iters;
+    config.evolution.population = unit.spec.population;
+
+    let mut engine = EvolutionEngine::new(config, task, ExecBackend::HwSim(device.clone()));
+    // The lane's Fig. 4 cluster, seeded so every verdict matches the
+    // engine's inline pipeline (see `EvalPipeline::seed`).
+    let pool = WorkerPool::new(ClusterConfig {
+        compile_workers,
+        exec_workers,
+        device: device.clone(),
+        queue_capacity,
+        seed: engine.pipeline.seed(),
+    });
+
+    jobs.set_unit_state(unit.job_id, device.name, JobState::Evaluating);
+    let t0 = Instant::now();
+    let report = engine.run_distributed(&pool);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+    stats
+        .executed
+        .fetch_add(pool.metrics.executed.load(Ordering::Relaxed), Ordering::Relaxed);
+    stats.compile_rejected.fetch_add(
+        pool.metrics.compile_rejected.load(Ordering::Relaxed),
+        Ordering::Relaxed,
+    );
+    Ok(DeviceResult::from_report(device.name, &report, wall_ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::job::{Job, JobPriority, JobSpec, JobUnit};
+
+    type Fixture = (ServiceConfig, Arc<JobQueue>, Arc<JobTable>, Arc<ResultCache>);
+
+    fn fleet_fixture(devices: Vec<DeviceProfile>) -> Fixture {
+        let cfg = ServiceConfig {
+            devices,
+            compile_workers: 1,
+            exec_workers: 2,
+            queue_capacity: 8,
+            db_path: None,
+        };
+        (
+            cfg,
+            Arc::new(JobQueue::new(8)),
+            Arc::new(JobTable::new()),
+            Arc::new(ResultCache::in_memory()),
+        )
+    }
+
+    /// A lane executes a queued unit end-to-end: job table completion,
+    /// cache population and stats accounting.
+    #[test]
+    fn lane_runs_a_unit_to_completion() {
+        let (cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache);
+        assert!(fleet.has_device("b580"));
+        assert!(!fleet.has_device("lnl"));
+
+        let mut spec = JobSpec::catalog("20_LeakyReLU", "b580");
+        spec.iters = 2;
+        spec.population = 2;
+        jobs.insert(Job {
+            id: 1,
+            spec: spec.clone(),
+            submitted_at: Instant::now(),
+            units: vec![JobUnit {
+                device: "b580".to_string(),
+                state: JobState::Queued,
+                result: None,
+                error: None,
+            }],
+        });
+        queue
+            .push(vec![QueuedUnit {
+                job_id: 1,
+                device: "b580".to_string(),
+                priority: JobPriority::Normal,
+                seq: 0,
+                spec: spec.clone(),
+            }])
+            .unwrap();
+
+        let deadline = Instant::now() + std::time::Duration::from_secs(30);
+        while !jobs.get(1).unwrap().state().finished() {
+            assert!(Instant::now() < deadline, "unit did not finish in time");
+            thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let job = jobs.get(1).unwrap();
+        assert_eq!(job.state(), JobState::Done);
+        let result = job.units[0].result.as_ref().expect("unit result");
+        assert_eq!(result.device, "b580");
+        assert_eq!(result.evaluations, 4, "2 gens x pop 2");
+        assert!(!result.cached);
+        assert_eq!(cache.len(), 1, "completed unit populated the cache");
+        assert_eq!(fleet.lanes[0].stats.units_done.load(Ordering::Relaxed), 1);
+        assert!(fleet.lanes[0].stats.busy_us.load(Ordering::Relaxed) > 0);
+
+        queue.shutdown();
+        fleet.join();
+    }
+
+    /// A run-time failure (task unknown at execution) marks the unit —
+    /// and hence the job — failed instead of wedging the lane.
+    #[test]
+    fn lane_survives_a_failing_unit() {
+        let (cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache);
+        let spec = JobSpec::catalog("no_such_task", "b580");
+        jobs.insert(Job {
+            id: 1,
+            spec: spec.clone(),
+            submitted_at: Instant::now(),
+            units: vec![JobUnit {
+                device: "b580".to_string(),
+                state: JobState::Queued,
+                result: None,
+                error: None,
+            }],
+        });
+        queue
+            .push(vec![QueuedUnit {
+                job_id: 1,
+                device: "b580".to_string(),
+                priority: JobPriority::Normal,
+                seq: 0,
+                spec,
+            }])
+            .unwrap();
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        while !jobs.get(1).unwrap().state().finished() {
+            assert!(Instant::now() < deadline, "unit did not finish in time");
+            thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let job = jobs.get(1).unwrap();
+        assert_eq!(job.state(), JobState::Failed);
+        assert!(job.units[0].error.as_ref().unwrap().contains("unknown task"));
+        assert_eq!(fleet.lanes[0].stats.units_failed.load(Ordering::Relaxed), 1);
+        queue.shutdown();
+        fleet.join();
+    }
+}

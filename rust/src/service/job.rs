@@ -1,0 +1,666 @@
+//! Job model for the kernel-generation service: specs, priorities,
+//! lifecycle states, per-device results and the shared job table.
+//!
+//! A submitted job is split into one *unit* per target device (one unit
+//! for a routed job, one per fleet lane for a fan-out job). Units move
+//! through the §3.6 lifecycle `queued → generating → evaluating →
+//! done/failed` independently; the job-level state is the aggregate over
+//! its units.
+
+use crate::coordinator::RunReport;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default generations per service job (a serving budget, deliberately
+/// smaller than the paper's 40-generation benchmark budget).
+pub const DEFAULT_ITERS: usize = 8;
+/// Default population per generation for service jobs.
+pub const DEFAULT_POPULATION: usize = 4;
+/// Default RNG seed for service jobs (the repo-wide demo seed).
+pub const DEFAULT_SEED: u64 = 20260710;
+
+/// Scheduling priority of a job. Higher priorities are popped first;
+/// within a priority class units are served in submission order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum JobPriority {
+    /// Background work (cache warming, speculative fan-outs).
+    Low,
+    /// The default.
+    Normal,
+    /// Interactive requests.
+    High,
+}
+
+impl JobPriority {
+    /// Wire name of the priority.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobPriority::Low => "low",
+            JobPriority::Normal => "normal",
+            JobPriority::High => "high",
+        }
+    }
+
+    /// Parse a wire name (`low` | `normal` | `high`).
+    pub fn parse(s: &str) -> Option<JobPriority> {
+        match s {
+            "low" => Some(JobPriority::Low),
+            "normal" => Some(JobPriority::Normal),
+            "high" => Some(JobPriority::High),
+            _ => None,
+        }
+    }
+}
+
+/// Lifecycle state of a job unit (and, aggregated, of a job).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting in the fleet queue.
+    Queued,
+    /// Picked up by a lane; engine + pool are being constructed and the
+    /// code model is producing the first candidates.
+    Generating,
+    /// The evolution loop is running candidates through the lane's
+    /// worker pool.
+    Evaluating,
+    /// Finished with a result (which may or may not contain a correct
+    /// kernel — see [`DeviceResult::correct`]).
+    Done,
+    /// Aborted with an error (unknown task at run time, etc.).
+    Failed,
+    /// Removed from the queue before any lane picked it up.
+    Cancelled,
+}
+
+impl JobState {
+    /// Wire name of the state.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Generating => "generating",
+            JobState::Evaluating => "evaluating",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Whether the state is terminal (done / failed / cancelled).
+    pub fn finished(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// What kernel-generation problem a job solves: a catalog task id, or an
+/// inline custom task in the App. C marker format (the paper's flexible
+/// user input layer, shipped over the wire instead of read from disk).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskSource {
+    /// A task id resolvable via [`crate::tasks::catalog::find_task`].
+    Catalog(String),
+    /// An inline custom task bundle parsed by
+    /// [`crate::tasks::custom::load_strings`].
+    Custom {
+        /// The `task.yaml` config text.
+        config: String,
+        /// The marker-annotated source text (`### KF:REFERENCE ###` …).
+        source: String,
+    },
+}
+
+/// Which fleet device(s) a job runs on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeviceTarget {
+    /// Route to the named device's lane.
+    Named(String),
+    /// Fan out: one unit per fleet device, for cross-hardware comparison.
+    FanOut,
+}
+
+/// A complete job specification — everything the `submit` verb carries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// The problem to solve.
+    pub task: TaskSource,
+    /// Target device(s).
+    pub device: DeviceTarget,
+    /// Kernel language (`sycl` | `cuda`).
+    pub language: String,
+    /// Base RNG seed (part of the cache key).
+    pub seed: u64,
+    /// Generations to run.
+    pub iters: usize,
+    /// Candidates per generation.
+    pub population: usize,
+    /// Scheduling priority.
+    pub priority: JobPriority,
+}
+
+impl JobSpec {
+    /// A spec for a catalog task on one device with service defaults.
+    pub fn catalog(task_id: &str, device: &str) -> JobSpec {
+        JobSpec {
+            task: TaskSource::Catalog(task_id.to_string()),
+            device: DeviceTarget::Named(device.to_string()),
+            language: "sycl".to_string(),
+            seed: DEFAULT_SEED,
+            iters: DEFAULT_ITERS,
+            population: DEFAULT_POPULATION,
+            priority: JobPriority::Normal,
+        }
+    }
+
+    /// Serialize to the wire object form (the body of a `submit`
+    /// request, minus the `verb` key the caller adds).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match &self.task {
+            TaskSource::Catalog(id) => {
+                o.set("task", id.as_str());
+            }
+            TaskSource::Custom { config, source } => {
+                let mut c = Json::obj();
+                c.set("config", config.as_str()).set("source", source.as_str());
+                o.set("custom", c);
+            }
+        }
+        match &self.device {
+            DeviceTarget::Named(d) => {
+                o.set("device", d.as_str());
+            }
+            DeviceTarget::FanOut => {
+                o.set("device", "all");
+            }
+        }
+        o.set("language", self.language.as_str())
+            .set("seed", self.seed as f64)
+            .set("iters", self.iters)
+            .set("population", self.population)
+            .set("priority", self.priority.name());
+        o
+    }
+
+    /// Parse from the wire object form; unknown keys are ignored, absent
+    /// optional keys take the service defaults.
+    pub fn from_json(v: &Json) -> Result<JobSpec, String> {
+        let task = if let Some(id) = v.get("task").and_then(|t| t.as_str()) {
+            TaskSource::Catalog(id.to_string())
+        } else if let Some(c) = v.get("custom") {
+            let config = c
+                .get("config")
+                .and_then(|x| x.as_str())
+                .ok_or("custom task needs a 'config' string")?;
+            let source = c
+                .get("source")
+                .and_then(|x| x.as_str())
+                .ok_or("custom task needs a 'source' string")?;
+            TaskSource::Custom {
+                config: config.to_string(),
+                source: source.to_string(),
+            }
+        } else {
+            return Err(
+                "submit needs either 'task' (catalog id) or 'custom' {config, source}".into(),
+            );
+        };
+        let device = match v.get("device").and_then(|d| d.as_str()) {
+            None => DeviceTarget::Named("b580".to_string()),
+            Some("all") => DeviceTarget::FanOut,
+            Some(d) => DeviceTarget::Named(d.to_string()),
+        };
+        let priority = match v.get("priority").and_then(|p| p.as_str()) {
+            None => JobPriority::Normal,
+            Some(p) => JobPriority::parse(p)
+                .ok_or_else(|| format!("unknown priority '{p}' (low | normal | high)"))?,
+        };
+        Ok(JobSpec {
+            task,
+            device,
+            language: v
+                .get("language")
+                .and_then(|l| l.as_str())
+                .unwrap_or("sycl")
+                .to_string(),
+            seed: v
+                .get("seed")
+                .and_then(|s| s.as_i64())
+                .map(|s| s as u64)
+                .unwrap_or(DEFAULT_SEED),
+            iters: v.get("iters").and_then(|i| i.as_usize()).unwrap_or(DEFAULT_ITERS),
+            population: v
+                .get("population")
+                .and_then(|p| p.as_usize())
+                .unwrap_or(DEFAULT_POPULATION),
+            priority,
+        })
+    }
+}
+
+/// The outcome of one job unit: the best kernel one device's evolution
+/// run produced (or the evidence that none was found).
+#[derive(Debug, Clone)]
+pub struct DeviceResult {
+    /// Device the unit ran on.
+    pub device: String,
+    /// Task the kernel implements.
+    pub task_id: String,
+    /// Whether a numerically-correct kernel was found.
+    pub correct: bool,
+    /// §3.2 fitness of the best kernel (0 if none).
+    pub fitness: f64,
+    /// Speedup of the best kernel over the eager baseline.
+    pub speedup: f64,
+    /// Measured best-kernel time, ms.
+    pub time_ms: f64,
+    /// Eager baseline time, ms.
+    pub baseline_ms: f64,
+    /// Behavioral coordinates of the best kernel.
+    pub coords: [usize; 3],
+    /// Genome id of the best kernel within its run.
+    pub genome_id: u64,
+    /// Ensemble model that produced the best kernel.
+    pub produced_by: String,
+    /// Rendered best-kernel source (empty when restored from a persisted
+    /// cache row, which stores metrics only).
+    pub source: String,
+    /// Total candidates evaluated by the run.
+    pub evaluations: usize,
+    /// Compile-rejected candidates.
+    pub compile_errors: usize,
+    /// Incorrect candidates.
+    pub incorrect: usize,
+    /// Whether this result was served from the cache.
+    pub cached: bool,
+    /// Wall-clock time of the evolution run, ms (0 for cache hits).
+    pub wall_ms: f64,
+}
+
+impl DeviceResult {
+    /// Build from a finished evolution run.
+    pub fn from_report(device: &str, report: &RunReport, wall_ms: f64) -> DeviceResult {
+        let best = report.best.as_ref();
+        DeviceResult {
+            device: device.to_string(),
+            task_id: report.task_id.clone(),
+            correct: best.is_some(),
+            fitness: best.map(|b| b.fitness).unwrap_or(0.0),
+            speedup: report.best_speedup(),
+            time_ms: best.map(|b| b.time_ms).unwrap_or(0.0),
+            baseline_ms: best.map(|b| b.baseline_ms).unwrap_or(0.0),
+            coords: best.map(|b| b.coords).unwrap_or([0, 0, 0]),
+            genome_id: best.map(|b| b.genome.id).unwrap_or(0),
+            produced_by: best.map(|b| b.genome.produced_by.clone()).unwrap_or_default(),
+            source: best.map(|b| b.source.clone()).unwrap_or_default(),
+            evaluations: report.evaluations,
+            compile_errors: report.compile_errors,
+            incorrect: report.incorrect,
+            cached: false,
+            wall_ms,
+        }
+    }
+
+    /// Serialize to the wire object form. `with_source` controls whether
+    /// the (potentially large) kernel source is included.
+    pub fn to_json(&self, with_source: bool) -> Json {
+        let mut o = Json::obj();
+        o.set("device", self.device.as_str())
+            .set("task_id", self.task_id.as_str())
+            .set("correct", self.correct)
+            .set("fitness", self.fitness)
+            .set("speedup", self.speedup)
+            .set("time_ms", self.time_ms)
+            .set("baseline_ms", self.baseline_ms)
+            .set("coords", self.coords.to_vec())
+            .set("genome_id", self.genome_id.to_string())
+            .set("produced_by", self.produced_by.as_str())
+            .set("evaluations", self.evaluations)
+            .set("compile_errors", self.compile_errors)
+            .set("incorrect", self.incorrect)
+            .set("cached", self.cached)
+            .set("wall_ms", self.wall_ms);
+        if with_source {
+            o.set("source", self.source.as_str());
+        }
+        o
+    }
+}
+
+/// One (job × device) execution unit.
+#[derive(Debug, Clone)]
+pub struct JobUnit {
+    /// Device name this unit is routed to.
+    pub device: String,
+    /// Current lifecycle state.
+    pub state: JobState,
+    /// Result once the unit is done (set immediately for cache hits).
+    pub result: Option<DeviceResult>,
+    /// Error message if the unit failed.
+    pub error: Option<String>,
+}
+
+/// A submitted job: spec + per-device units.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Service-assigned job id (monotonic, starting at 1).
+    pub id: u64,
+    /// The submitted spec.
+    pub spec: JobSpec,
+    /// When the job was accepted.
+    pub submitted_at: Instant,
+    /// One unit per target device.
+    pub units: Vec<JobUnit>,
+}
+
+impl Job {
+    /// Aggregate state over the units: active beats queued beats
+    /// terminal; among terminal states failed beats cancelled beats done.
+    pub fn state(&self) -> JobState {
+        let any = |s: JobState| self.units.iter().any(|u| u.state == s);
+        if any(JobState::Evaluating) {
+            JobState::Evaluating
+        } else if any(JobState::Generating) {
+            JobState::Generating
+        } else if any(JobState::Queued) {
+            JobState::Queued
+        } else if any(JobState::Failed) {
+            JobState::Failed
+        } else if any(JobState::Cancelled) {
+            JobState::Cancelled
+        } else {
+            JobState::Done
+        }
+    }
+
+    /// Units in a terminal state.
+    pub fn units_finished(&self) -> usize {
+        self.units.iter().filter(|u| u.state.finished()).count()
+    }
+
+    /// Serialize for the `status` / `result` verbs. `with_results`
+    /// includes the per-device result objects (kernel source included);
+    /// `status` omits them to stay small for polling loops.
+    pub fn to_json(&self, with_results: bool) -> Json {
+        let mut o = Json::obj();
+        o.set("ok", true)
+            .set("job_id", self.id as usize)
+            .set("state", self.state().name())
+            .set("priority", self.spec.priority.name())
+            .set(
+                "devices",
+                self.units.iter().map(|u| u.device.clone()).collect::<Vec<_>>(),
+            )
+            .set("units_total", self.units.len())
+            .set("units_finished", self.units_finished());
+        if with_results {
+            let results: Vec<Json> = self
+                .units
+                .iter()
+                .filter_map(|u| u.result.as_ref().map(|r| r.to_json(true)))
+                .collect();
+            o.set("results", Json::Arr(results));
+            let errors: Vec<Json> = self
+                .units
+                .iter()
+                .filter_map(|u| {
+                    u.error.as_ref().map(|e| {
+                        let mut eo = Json::obj();
+                        eo.set("device", u.device.as_str()).set("error", e.as_str());
+                        eo
+                    })
+                })
+                .collect();
+            if !errors.is_empty() {
+                o.set("errors", Json::Arr(errors));
+            }
+        }
+        o
+    }
+}
+
+/// Counts of jobs by aggregate state (the `stats` verb's `jobs` block).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JobCounts {
+    /// Jobs accepted over the service lifetime.
+    pub submitted: usize,
+    /// Jobs currently queued (no unit picked up yet).
+    pub queued: usize,
+    /// Jobs with at least one unit generating/evaluating.
+    pub running: usize,
+    /// Jobs fully done.
+    pub done: usize,
+    /// Jobs that failed.
+    pub failed: usize,
+    /// Jobs that were cancelled.
+    pub cancelled: usize,
+}
+
+impl JobCounts {
+    /// Serialize to the wire object form.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("submitted", self.submitted)
+            .set("queued", self.queued)
+            .set("running", self.running)
+            .set("done", self.done)
+            .set("failed", self.failed)
+            .set("cancelled", self.cancelled);
+        o
+    }
+}
+
+/// The shared job table: every accepted job by id, updatable through a
+/// shared reference by the API handlers and the fleet lanes.
+#[derive(Debug, Default)]
+pub struct JobTable {
+    jobs: Mutex<HashMap<u64, Job>>,
+}
+
+impl JobTable {
+    /// Create an empty table.
+    pub fn new() -> JobTable {
+        JobTable::default()
+    }
+
+    /// Register a job (must happen *before* its units are queued, so a
+    /// lane can never observe a unit whose job is unknown).
+    pub fn insert(&self, job: Job) {
+        self.jobs.lock().unwrap().insert(job.id, job);
+    }
+
+    /// Remove a job (submit rollback when the queue rejects the units).
+    pub fn remove(&self, id: u64) {
+        self.jobs.lock().unwrap().remove(&id);
+    }
+
+    /// Snapshot of one job.
+    pub fn get(&self, id: u64) -> Option<Job> {
+        self.jobs.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Number of jobs ever accepted.
+    pub fn len(&self) -> usize {
+        self.jobs.lock().unwrap().len()
+    }
+
+    /// Whether the table is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Move one unit of a job to a new lifecycle state.
+    pub fn set_unit_state(&self, id: u64, device: &str, state: JobState) {
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(job) = jobs.get_mut(&id) {
+            if let Some(unit) = job.units.iter_mut().find(|u| u.device == device) {
+                unit.state = state;
+            }
+        }
+    }
+
+    /// Complete one unit with its result.
+    pub fn complete_unit(&self, id: u64, device: &str, result: DeviceResult) {
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(job) = jobs.get_mut(&id) {
+            if let Some(unit) = job.units.iter_mut().find(|u| u.device == device) {
+                unit.state = JobState::Done;
+                unit.result = Some(result);
+            }
+        }
+    }
+
+    /// Fail one unit with an error message.
+    pub fn fail_unit(&self, id: u64, device: &str, error: String) {
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(job) = jobs.get_mut(&id) {
+            if let Some(unit) = job.units.iter_mut().find(|u| u.device == device) {
+                unit.state = JobState::Failed;
+                unit.error = Some(error);
+            }
+        }
+    }
+
+    /// Mark the named units of a job cancelled (those the queue removed).
+    pub fn cancel_units(&self, id: u64, devices: &[String]) {
+        let mut jobs = self.jobs.lock().unwrap();
+        if let Some(job) = jobs.get_mut(&id) {
+            for unit in job.units.iter_mut() {
+                if devices.iter().any(|d| d == &unit.device) {
+                    unit.state = JobState::Cancelled;
+                }
+            }
+        }
+    }
+
+    /// Job counts by aggregate state.
+    pub fn counts(&self) -> JobCounts {
+        let jobs = self.jobs.lock().unwrap();
+        let mut c = JobCounts {
+            submitted: jobs.len(),
+            ..JobCounts::default()
+        };
+        for job in jobs.values() {
+            match job.state() {
+                JobState::Queued => c.queued += 1,
+                JobState::Generating | JobState::Evaluating => c.running += 1,
+                JobState::Done => c.done += 1,
+                JobState::Failed => c.failed += 1,
+                JobState::Cancelled => c.cancelled += 1,
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(device: &str, state: JobState) -> JobUnit {
+        JobUnit {
+            device: device.to_string(),
+            state,
+            result: None,
+            error: None,
+        }
+    }
+
+    fn job(id: u64, units: Vec<JobUnit>) -> Job {
+        Job {
+            id,
+            spec: JobSpec::catalog("20_LeakyReLU", "b580"),
+            submitted_at: Instant::now(),
+            units,
+        }
+    }
+
+    #[test]
+    fn spec_json_roundtrip_catalog() {
+        let mut spec = JobSpec::catalog("20_LeakyReLU", "lnl");
+        spec.priority = JobPriority::High;
+        spec.seed = 7;
+        spec.iters = 3;
+        let back = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn spec_json_roundtrip_custom_and_fanout() {
+        let spec = JobSpec {
+            task: TaskSource::Custom {
+                config: "name: t\nworkload:\n  - op: rope\n".to_string(),
+                source: "### KF:REFERENCE ###\nref\n### KF:END ###".to_string(),
+            },
+            device: DeviceTarget::FanOut,
+            language: "cuda".to_string(),
+            seed: 3,
+            iters: 2,
+            population: 2,
+            priority: JobPriority::Low,
+        };
+        let back = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn spec_defaults_fill_absent_keys() {
+        let v = crate::util::json::parse(r#"{"task": "20_LeakyReLU"}"#).unwrap();
+        let spec = JobSpec::from_json(&v).unwrap();
+        assert_eq!(spec.device, DeviceTarget::Named("b580".to_string()));
+        assert_eq!(spec.language, "sycl");
+        assert_eq!(spec.seed, DEFAULT_SEED);
+        assert_eq!(spec.iters, DEFAULT_ITERS);
+        assert_eq!(spec.population, DEFAULT_POPULATION);
+        assert_eq!(spec.priority, JobPriority::Normal);
+    }
+
+    #[test]
+    fn spec_rejects_missing_task_and_bad_priority() {
+        let v = crate::util::json::parse(r#"{"device": "b580"}"#).unwrap();
+        assert!(JobSpec::from_json(&v).is_err());
+        let v = crate::util::json::parse(r#"{"task": "t", "priority": "urgent"}"#).unwrap();
+        assert!(JobSpec::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn job_state_aggregation_precedence() {
+        let j = job(1, vec![unit("a", JobState::Done), unit("b", JobState::Evaluating)]);
+        assert_eq!(j.state(), JobState::Evaluating);
+        let j = job(2, vec![unit("a", JobState::Queued), unit("b", JobState::Done)]);
+        assert_eq!(j.state(), JobState::Queued);
+        let j = job(3, vec![unit("a", JobState::Done), unit("b", JobState::Failed)]);
+        assert_eq!(j.state(), JobState::Failed);
+        let j = job(4, vec![unit("a", JobState::Done), unit("b", JobState::Done)]);
+        assert_eq!(j.state(), JobState::Done);
+        let j = job(5, vec![unit("a", JobState::Cancelled), unit("b", JobState::Done)]);
+        assert_eq!(j.state(), JobState::Cancelled);
+    }
+
+    #[test]
+    fn table_unit_transitions_and_counts() {
+        let t = JobTable::new();
+        t.insert(job(1, vec![unit("b580", JobState::Queued)]));
+        t.insert(job(2, vec![unit("b580", JobState::Queued)]));
+        assert_eq!(t.counts().queued, 2);
+
+        t.set_unit_state(1, "b580", JobState::Evaluating);
+        let c = t.counts();
+        assert_eq!(c.running, 1);
+        assert_eq!(c.queued, 1);
+
+        t.fail_unit(1, "b580", "boom".to_string());
+        t.cancel_units(2, &["b580".to_string()]);
+        let c = t.counts();
+        assert_eq!((c.failed, c.cancelled), (1, 1));
+        assert_eq!(t.get(1).unwrap().units[0].error.as_deref(), Some("boom"));
+    }
+
+    #[test]
+    fn priority_ordering() {
+        assert!(JobPriority::High > JobPriority::Normal);
+        assert!(JobPriority::Normal > JobPriority::Low);
+        assert_eq!(JobPriority::parse("high"), Some(JobPriority::High));
+        assert_eq!(JobPriority::parse("urgent"), None);
+    }
+}

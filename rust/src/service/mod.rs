@@ -1,0 +1,473 @@
+//! Kernel-as-a-service: the long-running generation daemon (§3.6, Fig. 4).
+//!
+//! The paper's systems claim is a *distributed framework with remote
+//! access to diverse hardware* plus *a flexible user input layer* for
+//! kernel generation beyond fixed benchmark suites. The batch CLI
+//! (`run` / `serve`) exercises one device profile per process and
+//! forgets everything at exit; this subsystem is the serving layer every
+//! later scaling PR builds on:
+//!
+//! * [`job`] — job ids, priorities, the `queued → generating →
+//!   evaluating → done/failed` lifecycle, and the shared job table;
+//! * [`queue`] — a bounded multi-producer priority queue (backpressure
+//!   at the intake, mirroring the `dist` pipeline's queue discipline);
+//! * [`fleet`] — one lane per heterogeneous device profile, each
+//!   driving [`crate::coordinator::EvolutionEngine::run_distributed`]
+//!   over its own [`crate::dist::WorkerPool`]; jobs route to one device
+//!   or fan out across all of them for cross-hardware comparison;
+//! * [`cache`] — results keyed by (task fingerprint, device, language,
+//!   seed, budget), persisted through [`crate::dist::Database`], so a
+//!   warm daemon answers repeat requests without re-evolving;
+//! * [`proto`] / [`api`] — a newline-JSON RPC over
+//!   `std::net::TcpListener` with `submit` (catalog ids *or* inline
+//!   App. C custom tasks), `status`, `result`, `cancel`, `stats` and
+//!   `shutdown` verbs.
+//!
+//! [`KernelService`] ties the pieces together; `kernelfoundry daemon` /
+//! `kernelfoundry submit` are the CLI entry points.
+
+pub mod api;
+pub mod cache;
+pub mod fleet;
+pub mod job;
+pub mod proto;
+pub mod queue;
+
+pub use api::{Client, Server};
+pub use cache::ResultCache;
+pub use fleet::Fleet;
+pub use job::{
+    DeviceResult, DeviceTarget, Job, JobCounts, JobPriority, JobSpec, JobState, JobTable,
+    TaskSource,
+};
+pub use proto::Request;
+pub use queue::{JobQueue, QueuedUnit, QueueError};
+
+use crate::dist::ClusterConfig;
+use crate::hwsim::DeviceProfile;
+use crate::tasks::{catalog, custom};
+use crate::util::json::Json;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Configuration of one service instance.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Fleet devices, one lane each (deduplicated by name at start).
+    pub devices: Vec<DeviceProfile>,
+    /// Compile workers per lane pool (Fig. 4 type 2).
+    pub compile_workers: usize,
+    /// Execution workers per lane pool (Fig. 4 type 3).
+    pub exec_workers: usize,
+    /// Capacity of the intake job queue *and* of each lane pool's
+    /// inter-stage queues. Clamped up to the fleet width at start so a
+    /// fan-out submit is never permanently unsatisfiable.
+    pub queue_capacity: usize,
+    /// JSONL path for cache persistence (`None` = in-memory only).
+    ///
+    /// There is deliberately no service-level RNG seed: every job
+    /// carries its own `JobSpec::seed` (part of the cache key), so a
+    /// daemon-wide seed would be a dead knob.
+    pub db_path: Option<PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        let cluster = ClusterConfig::default();
+        ServiceConfig {
+            devices: DeviceProfile::all(),
+            compile_workers: cluster.compile_workers,
+            exec_workers: cluster.exec_workers,
+            queue_capacity: cluster.queue_capacity,
+            db_path: None,
+        }
+    }
+}
+
+/// What `submit` returns: the assigned id plus whether the whole job
+/// was served from the cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubmitReceipt {
+    /// Assigned job id.
+    pub job_id: u64,
+    /// Job state right after submission (`Done` when fully cached).
+    pub state: JobState,
+    /// Whether every unit was a cache hit.
+    pub cached: bool,
+}
+
+/// The service orchestrator: queue + job table + cache + fleet.
+pub struct KernelService {
+    cfg: ServiceConfig,
+    queue: Arc<JobQueue>,
+    jobs: Arc<JobTable>,
+    cache: Arc<ResultCache>,
+    fleet: Fleet,
+    next_id: AtomicU64,
+    started: Instant,
+}
+
+impl KernelService {
+    /// Validate the configuration, prewarm the cache from `db_path` (if
+    /// set) and spawn the fleet lanes.
+    pub fn start(mut cfg: ServiceConfig) -> Result<Arc<KernelService>, String> {
+        let mut seen = Vec::new();
+        cfg.devices.retain(|d| {
+            if seen.iter().any(|s| *s == d.name) {
+                false
+            } else {
+                seen.push(d.name);
+                true
+            }
+        });
+        if cfg.devices.is_empty() {
+            return Err("service needs at least one fleet device".to_string());
+        }
+        // A fan-out submit enqueues one unit per device atomically; a
+        // capacity below the fleet width would reject `--device all`
+        // forever with a misleading "retry later".
+        cfg.queue_capacity = cfg.queue_capacity.max(cfg.devices.len());
+        let cache = match &cfg.db_path {
+            None => ResultCache::in_memory(),
+            Some(path) => ResultCache::with_database(path).map_err(|e| e.to_string())?,
+        };
+        let queue = Arc::new(JobQueue::new(cfg.queue_capacity));
+        let jobs = Arc::new(JobTable::new());
+        let cache = Arc::new(cache);
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache);
+        Ok(Arc::new(KernelService {
+            cfg,
+            queue,
+            jobs,
+            cache,
+            fleet,
+            next_id: AtomicU64::new(0),
+            started: Instant::now(),
+        }))
+    }
+
+    /// The service configuration (post-dedup).
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// The fleet's device names.
+    pub fn device_names(&self) -> Vec<String> {
+        self.fleet.device_names()
+    }
+
+    /// Submit a job: validate the spec, resolve target devices, serve
+    /// cache hits immediately and queue the rest.
+    pub fn submit(&self, spec: JobSpec) -> Result<SubmitReceipt, String> {
+        match &spec.task {
+            TaskSource::Catalog(id) => {
+                catalog::find_task(id).ok_or_else(|| format!("unknown task '{id}'"))?;
+            }
+            TaskSource::Custom { config, source } => {
+                custom::load_strings(config, source).map_err(|e| format!("custom task: {e}"))?;
+            }
+        }
+        if spec.iters == 0 || spec.population == 0 {
+            return Err("iters and population must be >= 1".to_string());
+        }
+        let devices = match &spec.device {
+            DeviceTarget::FanOut => self.fleet.device_names(),
+            DeviceTarget::Named(d) => {
+                if !self.fleet.has_device(d) {
+                    return Err(format!(
+                        "device '{d}' not in fleet ({})",
+                        self.fleet.device_names().join(", ")
+                    ));
+                }
+                vec![d.clone()]
+            }
+        };
+
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut units = Vec::new();
+        let mut to_queue = Vec::new();
+        for device in &devices {
+            let key = cache::cache_key(&spec, device);
+            match self.cache.lookup(&key) {
+                Some(hit) => units.push(job::JobUnit {
+                    device: device.clone(),
+                    state: JobState::Done,
+                    result: Some(hit),
+                    error: None,
+                }),
+                None => {
+                    units.push(job::JobUnit {
+                        device: device.clone(),
+                        state: JobState::Queued,
+                        result: None,
+                        error: None,
+                    });
+                    to_queue.push(QueuedUnit {
+                        job_id: id,
+                        device: device.clone(),
+                        priority: spec.priority,
+                        seq: 0,
+                        spec: spec.clone(),
+                    });
+                }
+            }
+        }
+        let cached = to_queue.is_empty();
+
+        // Register before queueing: a lane must never pop a unit whose
+        // job is not yet in the table.
+        let job = Job {
+            id,
+            spec,
+            submitted_at: Instant::now(),
+            units,
+        };
+        let state = job.state();
+        self.jobs.insert(job);
+        if !cached {
+            if let Err(e) = self.queue.push(to_queue) {
+                self.jobs.remove(id);
+                return Err(e.to_string());
+            }
+        }
+        Ok(SubmitReceipt {
+            job_id: id,
+            state,
+            cached,
+        })
+    }
+
+    /// Snapshot of one job.
+    pub fn status(&self, id: u64) -> Option<Job> {
+        self.jobs.get(id)
+    }
+
+    /// Cancel a job whose units are all still queued. Units a lane has
+    /// already picked up cannot be recalled.
+    pub fn cancel(&self, id: u64) -> Result<JobState, String> {
+        let job = self.jobs.get(id).ok_or_else(|| format!("no such job {id}"))?;
+        let state = job.state();
+        if state.finished() {
+            return Err(format!("job {id} already {}", state.name()));
+        }
+        let removed = self.queue.cancel(id);
+        if removed.is_empty() {
+            return Err(format!("job {id} is already running"));
+        }
+        self.jobs.cancel_units(id, &removed);
+        Ok(self
+            .jobs
+            .get(id)
+            .map(|j| j.state())
+            .unwrap_or(JobState::Cancelled))
+    }
+
+    /// Service-wide counters: jobs, queue depth, cache metrics, per-
+    /// device fleet utilization.
+    pub fn stats(&self) -> Json {
+        let mut queue_o = Json::obj();
+        queue_o
+            .set("depth", self.queue.len())
+            .set("capacity", self.queue.capacity());
+        let mut o = Json::obj();
+        o.set("ok", true)
+            .set("uptime_ms", self.started.elapsed().as_secs_f64() * 1000.0)
+            .set("jobs", self.jobs.counts().to_json())
+            .set("queue", queue_o)
+            .set("cache", self.cache.stats_json())
+            .set("fleet", self.fleet.stats_json());
+        o
+    }
+
+    /// Dispatch one parsed RPC request to a wire response. `Shutdown`
+    /// only acknowledges — the transport layer owns the actual stop.
+    pub fn handle(&self, req: &Request) -> Json {
+        match req {
+            Request::Submit(spec) => match self.submit(spec.clone()) {
+                Ok(receipt) => {
+                    let mut o = Json::obj();
+                    o.set("ok", true)
+                        .set("job_id", receipt.job_id as usize)
+                        .set("state", receipt.state.name())
+                        .set("cached", receipt.cached);
+                    o
+                }
+                Err(e) => proto::error_response(&e),
+            },
+            Request::Status(id) => match self.jobs.get(*id) {
+                Some(job) => job.to_json(false),
+                None => proto::error_response(&format!("no such job {id}")),
+            },
+            Request::Result(id) => match self.jobs.get(*id) {
+                Some(job) => {
+                    let state = job.state();
+                    if state.finished() {
+                        job.to_json(true)
+                    } else {
+                        proto::error_response(&format!(
+                            "job {id} not finished (state: {})",
+                            state.name()
+                        ))
+                    }
+                }
+                None => proto::error_response(&format!("no such job {id}")),
+            },
+            Request::Cancel(id) => match self.cancel(*id) {
+                Ok(state) => {
+                    let mut o = Json::obj();
+                    o.set("ok", true)
+                        .set("job_id", *id as usize)
+                        .set("state", state.name());
+                    o
+                }
+                Err(e) => proto::error_response(&e),
+            },
+            Request::Stats => self.stats(),
+            Request::Shutdown => {
+                let mut o = Json::obj();
+                o.set("ok", true).set("state", "shutting_down");
+                o
+            }
+        }
+    }
+
+    /// Stop the service: shut the queue (lanes drain remaining units)
+    /// and join every lane thread.
+    pub fn stop(&self) {
+        self.queue.shutdown();
+        self.fleet.join();
+    }
+
+    /// Block until the job reaches a terminal state or the timeout
+    /// elapses; returns the final snapshot. Used by direct (non-TCP)
+    /// callers: benches and tests.
+    pub fn wait(&self, id: u64, timeout: std::time::Duration) -> Option<Job> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let job = self.jobs.get(id)?;
+            if job.state().finished() {
+                return Some(job);
+            }
+            if Instant::now() >= deadline {
+                return Some(job);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn quick_service(devices: Vec<DeviceProfile>) -> Arc<KernelService> {
+        KernelService::start(ServiceConfig {
+            devices,
+            compile_workers: 1,
+            exec_workers: 2,
+            queue_capacity: 16,
+            db_path: None,
+        })
+        .unwrap()
+    }
+
+    fn tiny_spec(task: &str, device: &str) -> JobSpec {
+        let mut spec = JobSpec::catalog(task, device);
+        spec.iters = 2;
+        spec.population = 2;
+        spec
+    }
+
+    #[test]
+    fn submit_validates_task_device_and_budget() {
+        let svc = quick_service(vec![DeviceProfile::b580()]);
+        let err = svc.submit(tiny_spec("no_such_task", "b580")).unwrap_err();
+        assert!(err.contains("unknown task"), "{err}");
+        let err = svc.submit(tiny_spec("20_LeakyReLU", "h100")).unwrap_err();
+        assert!(err.contains("not in fleet"), "{err}");
+        let mut zero = tiny_spec("20_LeakyReLU", "b580");
+        zero.iters = 0;
+        assert!(svc.submit(zero).is_err());
+        svc.stop();
+    }
+
+    #[test]
+    fn identical_resubmission_is_served_from_cache() {
+        let svc = quick_service(vec![DeviceProfile::b580()]);
+        let first = svc.submit(tiny_spec("20_LeakyReLU", "b580")).unwrap();
+        assert!(!first.cached);
+        let job = svc.wait(first.job_id, Duration::from_secs(30)).unwrap();
+        assert_eq!(job.state(), JobState::Done);
+
+        let second = svc.submit(tiny_spec("20_LeakyReLU", "b580")).unwrap();
+        assert!(second.cached, "identical resubmission must hit the cache");
+        assert_eq!(second.state, JobState::Done);
+        let cached_job = svc.status(second.job_id).unwrap();
+        assert!(cached_job.units[0].result.as_ref().unwrap().cached);
+        assert_eq!(svc.cache.hits.load(Ordering::Relaxed), 1);
+
+        // A different seed is a different cache line.
+        let mut other = tiny_spec("20_LeakyReLU", "b580");
+        other.seed = 1;
+        let third = svc.submit(other).unwrap();
+        assert!(!third.cached);
+        svc.wait(third.job_id, Duration::from_secs(30));
+        svc.stop();
+    }
+
+    #[test]
+    fn fan_out_returns_one_unit_per_device() {
+        let svc = quick_service(vec![DeviceProfile::lnl(), DeviceProfile::b580()]);
+        let mut spec = tiny_spec("20_LeakyReLU", "b580");
+        spec.device = DeviceTarget::FanOut;
+        let receipt = svc.submit(spec).unwrap();
+        let job = svc.wait(receipt.job_id, Duration::from_secs(60)).unwrap();
+        assert_eq!(job.state(), JobState::Done);
+        assert_eq!(job.units.len(), 2);
+        let mut devices: Vec<&str> =
+            job.units.iter().map(|u| u.result.as_ref().unwrap().device.as_str()).collect();
+        devices.sort();
+        assert_eq!(devices, vec!["b580", "lnl"]);
+        svc.stop();
+    }
+
+    #[test]
+    fn duplicate_fleet_devices_are_deduplicated() {
+        let svc = quick_service(vec![DeviceProfile::b580(), DeviceProfile::b580()]);
+        assert_eq!(svc.device_names(), vec!["b580".to_string()]);
+        svc.stop();
+    }
+
+    #[test]
+    fn queue_capacity_clamped_to_fleet_width() {
+        let svc = KernelService::start(ServiceConfig {
+            devices: vec![DeviceProfile::lnl(), DeviceProfile::b580(), DeviceProfile::a6000()],
+            compile_workers: 1,
+            exec_workers: 1,
+            queue_capacity: 1,
+            db_path: None,
+        })
+        .unwrap();
+        assert_eq!(svc.config().queue_capacity, 3, "fan-out must always fit");
+        svc.stop();
+    }
+
+    #[test]
+    fn stats_covers_jobs_queue_cache_and_fleet() {
+        let svc = quick_service(vec![DeviceProfile::b580()]);
+        let receipt = svc.submit(tiny_spec("20_LeakyReLU", "b580")).unwrap();
+        svc.wait(receipt.job_id, Duration::from_secs(30));
+        let stats = svc.stats();
+        assert!(proto::response_ok(&stats));
+        assert_eq!(stats.get_path("jobs.submitted").unwrap().as_usize(), Some(1));
+        assert_eq!(stats.get_path("queue.capacity").unwrap().as_usize(), Some(16));
+        assert_eq!(stats.get_path("cache.entries").unwrap().as_usize(), Some(1));
+        let fleet = stats.get("fleet").unwrap().as_arr().unwrap();
+        assert_eq!(fleet.len(), 1);
+        assert_eq!(fleet[0].get("device").unwrap().as_str(), Some("b580"));
+        svc.stop();
+    }
+}

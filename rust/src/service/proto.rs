@@ -1,0 +1,154 @@
+//! The newline-JSON RPC wire protocol.
+//!
+//! One request per line, one response per line, over a plain TCP
+//! stream — no external dependencies, inspectable with `nc`. Every
+//! request is a JSON object with a `verb` key:
+//!
+//! ```text
+//! {"verb":"submit","task":"20_LeakyReLU","device":"b580","iters":8}
+//! {"verb":"submit","custom":{"config":"<task.yaml>","source":"<marked source>"},"device":"all"}
+//! {"verb":"status","job_id":1}
+//! {"verb":"result","job_id":1}
+//! {"verb":"cancel","job_id":1}
+//! {"verb":"stats"}
+//! {"verb":"shutdown"}
+//! ```
+//!
+//! Every response carries `"ok": true|false`; failures add an `"error"`
+//! string. See `DESIGN.md` §6 for full request/response examples.
+
+use super::job::JobSpec;
+use crate::util::json::Json;
+
+/// A parsed RPC request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Submit a job; responds with the job id and initial state.
+    Submit(JobSpec),
+    /// Poll a job's lifecycle state (cheap: no results attached).
+    Status(u64),
+    /// Fetch a finished job's per-device results (kernel sources
+    /// included).
+    Result(u64),
+    /// Cancel a still-queued job.
+    Cancel(u64),
+    /// Service-wide counters: jobs, queue, cache, per-device fleet
+    /// utilization.
+    Stats,
+    /// Stop the daemon (drains queued work, then exits).
+    Shutdown,
+}
+
+impl Request {
+    /// Parse a request object.
+    pub fn from_json(v: &Json) -> Result<Request, String> {
+        let verb = v
+            .get("verb")
+            .and_then(|x| x.as_str())
+            .ok_or("request needs a 'verb' string")?;
+        let job_id = || {
+            v.get("job_id")
+                .and_then(|x| x.as_usize())
+                .map(|x| x as u64)
+                .ok_or_else(|| format!("verb '{verb}' needs a numeric 'job_id'"))
+        };
+        match verb {
+            "submit" => Ok(Request::Submit(JobSpec::from_json(v)?)),
+            "status" => Ok(Request::Status(job_id()?)),
+            "result" => Ok(Request::Result(job_id()?)),
+            "cancel" => Ok(Request::Cancel(job_id()?)),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!(
+                "unknown verb '{other}' (submit | status | result | cancel | stats | shutdown)"
+            )),
+        }
+    }
+
+    /// Serialize to the wire object form (used by the `submit` client
+    /// and tests).
+    pub fn to_json(&self) -> Json {
+        let with_id = |verb: &str, id: u64| {
+            let mut o = Json::obj();
+            o.set("verb", verb).set("job_id", id as usize);
+            o
+        };
+        match self {
+            Request::Submit(spec) => {
+                let mut o = spec.to_json();
+                o.set("verb", "submit");
+                o
+            }
+            Request::Status(id) => with_id("status", *id),
+            Request::Result(id) => with_id("result", *id),
+            Request::Cancel(id) => with_id("cancel", *id),
+            Request::Stats => {
+                let mut o = Json::obj();
+                o.set("verb", "stats");
+                o
+            }
+            Request::Shutdown => {
+                let mut o = Json::obj();
+                o.set("verb", "shutdown");
+                o
+            }
+        }
+    }
+}
+
+/// A failure response: `{"ok": false, "error": msg}`.
+pub fn error_response(msg: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", false).set("error", msg);
+    o
+}
+
+/// Whether a response object reports success.
+pub fn response_ok(v: &Json) -> bool {
+    v.get("ok").and_then(|x| x.as_bool()).unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn verbs_roundtrip() {
+        let reqs = vec![
+            Request::Submit(JobSpec::catalog("20_LeakyReLU", "b580")),
+            Request::Status(3),
+            Request::Result(4),
+            Request::Cancel(5),
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let wire = req.to_json().to_string_compact();
+            let back = Request::from_json(&json::parse(&wire).unwrap()).unwrap();
+            assert_eq!(back, req, "{wire}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let cases = [
+            (r#"{}"#, "verb"),
+            (r#"{"verb":"warp"}"#, "unknown verb"),
+            (r#"{"verb":"status"}"#, "job_id"),
+            (r#"{"verb":"cancel","job_id":"three"}"#, "job_id"),
+            (r#"{"verb":"submit"}"#, "task"),
+        ];
+        for (wire, needle) in cases {
+            let err = Request::from_json(&json::parse(wire).unwrap()).unwrap_err();
+            assert!(err.contains(needle), "{wire} -> {err}");
+        }
+    }
+
+    #[test]
+    fn error_response_shape() {
+        let e = error_response("nope");
+        assert!(!response_ok(&e));
+        assert_eq!(e.get("error").unwrap().as_str(), Some("nope"));
+    }
+}

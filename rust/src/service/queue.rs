@@ -1,0 +1,270 @@
+//! The bounded, multi-producer, priority job queue feeding the fleet.
+//!
+//! API handler threads push (job × device) units; fleet lanes block in
+//! [`JobQueue::pop_for`] until a unit routed to *their* device is
+//! available. The queue is bounded — a full queue rejects the submit
+//! instead of letting the intake outrun the fleet, the same backpressure
+//! discipline the [`crate::dist`] worker pipeline applies between its
+//! stages. Higher priorities pop first; within a priority class units
+//! pop in submission order.
+
+use super::job::{JobPriority, JobSpec};
+use std::fmt;
+use std::sync::{Condvar, Mutex};
+
+/// One queued (job × device) execution unit.
+#[derive(Debug, Clone)]
+pub struct QueuedUnit {
+    /// The job this unit belongs to.
+    pub job_id: u64,
+    /// Device lane this unit is routed to.
+    pub device: String,
+    /// Scheduling priority (copied from the spec for cheap comparison).
+    pub priority: JobPriority,
+    /// Queue-assigned submission sequence number (FIFO tie-break).
+    pub seq: u64,
+    /// The full job spec (the lane resolves the task and runs it).
+    pub spec: JobSpec,
+}
+
+/// Why a push was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueError {
+    /// The queue is at capacity; retry later or raise `--queue-capacity`.
+    Full {
+        /// The configured capacity that was hit.
+        capacity: usize,
+    },
+    /// The service is shutting down and accepts no new work.
+    ShuttingDown,
+}
+
+impl fmt::Display for QueueError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QueueError::Full { capacity } => {
+                write!(f, "job queue full (capacity {capacity}); retry later")
+            }
+            QueueError::ShuttingDown => write!(f, "service is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for QueueError {}
+
+#[derive(Debug, Default)]
+struct QueueState {
+    units: Vec<QueuedUnit>,
+    next_seq: u64,
+    shutdown: bool,
+}
+
+/// The bounded multi-producer priority queue.
+#[derive(Debug)]
+pub struct JobQueue {
+    state: Mutex<QueueState>,
+    available: Condvar,
+    capacity: usize,
+}
+
+impl JobQueue {
+    /// Create a queue holding at most `capacity` units (min 1).
+    pub fn new(capacity: usize) -> JobQueue {
+        JobQueue {
+            state: Mutex::new(QueueState::default()),
+            available: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Units currently queued.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().units.len()
+    }
+
+    /// Whether no units are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue a batch of units atomically (all-or-nothing, so a fan-out
+    /// job is never half-queued). Rejects with [`QueueError::Full`] when
+    /// the batch does not fit.
+    pub fn push(&self, units: Vec<QueuedUnit>) -> Result<(), QueueError> {
+        if units.is_empty() {
+            return Ok(());
+        }
+        let mut state = self.state.lock().unwrap();
+        if state.shutdown {
+            return Err(QueueError::ShuttingDown);
+        }
+        if state.units.len() + units.len() > self.capacity {
+            return Err(QueueError::Full {
+                capacity: self.capacity,
+            });
+        }
+        for mut unit in units {
+            unit.seq = state.next_seq;
+            state.next_seq += 1;
+            state.units.push(unit);
+        }
+        self.available.notify_all();
+        Ok(())
+    }
+
+    /// Block until a unit routed to `device` is available and pop the
+    /// best one (highest priority, then lowest sequence number). Returns
+    /// `None` once the queue has shut down and holds no more work for
+    /// this device — queued units are drained before lanes exit.
+    pub fn pop_for(&self, device: &str) -> Option<QueuedUnit> {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            let mut best: Option<usize> = None;
+            for (i, u) in state.units.iter().enumerate() {
+                if u.device != device {
+                    continue;
+                }
+                best = match best {
+                    None => Some(i),
+                    Some(b) => {
+                        let cur = &state.units[b];
+                        if (u.priority, std::cmp::Reverse(u.seq))
+                            > (cur.priority, std::cmp::Reverse(cur.seq))
+                        {
+                            Some(i)
+                        } else {
+                            Some(b)
+                        }
+                    }
+                };
+            }
+            if let Some(i) = best {
+                return Some(state.units.remove(i));
+            }
+            if state.shutdown {
+                return None;
+            }
+            state = self.available.wait(state).unwrap();
+        }
+    }
+
+    /// Remove every still-queued unit of a job; returns the device names
+    /// of the removed units (empty when all units were already popped).
+    pub fn cancel(&self, job_id: u64) -> Vec<String> {
+        let mut state = self.state.lock().unwrap();
+        let mut removed = Vec::new();
+        state.units.retain(|u| {
+            if u.job_id == job_id {
+                removed.push(u.device.clone());
+                false
+            } else {
+                true
+            }
+        });
+        removed
+    }
+
+    /// Stop accepting work and wake every blocked lane so it can drain
+    /// the remaining units and exit.
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.available.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::job::JobSpec;
+
+    fn unit(job_id: u64, device: &str, priority: JobPriority) -> QueuedUnit {
+        QueuedUnit {
+            job_id,
+            device: device.to_string(),
+            priority,
+            seq: 0,
+            spec: JobSpec::catalog("20_LeakyReLU", device),
+        }
+    }
+
+    #[test]
+    fn pops_by_priority_then_fifo() {
+        let q = JobQueue::new(8);
+        q.push(vec![unit(1, "b580", JobPriority::Normal)]).unwrap();
+        q.push(vec![unit(2, "b580", JobPriority::Low)]).unwrap();
+        q.push(vec![unit(3, "b580", JobPriority::High)]).unwrap();
+        q.push(vec![unit(4, "b580", JobPriority::Normal)]).unwrap();
+        let order: Vec<u64> = (0..4).map(|_| q.pop_for("b580").unwrap().job_id).collect();
+        assert_eq!(order, vec![3, 1, 4, 2]);
+    }
+
+    #[test]
+    fn routes_by_device() {
+        let q = JobQueue::new(8);
+        q.push(vec![unit(1, "lnl", JobPriority::Normal)]).unwrap();
+        q.push(vec![unit(2, "b580", JobPriority::Normal)]).unwrap();
+        assert_eq!(q.pop_for("b580").unwrap().job_id, 2);
+        assert_eq!(q.pop_for("lnl").unwrap().job_id, 1);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bounded_and_all_or_nothing() {
+        let q = JobQueue::new(2);
+        q.push(vec![unit(1, "b580", JobPriority::Normal)]).unwrap();
+        // A 2-unit fan-out does not fit next to the queued unit: rejected
+        // atomically, nothing partially enqueued.
+        let err = q
+            .push(vec![
+                unit(2, "lnl", JobPriority::Normal),
+                unit(2, "b580", JobPriority::Normal),
+            ])
+            .unwrap_err();
+        assert_eq!(err, QueueError::Full { capacity: 2 });
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn cancel_removes_only_queued_units_of_the_job() {
+        let q = JobQueue::new(8);
+        q.push(vec![
+            unit(1, "lnl", JobPriority::Normal),
+            unit(1, "b580", JobPriority::Normal),
+        ])
+        .unwrap();
+        q.push(vec![unit(2, "b580", JobPriority::Normal)]).unwrap();
+        let popped = q.pop_for("lnl").unwrap(); // job 1's lnl unit is now running
+        assert_eq!(popped.job_id, 1);
+        let removed = q.cancel(1);
+        assert_eq!(removed, vec!["b580".to_string()]);
+        assert_eq!(q.pop_for("b580").unwrap().job_id, 2, "job 2 unaffected");
+    }
+
+    #[test]
+    fn shutdown_unblocks_poppers_and_rejects_pushes() {
+        let q = std::sync::Arc::new(JobQueue::new(4));
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_for("b580"));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.shutdown();
+        assert!(h.join().unwrap().is_none());
+        assert_eq!(
+            q.push(vec![unit(1, "b580", JobPriority::Normal)]).unwrap_err(),
+            QueueError::ShuttingDown
+        );
+    }
+
+    #[test]
+    fn shutdown_drains_remaining_units() {
+        let q = JobQueue::new(4);
+        q.push(vec![unit(1, "b580", JobPriority::Normal)]).unwrap();
+        q.shutdown();
+        assert_eq!(q.pop_for("b580").unwrap().job_id, 1);
+        assert!(q.pop_for("b580").is_none());
+    }
+}

@@ -75,16 +75,27 @@ impl From<yamlite::YamlError> for CustomTaskError {
     }
 }
 
-/// Load a custom task from a directory containing `task.yaml` and a
-/// marker-annotated source file (`task.py` / `kernel.cpp`).
-pub fn load_dir(dir: &Path) -> Result<CustomTask, CustomTaskError> {
+/// Read a bundle's raw strings from a directory: the `task.yaml` config
+/// plus the first marker-annotated source file found (`task.py` /
+/// `kernel.cpp` / `kernel.cu`). Shared by [`load_dir`] and the service
+/// `submit` client, which ships the strings over the wire unparsed.
+pub fn read_dir_strings(dir: &Path) -> Result<(String, String), CustomTaskError> {
     let config_text = std::fs::read_to_string(dir.join("task.yaml"))?;
     let source_path = ["task.py", "kernel.cpp", "kernel.cu"]
         .iter()
         .map(|f| dir.join(f))
         .find(|p| p.exists())
-        .ok_or_else(|| CustomTaskError::Marker("no task.py / kernel.cpp found".into()))?;
+        .ok_or_else(|| {
+            CustomTaskError::Marker("no task.py / kernel.cpp / kernel.cu found".into())
+        })?;
     let source_text = std::fs::read_to_string(source_path)?;
+    Ok((config_text, source_text))
+}
+
+/// Load a custom task from a directory containing `task.yaml` and a
+/// marker-annotated source file (`task.py` / `kernel.cpp`).
+pub fn load_dir(dir: &Path) -> Result<CustomTask, CustomTaskError> {
+    let (config_text, source_text) = read_dir_strings(dir)?;
     load_strings(&config_text, &source_text)
 }
 

@@ -17,3 +17,20 @@ clean-artifacts:
 # utilization through the `service` subsystem; emits BENCH_service.json.
 bench-service:
 	cargo bench --bench service_throughput
+
+# Run the service bench and promote its output as the committed gate
+# baseline (scripts/bench_gate.py compares CI runs against it and fails
+# on a >2x throughput regression; a `measured: false` baseline is a
+# bootstrap placeholder that disables the comparison).
+.PHONY: bench-baseline bench-gate
+bench-baseline: bench-service
+	@python3 -c "import json; d=json.load(open('BENCH_service.json')); \
+	  print('promoted measured baseline: cold %.2f jobs/s, warm %.2f jobs/s' \
+	  % (d['cold_jobs_per_sec'], d['warm_jobs_per_sec']))"
+	@echo "commit BENCH_service.json to update the gate baseline"
+
+# Local mirror of the CI gate step.
+bench-gate:
+	cp BENCH_service.json /tmp/bench_baseline.json
+	$(MAKE) bench-service
+	python3 scripts/bench_gate.py --baseline /tmp/bench_baseline.json --current BENCH_service.json

@@ -58,7 +58,7 @@ fn main() {
         compile_workers: 1,
         exec_workers: 2,
         queue_capacity: 64,
-        db_path: None,
+        ..ServiceConfig::default()
     })
     .expect("service starts");
 
@@ -94,6 +94,7 @@ fn main() {
 
     let mut out = Json::obj();
     out.set("bench", "service_throughput")
+        .set("measured", true)
         .set("jobs", JOBS)
         .set("devices", n_devices)
         .set("units", JOBS * n_devices)

@@ -17,6 +17,71 @@ use std::fs;
 use std::path::Path;
 use std::sync::Mutex;
 
+/// Crash-tolerant JSONL reader shared by the results store and the
+/// service job journal.
+///
+/// Both files are written with whole-line `O_APPEND` writes, so the only
+/// corruption a crash can produce is a *torn final line* (the process
+/// died mid-`write`). This loader parses each line with `parse_item`;
+/// a line that fails is treated one of two ways:
+///
+/// * **last line of the file** — the torn-tail case: the file is
+///   truncated back to the start of that line (so the next `O_APPEND`
+///   write begins on a clean boundary instead of concatenating onto
+///   garbage) and loading succeeds with what was readable;
+/// * **any earlier line** — not explicable by a crash mid-append: a
+///   hard error, never silent data loss.
+///
+/// Returns the parsed items plus the number of torn bytes dropped.
+pub fn load_jsonl_tolerant<T>(
+    path: &Path,
+    mut parse_item: impl FnMut(&Json) -> Option<T>,
+) -> Result<(Vec<T>, usize), Error> {
+    let text =
+        fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let total = text.len();
+    let mut items = Vec::new();
+    let mut pos = 0usize;
+    let mut torn_at = None;
+    for line in text.split_inclusive('\n') {
+        let start = pos;
+        pos += line.len();
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match json::parse(trimmed).ok().and_then(|v| parse_item(&v)) {
+            Some(item) => items.push(item),
+            None if pos == total => {
+                torn_at = Some(start);
+                break;
+            }
+            None => {
+                return Err(Error::msg(format!(
+                    "{}: malformed JSONL at byte {start} followed by valid lines — \
+                     mid-file corruption, not a torn tail; refusing to load",
+                    path.display()
+                )));
+            }
+        }
+    }
+    let mut dropped = 0;
+    if let Some(offset) = torn_at {
+        dropped = total - offset;
+        let file = fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+        file.set_len(offset as u64)
+            .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+        crate::log_warn!(
+            "{}: dropped {dropped} torn trailing bytes (crash mid-append)",
+            path.display()
+        );
+    }
+    Ok((items, dropped))
+}
+
 /// One persisted evaluation: the App. C database schema.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DbRow {
@@ -208,6 +273,25 @@ impl Database {
         Ok(n)
     }
 
+    /// Crash-tolerant variant of [`Database::load`] for stores written
+    /// by whole-line appends (the service result cache): a torn final
+    /// line is truncated away via [`load_jsonl_tolerant`] instead of
+    /// failing the load; mid-file corruption is still an error. Returns
+    /// (rows added, torn bytes dropped).
+    pub fn load_tolerant(&self, path: &Path) -> Result<(usize, usize), Error> {
+        let (rows, dropped) = load_jsonl_tolerant(path, DbRow::from_json)?;
+        let n = rows.len();
+        self.rows.lock().unwrap().extend(rows);
+        Ok((n, dropped))
+    }
+
+    /// Whether any row's `run` key equals `run` — the existence check
+    /// behind the service's exactly-once commit slots (a slot's row is
+    /// appended at most once, even across crash + replay).
+    pub fn contains_run(&self, run: &str) -> bool {
+        self.rows.lock().unwrap().iter().any(|r| r.run == run)
+    }
+
     /// The best row per task for a method: maximum fitness, ties broken by
     /// speedup (matching the engine's best-kernel rule, so a report over a
     /// full run reproduces the run's own best). Rows are returned sorted
@@ -305,6 +389,37 @@ mod tests {
         let err = db.load(&path).unwrap_err().to_string();
         assert!(err.contains("json parse error"), "{err}");
         assert_eq!(db.len(), 0, "failed loads must not append rows");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tolerant_load_truncates_torn_tail_but_rejects_midfile_garbage() {
+        let path = tmp_path("tolerant");
+        let db = Database::new();
+        db.insert(row("t1", "m", 0.9, 1.8));
+        db.insert(row("t2", "m", 0.8, 1.2));
+        db.save(&path).unwrap();
+        // Crash mid-append: a partial JSON prefix with no newline.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"run\":\"r1\",\"met");
+        std::fs::write(&path, &text).unwrap();
+
+        let loaded = Database::new();
+        let (n, dropped) = loaded.load_tolerant(&path).unwrap();
+        assert_eq!(n, 2, "intact rows load");
+        assert_eq!(dropped, 16, "torn bytes counted");
+        assert!(loaded.contains_run("r1"));
+        assert!(!loaded.contains_run("r9"));
+        // The file itself was repaired: a strict load now succeeds too.
+        let strict = Database::new();
+        assert_eq!(strict.load(&path).unwrap(), 2);
+
+        // Mid-file garbage (followed by a valid line) is NOT a torn
+        // tail and must stay a hard error.
+        let good = row("t1", "m", 0.9, 1.8).to_json().to_string_compact();
+        std::fs::write(&path, format!("not json\n{good}\n")).unwrap();
+        let err = Database::new().load_tolerant(&path).unwrap_err().to_string();
+        assert!(err.contains("mid-file corruption"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 

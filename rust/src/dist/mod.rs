@@ -31,7 +31,7 @@
 mod db;
 mod pool;
 
-pub use db::{Database, DbRow};
+pub use db::{load_jsonl_tolerant, Database, DbRow};
 pub use pool::{PoolMetrics, WorkerPool};
 
 use crate::hwsim::DeviceProfile;

@@ -16,7 +16,9 @@ use kernelfoundry::dist::{ClusterConfig, Database, DbRow, WorkerPool};
 use kernelfoundry::eval::ExecBackend;
 use kernelfoundry::experiments::{self, ExperimentScale};
 use kernelfoundry::hwsim::DeviceProfile;
-use kernelfoundry::service::{self, proto, Client, KernelService, Server, ServiceConfig};
+use kernelfoundry::service::{
+    self, proto, Client, KernelService, Server, ServiceConfig, DEFAULT_LEASE_TTL_SECS,
+};
 use kernelfoundry::tasks::catalog;
 use kernelfoundry::util::cli::Command;
 use kernelfoundry::util::json::Json;
@@ -261,6 +263,8 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
         .opt("exec-workers", "", "execution workers per lane (default: cluster default)")
         .opt("queue-capacity", "", "job/pool queue capacity (default: cluster default)")
         .opt("db", "", "JSONL path for cache persistence ('' = in-memory only)")
+        .opt("journal", "", "JSONL write-ahead job journal; restart replays queued/in-flight jobs ('' = volatile)")
+        .opt("lease-ttl", "30", "journal owner-lease TTL in seconds (heartbeat at ttl/3)")
         .flag("verbose", "debug logging");
     let p = cmd.parse(args)?;
     if p.has_flag("verbose") {
@@ -279,7 +283,17 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
         exec_workers: p.get_usize("exec-workers").unwrap_or(defaults.exec_workers),
         queue_capacity: p.get_usize("queue-capacity").unwrap_or(defaults.queue_capacity),
         db_path: p.get("db").filter(|s| !s.is_empty()).map(Into::into),
+        journal_path: p.get("journal").filter(|s| !s.is_empty()).map(Into::into),
+        lease_ttl: std::time::Duration::from_secs(
+            p.get_usize("lease-ttl").unwrap_or(DEFAULT_LEASE_TTL_SECS as usize).max(1) as u64,
+        ),
     };
+    if cfg.journal_path.is_some() && kernelfoundry::service::failpoint::any_armed() {
+        eprintln!(
+            "warning: {} is set — crash injection armed (test harness only)",
+            kernelfoundry::service::failpoint::ENV_VAR
+        );
+    }
     let service = KernelService::start(cfg)?;
     let mut server = Server::start(Arc::clone(&service), p.get("addr").unwrap())
         .map_err(|e| format!("binding {}: {e}", p.get("addr").unwrap()))?;

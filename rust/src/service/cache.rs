@@ -75,14 +75,16 @@ impl ResultCache {
 
     /// A cache persisted through the JSONL database at `path`. An
     /// existing file is loaded and its `service` rows prewarm the cache
-    /// (metrics only — sources are not persisted); a corrupt file is an
-    /// error rather than silently overwritten, matching the `serve`
-    /// subcommand's discipline.
+    /// (metrics only — sources are not persisted). The load is
+    /// crash-tolerant: a torn final line (daemon died mid-append) is
+    /// truncated away and the rest is kept; mid-file corruption is
+    /// still an error rather than silently overwritten, matching the
+    /// `serve` subcommand's discipline.
     pub fn with_database(path: &Path) -> Result<ResultCache, Error> {
         let db = Database::new();
         let mut entries = HashMap::new();
         if path.exists() {
-            db.load(path)?;
+            db.load_tolerant(path)?;
             for row in db.rows() {
                 if row.method != CACHE_METHOD {
                     continue;
@@ -147,6 +149,17 @@ impl ResultCache {
         }
     }
 
+    /// Counter-free lookup used by journal replay: a hit is returned
+    /// marked `cached`, but neither the hit nor the miss counter moves —
+    /// replaying a restart must not skew the serving metrics.
+    pub fn peek(&self, key: &str) -> Option<DeviceResult> {
+        self.entries.lock().unwrap().get(key).map(|r| {
+            let mut r = r.clone();
+            r.cached = true;
+            r
+        })
+    }
+
     /// Insert a freshly-computed result, write-through persisting
     /// correct results when a database is configured. Persistence is a
     /// single-row O(1) append (the store is append-only JSONL — a full
@@ -156,26 +169,36 @@ impl ResultCache {
     pub fn insert(&self, key: &str, result: DeviceResult) {
         if let Some((db, path)) = &self.db {
             if result.correct {
-                let row = DbRow {
-                    run: key.to_string(),
-                    method: CACHE_METHOD.to_string(),
-                    idx: db.len(),
-                    task_id: result.task_id.clone(),
-                    genome_id: result.genome_id,
-                    produced_by: result.produced_by.clone(),
-                    outcome: "correct".to_string(),
-                    coords: result.coords,
-                    fitness: result.fitness,
-                    speedup: result.speedup,
-                    time_ms: result.time_ms,
-                    baseline_ms: result.baseline_ms,
-                };
+                let row = slot_row(key, &result, db.len());
                 if let Err(e) = append_row(path, &row) {
                     crate::log_warn!("cache persistence failed: {e}");
                 }
                 db.insert(row);
             }
         }
+        self.entries.lock().unwrap().insert(key.to_string(), result);
+    }
+
+    /// Idempotently restore a journal-committed result during replay:
+    /// the in-memory entry is (re)established, and — when a database is
+    /// configured, the result is correct, and the slot's row is missing
+    /// (the daemon crashed after the journal commit marker but before
+    /// the row append) — the row is repaired by appending it now.
+    /// [`Database::contains_run`] guards the append, so the slot ends
+    /// with exactly one row no matter how many times the same journal
+    /// is replayed.
+    pub fn restore(&self, key: &str, result: DeviceResult) {
+        if let Some((db, path)) = &self.db {
+            if result.correct && !db.contains_run(key) {
+                let row = slot_row(key, &result, db.len());
+                if let Err(e) = append_row(path, &row) {
+                    crate::log_warn!("cache slot repair failed: {e}");
+                }
+                db.insert(row);
+            }
+        }
+        // Overwrite any prewarmed metrics-only entry: the journal's
+        // commit record is at least as rich.
         self.entries.lock().unwrap().insert(key.to_string(), result);
     }
 
@@ -193,6 +216,25 @@ impl ResultCache {
                 if total == 0 { 0.0 } else { hits as f64 / total as f64 },
             );
         o
+    }
+}
+
+/// The persisted row for one commit slot (shared by the write-through
+/// insert and the replay-time repair, so both produce identical rows).
+fn slot_row(key: &str, result: &DeviceResult, idx: usize) -> DbRow {
+    DbRow {
+        run: key.to_string(),
+        method: CACHE_METHOD.to_string(),
+        idx,
+        task_id: result.task_id.clone(),
+        genome_id: result.genome_id,
+        produced_by: result.produced_by.clone(),
+        outcome: "correct".to_string(),
+        coords: result.coords,
+        fitness: result.fitness,
+        speedup: result.speedup,
+        time_ms: result.time_ms,
+        baseline_ms: result.baseline_ms,
     }
 }
 
@@ -309,6 +351,89 @@ mod tests {
         assert_eq!(hit.speedup, 1.7);
         assert_eq!(hit.source, "", "sources are not persisted");
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Satellite-task test: a daemon killed mid-append leaves a partial
+    /// trailing JSONL line; reload must drop (and truncate) it rather
+    /// than panic or refuse, while mid-file corruption stays an error.
+    #[test]
+    fn reload_tolerates_and_truncates_a_torn_trailing_line() {
+        let path = tmp_path("torn");
+        std::fs::remove_file(&path).ok();
+        {
+            let cache = ResultCache::with_database(&path).unwrap();
+            cache.insert("cat:a|b580|sycl|s1|i2|p2", result("b580", 1.5));
+            cache.insert("cat:b|b580|sycl|s1|i2|p2", result("b580", 2.5));
+        }
+        // Crash mid-append: a partial JSON prefix, no trailing newline.
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"run\":\"cat:c|b580").unwrap();
+        drop(f);
+
+        let warm = ResultCache::with_database(&path).unwrap();
+        assert_eq!(warm.len(), 2, "torn last line dropped, intact rows kept");
+        // The torn bytes were truncated from the file, so a fresh
+        // append starts on a clean line boundary and survives reload.
+        warm.insert("cat:c|b580|sycl|s1|i2|p2", result("b580", 3.5));
+        let warm2 = ResultCache::with_database(&path).unwrap();
+        assert_eq!(warm2.len(), 3);
+
+        // Mid-file corruption is not a torn tail: still a hard error.
+        let tail = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, format!("garbage line\n{tail}")).unwrap();
+        assert!(ResultCache::with_database(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// `restore` is the replay-time half of the slot-commit protocol:
+    /// it must repair a missing row exactly once and never duplicate an
+    /// existing one, however many times the journal is replayed.
+    #[test]
+    fn restore_repairs_missing_rows_exactly_once() {
+        let path = tmp_path("restore");
+        std::fs::remove_file(&path).ok();
+        let key = "cat:x|b580|sycl|s1|i2|p2";
+        let rows_in_file = |p: &Path| {
+            std::fs::read_to_string(p)
+                .unwrap_or_default()
+                .lines()
+                .filter(|l| l.contains(key))
+                .count()
+        };
+        {
+            // Crash-after-marker case: the row is missing → repaired once.
+            let cache = ResultCache::with_database(&path).unwrap();
+            cache.restore(key, result("b580", 1.7));
+            cache.restore(key, result("b580", 1.7));
+            assert_eq!(rows_in_file(&path), 1, "repair appends exactly one row");
+            assert_eq!(cache.len(), 1);
+        }
+        {
+            // Crash-after-row case: the row already exists → no append.
+            let cache = ResultCache::with_database(&path).unwrap();
+            cache.restore(key, result("b580", 1.7));
+            assert_eq!(rows_in_file(&path), 1, "existing slot row never duplicated");
+        }
+        // Incorrect results are restored in memory but never persisted.
+        let cache = ResultCache::with_database(&path).unwrap();
+        let mut bad = result("b580", 0.0);
+        bad.correct = false;
+        cache.restore("cat:y|b580|sycl|s1|i2|p2", bad);
+        assert_eq!(cache.len(), 2);
+        assert!(!std::fs::read_to_string(&path).unwrap().contains("cat:y|"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn peek_hits_without_moving_the_counters() {
+        let cache = ResultCache::in_memory();
+        assert!(cache.peek("k").is_none());
+        cache.insert("k", result("b580", 2.0));
+        let hit = cache.peek("k").unwrap();
+        assert!(hit.cached, "peeked hits are marked cached");
+        assert_eq!(cache.hits.load(Ordering::Relaxed), 0, "peek counts nothing");
+        assert_eq!(cache.misses.load(Ordering::Relaxed), 0);
     }
 
     #[test]

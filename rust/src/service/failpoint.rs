@@ -1,0 +1,94 @@
+//! Crash-injection fail points for the durability test harness.
+//!
+//! A fail point is a named place in the journal/commit path where the
+//! process can be made to `abort()` — simulating a daemon crash at the
+//! worst possible instant. Points are armed through the `KF_FAILPOINT`
+//! environment variable (comma-separated names), so the
+//! `tests/durability_crash.rs` suite can spawn the real `kernelfoundry`
+//! binary, kill it mid-protocol and assert that restart + replay heal
+//! the damage. With the variable unset every [`hit`] call is a no-op
+//! branch on a cached set — nothing to configure, (almost) nothing to
+//! pay in production.
+//!
+//! The armed set is read once per process: fail points model a crash,
+//! and a crashed process does not change its mind.
+
+use std::collections::HashSet;
+use std::sync::OnceLock;
+
+/// Environment variable holding the comma-separated armed point names.
+pub const ENV_VAR: &str = "KF_FAILPOINT";
+
+/// Every fail point the service layer declares, in protocol order.
+/// Documented here so tests never arm a typo that silently tests
+/// nothing.
+pub const POINTS: &[&str] = &[
+    // After the journal `submit` record is durable but before the job
+    // reaches the in-memory table/queue (client may never get a receipt).
+    "submit.after_journal",
+    // After a lane journals `dispatch` but before it starts the unit.
+    "dispatch.after_journal",
+    // A unit finished, but neither the commit marker nor the result row
+    // exists yet (the unit must be re-executed on replay).
+    "commit.before_marker",
+    // The journal commit marker is durable but the result row is not
+    // (replay must repair the row exactly once).
+    "commit.after_marker",
+    // Marker and row are both durable but the in-memory job table never
+    // heard about it (pure replay-idempotence window).
+    "commit.after_row",
+];
+
+fn armed() -> &'static HashSet<String> {
+    static ARMED: OnceLock<HashSet<String>> = OnceLock::new();
+    ARMED.get_or_init(|| match std::env::var(ENV_VAR) {
+        Ok(v) => v
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect(),
+        Err(_) => HashSet::new(),
+    })
+}
+
+/// Whether any fail point is armed in this process (daemon startup logs
+/// it, so a stray `KF_FAILPOINT` in a real deployment is visible).
+pub fn any_armed() -> bool {
+    !armed().is_empty()
+}
+
+/// Abort the process if `point` was armed via `KF_FAILPOINT`.
+///
+/// `abort()` rather than `exit()`: no destructors, no flushes beyond
+/// what already hit the kernel — the closest portable stand-in for
+/// power loss.
+pub fn hit(point: &str) {
+    if armed().contains(point) {
+        eprintln!("KF_FAILPOINT '{point}' hit: aborting process (crash injection)");
+        std::process::abort();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn declared_points_are_unique_and_namespaced() {
+        let mut seen = HashSet::new();
+        for p in POINTS {
+            assert!(seen.insert(*p), "duplicate fail point {p}");
+            assert!(p.contains('.'), "fail point {p} must be namespaced");
+        }
+    }
+
+    #[test]
+    fn unarmed_hit_is_a_no_op() {
+        // The test runner never sets KF_FAILPOINT (the crash suite arms
+        // it only in spawned child processes), so this must not abort.
+        hit("commit.after_marker");
+        hit("not.a.point");
+        assert!(!any_armed());
+    }
+}

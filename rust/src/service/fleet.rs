@@ -15,7 +15,9 @@
 //! `stats` verb's utilization report.
 
 use super::cache::{cache_key, ResultCache};
+use super::failpoint;
 use super::job::{DeviceResult, JobState, JobTable, TaskSource};
+use super::journal::{Journal, JournalRecord};
 use super::queue::{JobQueue, QueuedUnit};
 use super::ServiceConfig;
 use crate::config::FoundryConfig;
@@ -68,6 +70,7 @@ impl Fleet {
         queue: &Arc<JobQueue>,
         jobs: &Arc<JobTable>,
         cache: &Arc<ResultCache>,
+        journal: Option<&Arc<Journal>>,
     ) -> Fleet {
         let mut lanes = Vec::new();
         let mut handles = Vec::new();
@@ -81,6 +84,7 @@ impl Fleet {
             let queue = Arc::clone(queue);
             let jobs = Arc::clone(jobs);
             let cache = Arc::clone(cache);
+            let journal = journal.map(Arc::clone);
             let compile_workers = cfg.compile_workers;
             let exec_workers = cfg.exec_workers;
             let queue_capacity = cfg.queue_capacity;
@@ -93,6 +97,7 @@ impl Fleet {
                     queue,
                     jobs,
                     cache,
+                    journal,
                     stats,
                 )
             }));
@@ -172,9 +177,20 @@ fn lane_main(
     queue: Arc<JobQueue>,
     jobs: Arc<JobTable>,
     cache: Arc<ResultCache>,
+    journal: Option<Arc<Journal>>,
     stats: Arc<LaneStats>,
 ) {
     while let Some(unit) = queue.pop_for(device.name) {
+        if let Some(jnl) = &journal {
+            let rec = JournalRecord::Dispatch {
+                job_id: unit.job_id,
+                device: device.name.to_string(),
+            };
+            if let Err(e) = jnl.append(&rec) {
+                crate::log_warn!("journal dispatch failed: {e}");
+            }
+            failpoint::hit("dispatch.after_journal");
+        }
         jobs.set_unit_state(unit.job_id, device.name, JobState::Generating);
         let t0 = Instant::now();
         // catch_unwind: a panicking unit must fail *that job*, not kill
@@ -197,11 +213,40 @@ fn lane_main(
             .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
         match outcome {
             Ok(result) => {
+                // Slot-commit protocol: the journal Commit marker is
+                // written *before* the cache row. A crash between the
+                // two is repaired idempotently at replay (the marker's
+                // result is re-inserted only if its row is missing), so
+                // no interleaving of crash points can publish a
+                // duplicate or torn verdict row.
+                if let Some(jnl) = &journal {
+                    failpoint::hit("commit.before_marker");
+                    let rec = JournalRecord::Commit {
+                        job_id: unit.job_id,
+                        device: device.name.to_string(),
+                        result: result.clone(),
+                    };
+                    if let Err(e) = jnl.append(&rec) {
+                        crate::log_warn!("journal commit failed: {e}");
+                    }
+                    failpoint::hit("commit.after_marker");
+                }
                 cache.insert(&cache_key(&unit.spec, device.name), result.clone());
+                failpoint::hit("commit.after_row");
                 stats.units_done.fetch_add(1, Ordering::Relaxed);
                 jobs.complete_unit(unit.job_id, device.name, result);
             }
             Err(msg) => {
+                if let Some(jnl) = &journal {
+                    let rec = JournalRecord::Fail {
+                        job_id: unit.job_id,
+                        device: device.name.to_string(),
+                        error: msg.clone(),
+                    };
+                    if let Err(e) = jnl.append(&rec) {
+                        crate::log_warn!("journal fail failed: {e}");
+                    }
+                }
                 stats.units_failed.fetch_add(1, Ordering::Relaxed);
                 jobs.fail_unit(unit.job_id, device.name, msg);
             }
@@ -274,7 +319,7 @@ mod tests {
             compile_workers: 1,
             exec_workers: 2,
             queue_capacity: 8,
-            db_path: None,
+            ..ServiceConfig::default()
         };
         (
             cfg,
@@ -289,7 +334,7 @@ mod tests {
     #[test]
     fn lane_runs_a_unit_to_completion() {
         let (cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
-        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache);
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None);
         assert!(fleet.has_device("b580"));
         assert!(!fleet.has_device("lnl"));
 
@@ -341,7 +386,7 @@ mod tests {
     #[test]
     fn lane_survives_a_failing_unit() {
         let (cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
-        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache);
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None);
         let spec = JobSpec::catalog("no_such_task", "b580");
         jobs.insert(Job {
             id: 1,

@@ -240,7 +240,7 @@ impl JobSpec {
 
 /// The outcome of one job unit: the best kernel one device's evolution
 /// run produced (or the evidence that none was found).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DeviceResult {
     /// Device the unit ran on.
     pub device: String,
@@ -303,15 +303,30 @@ impl DeviceResult {
 
     /// Serialize to the wire object form. `with_source` controls whether
     /// the (potentially large) kernel source is included.
+    ///
+    /// Non-finite metrics are clamped like [`crate::dist::DbRow`]'s: the
+    /// same objects land in the job journal, where an unparseable value
+    /// would corrupt the recovery log.
     pub fn to_json(&self, with_source: bool) -> Json {
+        fn finite(v: f64) -> f64 {
+            if v.is_finite() {
+                v
+            } else if v.is_nan() {
+                0.0
+            } else if v > 0.0 {
+                f64::MAX
+            } else {
+                f64::MIN
+            }
+        }
         let mut o = Json::obj();
         o.set("device", self.device.as_str())
             .set("task_id", self.task_id.as_str())
             .set("correct", self.correct)
-            .set("fitness", self.fitness)
-            .set("speedup", self.speedup)
-            .set("time_ms", self.time_ms)
-            .set("baseline_ms", self.baseline_ms)
+            .set("fitness", finite(self.fitness))
+            .set("speedup", finite(self.speedup))
+            .set("time_ms", finite(self.time_ms))
+            .set("baseline_ms", finite(self.baseline_ms))
             .set("coords", self.coords.to_vec())
             .set("genome_id", self.genome_id.to_string())
             .set("produced_by", self.produced_by.as_str())
@@ -319,11 +334,48 @@ impl DeviceResult {
             .set("compile_errors", self.compile_errors)
             .set("incorrect", self.incorrect)
             .set("cached", self.cached)
-            .set("wall_ms", self.wall_ms);
+            .set("wall_ms", finite(self.wall_ms));
         if with_source {
             o.set("source", self.source.as_str());
         }
         o
+    }
+
+    /// Parse back from the wire object form (journal replay reads the
+    /// `commit` records written via `to_json(false)`). An absent
+    /// `source` restores as empty — like a persisted cache row, a
+    /// replayed result carries metrics only.
+    pub fn from_json(v: &Json) -> Option<DeviceResult> {
+        let coords_arr = v.get("coords")?.as_arr()?;
+        if coords_arr.len() != 3 {
+            return None;
+        }
+        Some(DeviceResult {
+            device: v.get("device")?.as_str()?.to_string(),
+            task_id: v.get("task_id")?.as_str()?.to_string(),
+            correct: v.get("correct")?.as_bool()?,
+            fitness: v.get("fitness")?.as_f64()?,
+            speedup: v.get("speedup")?.as_f64()?,
+            time_ms: v.get("time_ms")?.as_f64()?,
+            baseline_ms: v.get("baseline_ms")?.as_f64()?,
+            coords: [
+                coords_arr[0].as_usize()?,
+                coords_arr[1].as_usize()?,
+                coords_arr[2].as_usize()?,
+            ],
+            genome_id: v.get("genome_id")?.as_str()?.parse().ok()?,
+            produced_by: v.get("produced_by")?.as_str()?.to_string(),
+            source: v
+                .get("source")
+                .and_then(|s| s.as_str())
+                .unwrap_or("")
+                .to_string(),
+            evaluations: v.get("evaluations")?.as_usize()?,
+            compile_errors: v.get("compile_errors")?.as_usize()?,
+            incorrect: v.get("incorrect")?.as_usize()?,
+            cached: v.get("cached")?.as_bool()?,
+            wall_ms: v.get("wall_ms")?.as_f64()?,
+        })
     }
 }
 

@@ -28,8 +28,10 @@
 
 pub mod api;
 pub mod cache;
+pub mod failpoint;
 pub mod fleet;
 pub mod job;
+pub mod journal;
 pub mod proto;
 pub mod queue;
 
@@ -40,6 +42,7 @@ pub use job::{
     DeviceResult, DeviceTarget, Job, JobCounts, JobPriority, JobSpec, JobState, JobTable,
     TaskSource,
 };
+pub use journal::{Journal, JournalRecord};
 pub use proto::Request;
 pub use queue::{JobQueue, QueuedUnit, QueueError};
 
@@ -47,10 +50,12 @@ use crate::dist::ClusterConfig;
 use crate::hwsim::DeviceProfile;
 use crate::tasks::{catalog, custom};
 use crate::util::json::Json;
+use journal::ReplayUnitState;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
 
 /// Configuration of one service instance.
 #[derive(Debug, Clone)]
@@ -71,7 +76,19 @@ pub struct ServiceConfig {
     /// carries its own `JobSpec::seed` (part of the cache key), so a
     /// daemon-wide seed would be a dead knob.
     pub db_path: Option<PathBuf>,
+    /// JSONL path of the write-ahead job journal (`None` = volatile:
+    /// queued and in-flight jobs are lost on restart, the pre-durability
+    /// behavior). With a journal, restart replays them — see [`journal`].
+    pub journal_path: Option<PathBuf>,
+    /// Owner-lease TTL for the journal. The daemon heartbeats at ttl/3;
+    /// a second daemon pointed at the same journal may take over only
+    /// once the last heartbeat is older than this (or after a clean
+    /// release). Ignored without `journal_path`.
+    pub lease_ttl: Duration,
 }
+
+/// Default journal owner-lease TTL (seconds).
+pub const DEFAULT_LEASE_TTL_SECS: u64 = 30;
 
 impl Default for ServiceConfig {
     fn default() -> ServiceConfig {
@@ -82,8 +99,31 @@ impl Default for ServiceConfig {
             exec_workers: cluster.exec_workers,
             queue_capacity: cluster.queue_capacity,
             db_path: None,
+            journal_path: None,
+            lease_ttl: Duration::from_secs(DEFAULT_LEASE_TTL_SECS),
         }
     }
+}
+
+/// Counters describing what journal replay restored at service start
+/// (the `stats` verb's `journal` block; all zero without a journal).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplayStats {
+    /// Journal records read at start.
+    pub records: usize,
+    /// Jobs restored into the job table.
+    pub jobs: usize,
+    /// Units restored in a terminal state (results served from the
+    /// journal/cache without re-execution).
+    pub restored_results: usize,
+    /// Units re-enqueued for execution: queued at crash time, or
+    /// dispatched but never committed (at-least-once re-run).
+    pub requeued_units: usize,
+    /// Jobs with at least one unit that could not be restored or
+    /// re-enqueued (its device left the fleet across the restart; the
+    /// unit is surfaced as failed, never dropped silently). The restart
+    /// e2e pins this to zero.
+    pub lost_jobs: usize,
 }
 
 /// What `submit` returns: the assigned id plus whether the whole job
@@ -98,20 +138,65 @@ pub struct SubmitReceipt {
     pub cached: bool,
 }
 
-/// The service orchestrator: queue + job table + cache + fleet.
+/// Replay helper: re-enqueue one journaled unit, or surface it as
+/// failed (never drop it silently) when its device left the fleet
+/// across the restart.
+fn requeue_unit(
+    job_id: u64,
+    spec: &JobSpec,
+    device: String,
+    cfg: &ServiceConfig,
+    to_queue: &mut Vec<QueuedUnit>,
+    stats: &mut ReplayStats,
+    lost: &mut bool,
+) -> job::JobUnit {
+    if cfg.devices.iter().any(|d| d.name == device) {
+        stats.requeued_units += 1;
+        to_queue.push(QueuedUnit {
+            job_id,
+            device: device.clone(),
+            priority: spec.priority,
+            seq: 0,
+            spec: spec.clone(),
+        });
+        job::JobUnit {
+            device,
+            state: JobState::Queued,
+            result: None,
+            error: None,
+        }
+    } else {
+        *lost = true;
+        job::JobUnit {
+            device: device.clone(),
+            state: JobState::Failed,
+            result: None,
+            error: Some(format!(
+                "device '{device}' left the fleet across a restart; resubmit to re-run"
+            )),
+        }
+    }
+}
+
+/// The service orchestrator: queue + job table + cache + fleet, plus
+/// the optional write-ahead [`Journal`] that makes restarts lossless.
 pub struct KernelService {
     cfg: ServiceConfig,
     queue: Arc<JobQueue>,
     jobs: Arc<JobTable>,
     cache: Arc<ResultCache>,
     fleet: Fleet,
+    journal: Option<Arc<Journal>>,
+    replay_stats: ReplayStats,
+    heartbeat_stop: Arc<AtomicBool>,
+    heartbeat: Mutex<Option<thread::JoinHandle<()>>>,
     next_id: AtomicU64,
     started: Instant,
 }
 
 impl KernelService {
     /// Validate the configuration, prewarm the cache from `db_path` (if
-    /// set) and spawn the fleet lanes.
+    /// set), replay the journal (if set) and spawn the fleet lanes.
     pub fn start(mut cfg: ServiceConfig) -> Result<Arc<KernelService>, String> {
         let mut seen = Vec::new();
         cfg.devices.retain(|d| {
@@ -125,25 +210,159 @@ impl KernelService {
         if cfg.devices.is_empty() {
             return Err("service needs at least one fleet device".to_string());
         }
-        // A fan-out submit enqueues one unit per device atomically; a
-        // capacity below the fleet width would reject `--device all`
-        // forever with a misleading "retry later".
-        cfg.queue_capacity = cfg.queue_capacity.max(cfg.devices.len());
         let cache = match &cfg.db_path {
             None => ResultCache::in_memory(),
             Some(path) => ResultCache::with_database(path).map_err(|e| e.to_string())?,
         };
+
+        // Acquire the journal lease and fold its records into the state
+        // every queued/in-flight job was in when the last owner stopped.
+        let mut journal = None;
+        let mut replay_stats = ReplayStats::default();
+        let mut restored_jobs = Vec::new();
+        let mut to_queue = Vec::new();
+        let mut next_id = 0u64;
+        if let Some(path) = &cfg.journal_path {
+            let owner = format!("kf-{}-{:x}", std::process::id(), journal::now_ms() as u64);
+            let (jnl, records) =
+                Journal::open(path, &owner, cfg.lease_ttl).map_err(|e| e.to_string())?;
+            let state = journal::replay(&records);
+            replay_stats.records = records.len();
+            replay_stats.jobs = state.jobs.len();
+            next_id = state.max_job_id();
+            for (id, rj) in state.jobs {
+                let mut units = Vec::new();
+                let mut lost = false;
+                for ru in rj.units {
+                    let key = cache::cache_key(&rj.spec, &ru.device);
+                    units.push(match ru.state {
+                        ReplayUnitState::Committed(result) => {
+                            // Exactly-once slot repair: the commit marker
+                            // is authoritative; (re)write the cache row
+                            // only if the crash lost it.
+                            cache.restore(&key, result.clone());
+                            replay_stats.restored_results += 1;
+                            job::JobUnit {
+                                device: ru.device,
+                                state: JobState::Done,
+                                result: Some(result),
+                                error: None,
+                            }
+                        }
+                        ReplayUnitState::CachedDone => match cache.peek(&key) {
+                            Some(hit) => {
+                                replay_stats.restored_results += 1;
+                                job::JobUnit {
+                                    device: ru.device,
+                                    state: JobState::Done,
+                                    result: Some(hit),
+                                    error: None,
+                                }
+                            }
+                            // Cache hit at submit time, but the cache did
+                            // not survive the restart: re-run (the unit
+                            // was never journaled with its result).
+                            None => requeue_unit(
+                                id,
+                                &rj.spec,
+                                ru.device,
+                                &cfg,
+                                &mut to_queue,
+                                &mut replay_stats,
+                                &mut lost,
+                            ),
+                        },
+                        // Queued at crash time, or dispatched but never
+                        // committed: at-least-once re-run. Determinism
+                        // (verdict = f(seed, genome)) makes the re-run
+                        // publication-equivalent to the lost attempt.
+                        ReplayUnitState::Queued | ReplayUnitState::Dispatched => requeue_unit(
+                            id,
+                            &rj.spec,
+                            ru.device,
+                            &cfg,
+                            &mut to_queue,
+                            &mut replay_stats,
+                            &mut lost,
+                        ),
+                        ReplayUnitState::Failed(error) => job::JobUnit {
+                            device: ru.device,
+                            state: JobState::Failed,
+                            result: None,
+                            error: Some(error),
+                        },
+                        ReplayUnitState::Cancelled => job::JobUnit {
+                            device: ru.device,
+                            state: JobState::Cancelled,
+                            result: None,
+                            error: None,
+                        },
+                    });
+                }
+                if lost {
+                    replay_stats.lost_jobs += 1;
+                }
+                restored_jobs.push(Job {
+                    id,
+                    spec: rj.spec,
+                    submitted_at: Instant::now(),
+                    units,
+                });
+            }
+            journal = Some(Arc::new(jnl));
+        }
+
+        // A fan-out submit enqueues one unit per device atomically; a
+        // capacity below the fleet width would reject `--device all`
+        // forever with a misleading "retry later". Replayed units must
+        // likewise always fit, however many the journal restored.
+        cfg.queue_capacity = cfg.queue_capacity.max(cfg.devices.len()).max(to_queue.len());
         let queue = Arc::new(JobQueue::new(cfg.queue_capacity));
         let jobs = Arc::new(JobTable::new());
         let cache = Arc::new(cache);
-        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache);
+        for job in restored_jobs {
+            jobs.insert(job);
+        }
+        if !to_queue.is_empty() {
+            queue
+                .push(to_queue)
+                .map_err(|e| format!("re-enqueueing replayed units: {e}"))?;
+        }
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, journal.as_ref());
+
+        // Heartbeat: refresh the owner lease at ttl/3 so a standby
+        // daemon can distinguish "owner is alive" from "owner is gone".
+        let heartbeat_stop = Arc::new(AtomicBool::new(false));
+        let mut heartbeat = None;
+        if let Some(jnl) = &journal {
+            let jnl = Arc::clone(jnl);
+            let stop = Arc::clone(&heartbeat_stop);
+            let interval = (cfg.lease_ttl / 3).max(Duration::from_millis(10));
+            heartbeat = Some(thread::spawn(move || {
+                let mut last = Instant::now();
+                while !stop.load(Ordering::Relaxed) {
+                    thread::sleep(Duration::from_millis(10));
+                    if last.elapsed() >= interval {
+                        if let Err(e) = jnl.heartbeat() {
+                            crate::log_warn!("journal heartbeat failed: {e}");
+                        }
+                        last = Instant::now();
+                    }
+                }
+            }));
+        }
+
         Ok(Arc::new(KernelService {
             cfg,
             queue,
             jobs,
             cache,
             fleet,
-            next_id: AtomicU64::new(0),
+            journal,
+            replay_stats,
+            heartbeat_stop,
+            heartbeat: Mutex::new(heartbeat),
+            next_id: AtomicU64::new(next_id),
             started: Instant::now(),
         }))
     }
@@ -216,6 +435,24 @@ impl KernelService {
         }
         let cached = to_queue.is_empty();
 
+        // Journal first: once the Submit record is durable, a crash
+        // anywhere past this line replays the job instead of losing it.
+        if let Some(jnl) = &self.journal {
+            let rec = JournalRecord::Submit {
+                job_id: id,
+                spec: spec.clone(),
+                units: units
+                    .iter()
+                    .map(|u| journal::SubmitUnit {
+                        device: u.device.clone(),
+                        cached: u.state == JobState::Done,
+                    })
+                    .collect(),
+            };
+            jnl.append(&rec).map_err(|e| format!("journal: {e}"))?;
+            failpoint::hit("submit.after_journal");
+        }
+
         // Register before queueing: a lane must never pop a unit whose
         // job is not yet in the table.
         let job = Job {
@@ -229,6 +466,17 @@ impl KernelService {
         if !cached {
             if let Err(e) = self.queue.push(to_queue) {
                 self.jobs.remove(id);
+                // Compensating record: without it, replay would
+                // resurrect a job the caller was told to retry.
+                if let Some(jnl) = &self.journal {
+                    let rec = JournalRecord::Cancel {
+                        job_id: id,
+                        devices,
+                    };
+                    if let Err(je) = jnl.append(&rec) {
+                        crate::log_warn!("journal cancel-on-reject failed: {je}");
+                    }
+                }
                 return Err(e.to_string());
             }
         }
@@ -257,6 +505,15 @@ impl KernelService {
             return Err(format!("job {id} is already running"));
         }
         self.jobs.cancel_units(id, &removed);
+        if let Some(jnl) = &self.journal {
+            let rec = JournalRecord::Cancel {
+                job_id: id,
+                devices: removed,
+            };
+            if let Err(e) = jnl.append(&rec) {
+                crate::log_warn!("journal cancel failed: {e}");
+            }
+        }
         Ok(self
             .jobs
             .get(id)
@@ -271,13 +528,31 @@ impl KernelService {
         queue_o
             .set("depth", self.queue.len())
             .set("capacity", self.queue.capacity());
+        let mut journal_o = Json::obj();
+        match &self.journal {
+            None => {
+                journal_o.set("enabled", false);
+            }
+            Some(jnl) => {
+                journal_o
+                    .set("enabled", true)
+                    .set("owner", jnl.owner())
+                    .set("records_written", jnl.records_written() as usize)
+                    .set("replayed_records", self.replay_stats.records)
+                    .set("replayed_jobs", self.replay_stats.jobs)
+                    .set("restored_results", self.replay_stats.restored_results)
+                    .set("requeued_units", self.replay_stats.requeued_units)
+                    .set("lost_jobs", self.replay_stats.lost_jobs);
+            }
+        }
         let mut o = Json::obj();
         o.set("ok", true)
             .set("uptime_ms", self.started.elapsed().as_secs_f64() * 1000.0)
             .set("jobs", self.jobs.counts().to_json())
             .set("queue", queue_o)
             .set("cache", self.cache.stats_json())
-            .set("fleet", self.fleet.stats_json());
+            .set("fleet", self.fleet.stats_json())
+            .set("journal", journal_o);
         o
     }
 
@@ -333,11 +608,21 @@ impl KernelService {
         }
     }
 
-    /// Stop the service: shut the queue (lanes drain remaining units)
-    /// and join every lane thread.
+    /// Stop the service: shut the queue (lanes drain remaining units),
+    /// join every lane thread, then release the journal lease so a
+    /// successor can take over without waiting out the TTL.
     pub fn stop(&self) {
         self.queue.shutdown();
         self.fleet.join();
+        self.heartbeat_stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.heartbeat.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+        if let Some(jnl) = &self.journal {
+            if let Err(e) = jnl.release() {
+                crate::log_warn!("journal lease release failed: {e}");
+            }
+        }
     }
 
     /// Block until the job reaches a terminal state or the timeout
@@ -369,7 +654,7 @@ mod tests {
             compile_workers: 1,
             exec_workers: 2,
             queue_capacity: 16,
-            db_path: None,
+            ..ServiceConfig::default()
         })
         .unwrap()
     }
@@ -448,10 +733,41 @@ mod tests {
             compile_workers: 1,
             exec_workers: 1,
             queue_capacity: 1,
-            db_path: None,
+            ..ServiceConfig::default()
         })
         .unwrap();
         assert_eq!(svc.config().queue_capacity, 3, "fan-out must always fit");
+        svc.stop();
+    }
+
+    #[test]
+    fn cancel_of_a_dispatched_job_reports_coherent_status() {
+        let svc = quick_service(vec![DeviceProfile::b580()]);
+        let mut spec = JobSpec::catalog("1_Conv2D_ReLU_BiasAdd", "b580");
+        spec.iters = 12;
+        spec.population = 6;
+        let receipt = svc.submit(spec).unwrap();
+
+        // Wait for the lane to pick the unit up, then try to cancel:
+        // a dispatched unit cannot be recalled, and the error must say
+        // so instead of pretending the job was stopped.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let job = svc.status(receipt.job_id).unwrap();
+            if job.state() != JobState::Queued {
+                break;
+            }
+            assert!(Instant::now() < deadline, "unit never left the queue");
+            thread::sleep(Duration::from_millis(2));
+        }
+        // Either "already running" (mid-flight) or "already done" (the
+        // lane won the race) is coherent; silently claiming success or
+        // leaving a half-cancelled job is the regression.
+        let err = svc.cancel(receipt.job_id).unwrap_err();
+        assert!(err.contains("already"), "{err}");
+        let job = svc.wait(receipt.job_id, Duration::from_secs(60)).unwrap();
+        assert_eq!(job.state(), JobState::Done, "cancel must not corrupt the run");
+        assert!(job.units[0].result.is_some());
         svc.stop();
     }
 

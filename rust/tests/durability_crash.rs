@@ -1,0 +1,314 @@
+//! Crash-injection durability tests: a real `kernelfoundry daemon`
+//! subprocess is aborted at journal/commit fail-points (`KF_FAILPOINT`),
+//! restarted against the same journal, and must replay every job with
+//! exactly one verdict row per unit.
+//!
+//! The exactly-once assertion leans on the determinism contract:
+//! verdicts are a pure function of (seed, genome id), so an at-least-
+//! once re-run after a crash is publication-equivalent to the attempt
+//! the crash destroyed — the slot-commit protocol then guarantees the
+//! *row* is published once.
+
+use kernelfoundry::dist::Database;
+use kernelfoundry::service::journal::{Journal, JournalRecord};
+use kernelfoundry::service::{cache, failpoint, proto, Client, JobSpec, Request};
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// A daemon subprocess plus the stdout reader thread that keeps the
+/// child's pipe drained (an unread pipe would wedge or EPIPE it).
+struct Daemon {
+    child: Child,
+    addr: String,
+    _stdout: std::thread::JoinHandle<()>,
+}
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_kernelfoundry")
+}
+
+/// Spawn `kernelfoundry daemon` with the given journal/db/TTL and an
+/// optional armed fail-point; parse the listen address from stdout.
+fn spawn_daemon(journal: &Path, db: &Path, ttl_secs: u64, failpoints: &str) -> Daemon {
+    let mut cmd = Command::new(bin());
+    cmd.args([
+        "daemon",
+        "--addr",
+        "127.0.0.1:0",
+        "--devices",
+        "b580",
+        "--compile-workers",
+        "1",
+        "--exec-workers",
+        "2",
+        "--journal",
+        journal.to_str().unwrap(),
+        "--db",
+        db.to_str().unwrap(),
+        "--lease-ttl",
+        &ttl_secs.to_string(),
+    ])
+    .env(failpoint::ENV_VAR, failpoints)
+    .stdout(Stdio::piped())
+    .stderr(Stdio::null());
+    let mut child = cmd.spawn().expect("daemon spawns");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = BufReader::new(stdout);
+
+    let mut addr = String::new();
+    let mut line = String::new();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while addr.is_empty() {
+        assert!(Instant::now() < deadline, "daemon never announced its address");
+        line.clear();
+        let n = reader.read_line(&mut line).expect("reading daemon stdout");
+        assert!(n > 0, "daemon exited before announcing its address");
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            addr = rest.split_whitespace().next().unwrap_or("").to_string();
+        }
+    }
+    // Keep draining so the child never blocks on a full pipe.
+    let handle = std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    Daemon {
+        child,
+        addr,
+        _stdout: handle,
+    }
+}
+
+impl Daemon {
+    fn client(&self) -> Client {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match Client::connect(&self.addr) {
+                Ok(c) => return c,
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "connecting to {}: {e}", self.addr);
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+
+    /// Block until the child exits (e.g. an armed fail-point aborted
+    /// it); panics if it is still alive after the timeout.
+    fn wait_for_exit(&mut self, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.child.try_wait().expect("try_wait").is_some() {
+                return;
+            }
+            assert!(Instant::now() < deadline, "daemon did not exit in {timeout:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Clean RPC shutdown: the daemon drains, releases its lease, exits.
+    fn shutdown(&mut self) {
+        let mut client = self.client();
+        let resp = client.request(&Request::Shutdown).expect("shutdown rpc");
+        assert!(proto::response_ok(&resp), "{resp}");
+        self.wait_for_exit(Duration::from_secs(60));
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn temp_paths(name: &str) -> (PathBuf, PathBuf) {
+    let dir = std::env::temp_dir();
+    let journal = dir.join(format!("kf_crash_{}_{}.journal.jsonl", name, std::process::id()));
+    let db = dir.join(format!("kf_crash_{}_{}.db.jsonl", name, std::process::id()));
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&db);
+    (journal, db)
+}
+
+fn crash_spec() -> JobSpec {
+    let mut spec = JobSpec::catalog("20_LeakyReLU", "b580");
+    spec.iters = 3;
+    spec.population = 2;
+    spec.seed = 11;
+    spec
+}
+
+/// Submit and return the job id (the daemon may abort right after, so
+/// the submit response itself must still be well-formed).
+fn submit(client: &mut Client, spec: JobSpec) -> u64 {
+    let resp = client.request(&Request::Submit(spec)).expect("submit rpc");
+    assert!(proto::response_ok(&resp), "submit failed: {resp}");
+    resp.get("job_id").and_then(|v| v.as_usize()).expect("job_id") as u64
+}
+
+fn poll_done(client: &mut Client, id: u64) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let resp = client.request(&Request::Status(id)).expect("status rpc");
+        let state = resp.get("state").and_then(|s| s.as_str()).unwrap_or("").to_string();
+        if state == "done" {
+            return;
+        }
+        assert!(
+            !matches!(state.as_str(), "failed" | "cancelled"),
+            "job {id} ended {state}: {resp}"
+        );
+        assert!(Instant::now() < deadline, "job {id} stuck in {state}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn stat_u64(stats: &kernelfoundry::util::json::Json, path: &str) -> u64 {
+    stats
+        .get_path(path)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("missing {path} in {stats}")) as u64
+}
+
+/// Rows in the db whose run key matches the crashed unit's cache key.
+fn rows_for_key(db_path: &Path, key: &str) -> usize {
+    if !db_path.exists() {
+        return 0;
+    }
+    let db = Database::new();
+    db.load_tolerant(db_path).expect("db loads");
+    db.rows().iter().filter(|r| r.run == key).count()
+}
+
+/// Crash between the journal Commit marker and the cache row: replay
+/// must repair the missing row from the marker — never re-run the job,
+/// never publish a second row.
+#[test]
+fn crash_after_commit_marker_repairs_the_row_exactly_once() {
+    let (journal, db) = temp_paths("marker");
+    let key = cache::cache_key(&crash_spec(), "b580");
+
+    let mut daemon = spawn_daemon(&journal, &db, 1, "commit.after_marker");
+    let mut client = daemon.client();
+    let id = submit(&mut client, crash_spec());
+    assert_eq!(id, 1);
+    // The lane hits the fail-point right after journaling the Commit
+    // marker and aborts the whole process: marker durable, row lost.
+    daemon.wait_for_exit(Duration::from_secs(120));
+
+    let records = Journal::load_records(&journal).expect("journal readable after abort");
+    let commits: Vec<_> = records
+        .iter()
+        .filter(|r| matches!(r, JournalRecord::Commit { job_id: 1, .. }))
+        .collect();
+    assert_eq!(commits.len(), 1, "exactly one durable commit marker: {records:?}");
+    assert_eq!(rows_for_key(&db, &key), 0, "crash was before the row append");
+
+    // Restart unarmed once the dead owner's lease has expired.
+    std::thread::sleep(Duration::from_millis(1500));
+    let mut daemon = spawn_daemon(&journal, &db, 1, "");
+    let mut client = daemon.client();
+    poll_done(&mut client, 1);
+    let result = client.request(&Request::Result(1)).expect("result rpc");
+    assert!(proto::response_ok(&result), "{result}");
+
+    let stats = client.request(&Request::Stats).expect("stats rpc");
+    assert_eq!(stat_u64(&stats, "journal.replayed_jobs"), 1, "{stats}");
+    assert_eq!(stat_u64(&stats, "journal.restored_results"), 1, "{stats}");
+    assert_eq!(stat_u64(&stats, "journal.requeued_units"), 0, "{stats}");
+    assert_eq!(stat_u64(&stats, "journal.lost_jobs"), 0, "{stats}");
+    daemon.shutdown();
+
+    assert_eq!(rows_for_key(&db, &key), 1, "slot repair published the row exactly once");
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&db);
+}
+
+/// Crash right after the Dispatch record: the unit is in-flight with no
+/// commit, so the restart re-runs it (at-least-once) and the re-run's
+/// verdict is published exactly once.
+#[test]
+fn crash_after_dispatch_requeues_and_commits_once() {
+    let (journal, db) = temp_paths("dispatch");
+    let key = cache::cache_key(&crash_spec(), "b580");
+
+    let mut daemon = spawn_daemon(&journal, &db, 1, "dispatch.after_journal");
+    let mut client = daemon.client();
+    assert_eq!(submit(&mut client, crash_spec()), 1);
+    daemon.wait_for_exit(Duration::from_secs(120));
+
+    let records = Journal::load_records(&journal).expect("journal readable after abort");
+    assert!(
+        records.iter().any(|r| matches!(r, JournalRecord::Dispatch { job_id: 1, .. })),
+        "dispatch was journaled before the crash: {records:?}"
+    );
+    assert!(
+        !records.iter().any(|r| matches!(r, JournalRecord::Commit { .. })),
+        "no commit survived the crash: {records:?}"
+    );
+
+    std::thread::sleep(Duration::from_millis(1500));
+    let mut daemon = spawn_daemon(&journal, &db, 1, "");
+    let mut client = daemon.client();
+    poll_done(&mut client, 1);
+
+    let stats = client.request(&Request::Stats).expect("stats rpc");
+    assert_eq!(stat_u64(&stats, "journal.requeued_units"), 1, "{stats}");
+    assert_eq!(stat_u64(&stats, "journal.lost_jobs"), 0, "{stats}");
+    daemon.shutdown();
+
+    let records = Journal::load_records(&journal).expect("journal readable");
+    let commits = records
+        .iter()
+        .filter(|r| matches!(r, JournalRecord::Commit { job_id: 1, .. }))
+        .count();
+    assert_eq!(commits, 1, "the re-run committed exactly once");
+    assert_eq!(rows_for_key(&db, &key), 1, "exactly one verdict row for the re-run");
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&db);
+}
+
+/// Owner leases: a second daemon pointed at a live journal is refused;
+/// after a clean shutdown (lease released) a successor starts
+/// immediately, without waiting out the TTL.
+#[test]
+fn second_daemon_is_fenced_until_the_lease_is_released() {
+    let (journal, db) = temp_paths("lease");
+
+    // Long TTL: only an explicit release can free the lease in test
+    // time, so a successful successor start proves the release path.
+    let mut first = spawn_daemon(&journal, &db, 300, "");
+    let _client = first.client();
+
+    let out = Command::new(bin())
+        .args([
+            "daemon",
+            "--addr",
+            "127.0.0.1:0",
+            "--devices",
+            "b580",
+            "--journal",
+            journal.to_str().unwrap(),
+            "--lease-ttl",
+            "300",
+        ])
+        .output()
+        .expect("second daemon runs");
+    assert!(!out.status.success(), "second daemon must be fenced out");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("held by"), "fencing error names the holder: {stderr}");
+
+    first.shutdown();
+    let mut successor = spawn_daemon(&journal, &db, 300, "");
+    let mut client = successor.client();
+    let stats = client.request(&Request::Stats).expect("stats rpc");
+    assert_eq!(stats.get_path("journal.enabled").unwrap().as_bool(), Some(true));
+    successor.shutdown();
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&db);
+}

@@ -4,11 +4,15 @@
 
 use kernelfoundry::archive::{Elite, MapElites};
 use kernelfoundry::classify::{cell_index, coords_of};
+use kernelfoundry::dist::{Database, DbRow};
 use kernelfoundry::eval::fitness::fitness;
 use kernelfoundry::gradient::GradientEstimator;
 use kernelfoundry::ir::KernelGenome;
 use kernelfoundry::metrics;
 use kernelfoundry::selection::{Selector, Strategy};
+use kernelfoundry::service::cache::cache_key;
+use kernelfoundry::service::journal::{replay, Journal, JournalRecord, SubmitUnit};
+use kernelfoundry::service::{DeviceResult, JobSpec};
 use kernelfoundry::transitions::{Outcome, Transition, TransitionTracker};
 use kernelfoundry::util::prop::{check_cases, F64In, Gen, PairOf, UsizeIn, VecOf};
 use kernelfoundry::util::rng::Rng;
@@ -200,6 +204,237 @@ fn prop_cell_index_bijection() {
         let idx = raw % (bins * bins * bins);
         cell_index(coords_of(idx, *bins), *bins) == idx
     });
+}
+
+fn fake_result(device: &str, id: u64) -> DeviceResult {
+    DeviceResult {
+        device: device.to_string(),
+        task_id: "20_LeakyReLU".to_string(),
+        correct: true,
+        fitness: 0.9,
+        speedup: 1.5,
+        time_ms: 0.5,
+        baseline_ms: 0.75,
+        coords: [1, 2, 3],
+        genome_id: id,
+        produced_by: "sim".to_string(),
+        source: String::new(),
+        evaluations: 6,
+        compile_errors: 1,
+        incorrect: 2,
+        cached: false,
+        wall_ms: 3.0,
+    }
+}
+
+/// Generator of random journal logs: each job is left at a random
+/// lifecycle stage (submitted / dispatched / committed / failed /
+/// cancelled / cached) on a random device.
+struct JournalLogs;
+impl Gen for JournalLogs {
+    type Value = Vec<JournalRecord>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n_jobs = rng.below(8);
+        let mut recs = vec![JournalRecord::Lease {
+            owner: "kf-prop".to_string(),
+            ts_ms: 1.0,
+        }];
+        for j in 0..n_jobs {
+            let job_id = j as u64 + 1;
+            let device = if rng.below(2) == 0 { "b580" } else { "lnl" };
+            let mut spec = JobSpec::catalog("20_LeakyReLU", device);
+            spec.seed = job_id;
+            let stage = rng.below(6);
+            recs.push(JournalRecord::Submit {
+                job_id,
+                spec,
+                units: vec![SubmitUnit {
+                    device: device.to_string(),
+                    cached: stage == 5,
+                }],
+            });
+            if (1..5).contains(&stage) {
+                recs.push(JournalRecord::Dispatch {
+                    job_id,
+                    device: device.to_string(),
+                });
+            }
+            match stage {
+                2 => recs.push(JournalRecord::Commit {
+                    job_id,
+                    device: device.to_string(),
+                    result: fake_result(device, job_id),
+                }),
+                3 => recs.push(JournalRecord::Fail {
+                    job_id,
+                    device: device.to_string(),
+                    error: "boom".to_string(),
+                }),
+                4 => recs.push(JournalRecord::Cancel {
+                    job_id,
+                    devices: vec![device.to_string()],
+                }),
+                _ => {}
+            }
+        }
+        recs
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        if v.len() <= 1 {
+            vec![]
+        } else {
+            vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+        }
+    }
+}
+
+/// Journal replay is an idempotent fold: replaying a log twice over —
+/// the state a crashed daemon leaves if it dies right after a restart
+/// that re-journals nothing — lands on exactly the same state, and the
+/// id high-water mark is stable.
+#[test]
+fn prop_journal_replay_idempotent() {
+    check_cases(21, 150, &JournalLogs, |recs| {
+        let once = replay(recs);
+        let mut doubled = recs.clone();
+        doubled.extend(recs.iter().cloned());
+        let twice = replay(&doubled);
+        once == twice && once.max_job_id() == twice.max_job_id()
+    });
+}
+
+/// Generator of crash cuts for the slot-commit protocol: n slots, a
+/// crash after a random prefix of the (marker, row) op sequence, plus a
+/// random torn-tail length for the interrupted append.
+struct CrashCut;
+impl Gen for CrashCut {
+    type Value = (usize, usize, usize);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = 1 + rng.below(4);
+        (n, rng.below(2 * n + 1), 1 + rng.below(24))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if v.1 > 0 {
+            out.push((v.0, v.1 - 1, v.2));
+        }
+        if v.0 > 1 {
+            out.push((v.0 - 1, v.1.min(2 * (v.0 - 1)), v.2));
+        }
+        out
+    }
+}
+
+/// Slot-commit safety over real files: whatever op the crash interrupts
+/// (and whatever torn bytes it leaves), after tolerant reload every
+/// result row in the db has a matching commit marker in the journal —
+/// markers strictly lead rows, so a row without provenance is
+/// impossible.
+#[test]
+fn prop_no_result_row_without_commit_marker() {
+    let dir = std::env::temp_dir();
+    let journal_path = dir.join(format!("kf_prop_cut_{}.journal.jsonl", std::process::id()));
+    let db_path = dir.join(format!("kf_prop_cut_{}.db.jsonl", std::process::id()));
+    check_cases(22, 120, &CrashCut, |&(n, crash_op, torn)| {
+        let spec_for = |k: usize| {
+            let mut spec = JobSpec::catalog("20_LeakyReLU", "b580");
+            spec.seed = k as u64;
+            spec
+        };
+        let row_for = |k: usize| DbRow {
+            run: cache_key(&spec_for(k), "b580"),
+            method: "service".to_string(),
+            idx: k,
+            task_id: "20_LeakyReLU".to_string(),
+            genome_id: k as u64,
+            produced_by: "sim".to_string(),
+            outcome: "correct".to_string(),
+            coords: [1, 2, 3],
+            fitness: 0.9,
+            speedup: 1.5,
+            time_ms: 0.5,
+            baseline_ms: 0.75,
+        };
+        let marker_line = |k: usize| {
+            JournalRecord::Commit {
+                job_id: k as u64,
+                device: "b580".to_string(),
+                result: fake_result("b580", k as u64),
+            }
+            .to_json()
+            .to_string_compact()
+                + "\n"
+        };
+        let row_line = |k: usize| row_for(k).to_json().to_string_compact() + "\n";
+
+        // Preamble: lease + every submit/dispatch, then the interleaved
+        // (marker_k, row_k) op sequence cut at `crash_op`, with a torn
+        // prefix of the interrupted line left behind.
+        let mut journal = JournalRecord::Lease {
+            owner: "kf-prop".to_string(),
+            ts_ms: 1.0,
+        }
+        .to_json()
+        .to_string_compact()
+            + "\n";
+        for k in 1..=n {
+            journal += &(JournalRecord::Submit {
+                job_id: k as u64,
+                spec: spec_for(k),
+                units: vec![SubmitUnit {
+                    device: "b580".to_string(),
+                    cached: false,
+                }],
+            }
+            .to_json()
+            .to_string_compact()
+                + "\n");
+            journal += &(JournalRecord::Dispatch {
+                job_id: k as u64,
+                device: "b580".to_string(),
+            }
+            .to_json()
+            .to_string_compact()
+                + "\n");
+        }
+        let mut db = String::new();
+        for op in 0..crash_op {
+            let k = op / 2 + 1;
+            if op % 2 == 0 {
+                journal += &marker_line(k);
+            } else {
+                db += &row_line(k);
+            }
+        }
+        if crash_op < 2 * n {
+            let k = crash_op / 2 + 1;
+            if crash_op % 2 == 0 {
+                let line = marker_line(k);
+                journal += &line[..torn.min(line.len() - 1)];
+            } else {
+                let line = row_line(k);
+                db += &line[..torn.min(line.len() - 1)];
+            }
+        }
+        std::fs::write(&journal_path, journal).unwrap();
+        std::fs::write(&db_path, db).unwrap();
+
+        let records = Journal::load_records(&journal_path).unwrap();
+        let committed: std::collections::HashSet<String> = records
+            .iter()
+            .filter_map(|r| match r {
+                JournalRecord::Commit { job_id, .. } => {
+                    Some(cache_key(&spec_for(*job_id as usize), "b580"))
+                }
+                _ => None,
+            })
+            .collect();
+        let database = Database::new();
+        database.load_tolerant(&db_path).unwrap();
+        database.rows().iter().all(|row| committed.contains(&row.run))
+    });
+    let _ = std::fs::remove_file(&journal_path);
+    let _ = std::fs::remove_file(&db_path);
 }
 
 /// End-to-end state invariant: random evolution runs never violate

@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""Service-throughput regression gate (stdlib only).
+
+Compares a freshly-measured ``BENCH_service.json`` against the committed
+baseline and fails (exit 1) on a >2x throughput regression in either the
+cold (execution) or warm (cache-hit) wave.
+
+Bootstrap mode: the first committed baseline carries ``"measured": false``
+(this repo's build environment has no Rust toolchain, so the seed baseline
+cannot carry honest numbers). An unmeasured baseline disables the
+comparison — the gate only validates the current file's shape — and CI
+stays green until a measured baseline is promoted with
+``make bench-baseline``.
+
+Usage:
+    python3 scripts/bench_gate.py --baseline <committed.json> --current BENCH_service.json
+"""
+
+import argparse
+import json
+import sys
+
+# A regression worse than this factor vs baseline fails the gate.
+MAX_REGRESSION = 2.0
+
+GATED_METRICS = ("cold_jobs_per_sec", "warm_jobs_per_sec")
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"bench gate: cannot read {path}: {e}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--current", required=True, help="freshly-measured bench JSON")
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    current = load(args.current)
+
+    for metric in GATED_METRICS:
+        value = current.get(metric)
+        if not isinstance(value, (int, float)) or value <= 0:
+            sys.exit(f"bench gate: current {metric} missing or non-positive: {value!r}")
+
+    if not baseline.get("measured", False):
+        print("bench gate: baseline is a bootstrap placeholder (measured=false);")
+        print("bench gate: shape check passed, comparison skipped.")
+        print("bench gate: promote a measured baseline with `make bench-baseline`.")
+        return
+
+    failures = []
+    for metric in GATED_METRICS:
+        base = baseline.get(metric, 0.0)
+        cur = current[metric]
+        if base <= 0:
+            continue
+        ratio = base / cur
+        status = "FAIL" if ratio > MAX_REGRESSION else "ok"
+        print(f"bench gate: {metric}: baseline {base:.2f} -> current {cur:.2f} "
+              f"({ratio:.2f}x slower) [{status}]")
+        if ratio > MAX_REGRESSION:
+            failures.append(metric)
+
+    if failures:
+        sys.exit(f"bench gate: >{MAX_REGRESSION:.0f}x throughput regression in: "
+                 + ", ".join(failures))
+    print("bench gate: within budget.")
+
+
+if __name__ == "__main__":
+    main()

@@ -310,7 +310,39 @@ impl EvolutionEngine {
             best_fitness: self.best.as_ref().map(|b| b.fitness).unwrap_or(0.0),
             cells_occupied: self.archive.n_occupied(),
         });
+        self.record_search_telemetry();
         self.iteration += 1;
+    }
+
+    /// Publish per-generation search telemetry to the process-wide
+    /// metrics registry: QD-score, archive coverage, best fitness and
+    /// the mutation-acceptance rate (archive insertions / insertion
+    /// attempts). Pure reads of archive state — never touches the
+    /// engine RNG, so seeded runs stay bit-identical.
+    fn record_search_telemetry(&self) {
+        let stats = self.archive.stats();
+        let obs = crate::obs::global();
+        obs.gauge("kf_search_qd_score").set(stats.qd_score);
+        obs.gauge("kf_search_best_fitness").set(stats.best_fitness);
+        obs.gauge("kf_search_generation").set(self.iteration as f64 + 1.0);
+        let coverage = if stats.total_cells > 0 {
+            stats.occupied as f64 / stats.total_cells as f64
+        } else {
+            0.0
+        };
+        obs.gauge("kf_search_coverage").set(coverage);
+        let acceptance = if stats.attempts > 0 {
+            stats.insertions as f64 / stats.attempts as f64
+        } else {
+            0.0
+        };
+        obs.gauge("kf_search_acceptance_rate").set(acceptance);
+        // Archive counters are cumulative over the run; mirror them with
+        // a monotone ratchet so concurrent engines only push them up.
+        obs.counter("kf_search_insertions_total")
+            .set_to(stats.insertions as u64);
+        obs.counter("kf_search_attempts_total")
+            .set_to(stats.attempts as u64);
     }
 
     fn meta_prompt_update(&mut self) {

@@ -176,8 +176,14 @@ impl WorkerPool {
                     let Ok((idx, genome)) = job else { break };
                     // The exact checks (and check order) of the inline
                     // pipeline's compile stage, via the shared helpers.
+                    let compile_start = std::time::Instant::now();
                     let source = render_sycl(&genome);
-                    match compile_check(&genome, &source, &limits) {
+                    let checked = compile_check(&genome, &source, &limits);
+                    crate::obs::global().observe_ms(
+                        "kf_eval_compile_ms",
+                        compile_start.elapsed().as_secs_f64() * 1000.0,
+                    );
+                    match checked {
                         Err(log) => {
                             metrics.compile_rejected.fetch_add(1, Ordering::Relaxed);
                             let record = compile_reject_record(&genome, source, log, baseline_ms);

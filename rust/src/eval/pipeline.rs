@@ -178,6 +178,7 @@ impl EvalPipeline {
 
     /// Evaluate one candidate genome end-to-end.
     pub fn evaluate(&mut self, genome: &KernelGenome) -> EvalRecord {
+        let compile_start = std::time::Instant::now();
         let source = render_sycl(genome);
 
         // ---- compile stage -------------------------------------------------
@@ -185,7 +186,12 @@ impl EvalPipeline {
             ExecBackend::HwSim(dev) => dev.limits(),
             ExecBackend::Real(_) => crate::ir::legality::DeviceLimits::default(),
         };
-        if let Err(log) = compile_check(genome, &source, &limits) {
+        let compiled = compile_check(genome, &source, &limits);
+        crate::obs::global().observe_ms(
+            "kf_eval_compile_ms",
+            compile_start.elapsed().as_secs_f64() * 1000.0,
+        );
+        if let Err(log) = compiled {
             let baseline_ms = self.baseline_ms();
             return compile_reject_record(genome, source, log, baseline_ms);
         }
@@ -199,6 +205,14 @@ impl EvalPipeline {
     /// render + checks. For a compilable genome,
     /// `evaluate(g) == evaluate_compiled(g, render_sycl(g))`.
     pub fn evaluate_compiled(&mut self, genome: &KernelGenome, source: String) -> EvalRecord {
+        let exec_start = std::time::Instant::now();
+        let record = self.evaluate_compiled_inner(genome, source);
+        crate::obs::global()
+            .observe_ms("kf_eval_exec_ms", exec_start.elapsed().as_secs_f64() * 1000.0);
+        record
+    }
+
+    fn evaluate_compiled_inner(&mut self, genome: &KernelGenome, source: String) -> EvalRecord {
         let baseline_ms = self.baseline_ms();
 
         // ---- behavioral classification (static, on source) ------------------

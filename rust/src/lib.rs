@@ -28,6 +28,7 @@ pub mod dist;
 pub mod eval;
 pub mod experiments;
 pub mod gradient;
+pub mod obs;
 pub mod prompts;
 pub mod runtime;
 pub mod selection;

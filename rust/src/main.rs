@@ -6,9 +6,14 @@
 //! kernelfoundry serve      --compile-workers N --exec-workers M (distributed demo)
 //! kernelfoundry daemon     --addr 127.0.0.1:7341 --devices lnl,b580,a6000 (service)
 //! kernelfoundry submit     --addr 127.0.0.1:7341 --task <id> --device b580|all
+//! kernelfoundry metrics    --addr 127.0.0.1:7341 (Prometheus text exposition)
+//! kernelfoundry trace      <job-id> --sink trace.jsonl (job timeline)
 //! kernelfoundry tasks      [--suite l1|l2|rkb|onednn] [--json]
 //! kernelfoundry report     --db runs.jsonl [--top N] [--json]
 //! ```
+//!
+//! Every subcommand accepts `--verbose` (debug logging) and `--quiet`
+//! (warnings only); the `KF_LOG` environment variable overrides both.
 
 use kernelfoundry::config::FoundryConfig;
 use kernelfoundry::coordinator::EvolutionEngine;
@@ -38,6 +43,8 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(rest),
         "daemon" => cmd_daemon(rest),
         "submit" => cmd_submit(rest),
+        "metrics" => cmd_metrics(rest),
+        "trace" => cmd_trace(rest),
         "tasks" => cmd_tasks(rest),
         "report" => cmd_report(rest),
         "--help" | "-h" | "help" => {
@@ -58,9 +65,27 @@ fn main() -> ExitCode {
 fn print_usage() {
     println!(
         "kernelfoundry {} — hardware-aware evolutionary GPU kernel optimization (reproduction)\n\n\
-         subcommands:\n  run      optimize kernels for one task\n  bench    regenerate a paper table/figure\n  serve    distributed worker-pool demo\n  daemon   long-running kernel-generation service (TCP JSON RPC)\n  submit   client for a running daemon (submit/status/result/cancel/stats)\n  tasks    list benchmark tasks\n  report   summarize a results database\n\nuse <subcommand> --help for options",
+         subcommands:\n  run      optimize kernels for one task\n  bench    regenerate a paper table/figure\n  serve    distributed worker-pool demo\n  daemon   long-running kernel-generation service (TCP JSON RPC)\n  submit   client for a running daemon (submit/status/result/cancel/stats/metrics)\n  metrics  fetch a daemon's Prometheus text exposition\n  trace    reconstruct a job's lifecycle timeline from a trace sink\n  tasks    list benchmark tasks\n  report   summarize a results database\n\nevery subcommand takes --verbose / --quiet (KF_LOG overrides both)\nuse <subcommand> --help for options",
         kernelfoundry::version()
     );
+}
+
+/// Attach the logging flags every subcommand shares.
+fn with_log_flags(cmd: Command) -> Command {
+    cmd.flag("verbose", "debug logging (KF_LOG env overrides)")
+        .flag("quiet", "warnings and errors only (KF_LOG env overrides)")
+}
+
+/// Apply `--verbose` / `--quiet` to the global log level. `--quiet`
+/// wins when both are given; the `KF_LOG` environment variable
+/// overrides either (see `util::log`).
+fn apply_log_flags(p: &kernelfoundry::util::cli::Parsed) {
+    use kernelfoundry::util::log::{set_level, Level};
+    if p.has_flag("quiet") {
+        set_level(Level::Warn);
+    } else if p.has_flag("verbose") {
+        set_level(Level::Debug);
+    }
 }
 
 fn cmd_run(args: &[String]) -> Result<(), String> {
@@ -73,12 +98,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .opt("models", "gpt-4.1,gpt-5-mini", "ensemble model profiles")
         .opt("config", "", "YAML config file (overrides defaults)")
         .flag("param-opt", "run the templated parameter-optimization phase")
-        .flag("cuda", "generate CUDA instead of SYCL")
-        .flag("verbose", "debug logging");
-    let p = cmd.parse(args)?;
-    if p.has_flag("verbose") {
-        kernelfoundry::util::log::set_level(kernelfoundry::util::log::Level::Debug);
-    }
+        .flag("cuda", "generate CUDA instead of SYCL");
+    let p = with_log_flags(cmd).parse(args)?;
+    apply_log_flags(&p);
 
     let mut config = FoundryConfig::paper_defaults();
     if let Some(path) = p.get("config").filter(|s| !s.is_empty()) {
@@ -129,7 +151,8 @@ fn cmd_bench(args: &[String]) -> Result<(), String> {
         .opt("table", "1", "which: 1 | 2 | 3 | 4 | 11 | fig3 | all")
         .opt("out", "results", "output directory for CSVs")
         .flag("quick", "reduced-scale run");
-    let p = cmd.parse(args)?;
+    let p = with_log_flags(cmd).parse(args)?;
+    apply_log_flags(&p);
     let scale = if p.has_flag("quick") {
         ExperimentScale::Quick
     } else {
@@ -193,7 +216,8 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         .opt("queue-capacity", "", "inter-stage queue capacity (defaults to the cluster default)")
         .opt("seed", "", "execution-pipeline RNG seed (defaults to the cluster default)")
         .opt("db", "runs.jsonl", "JSONL database every evaluation is persisted to ('' = off)");
-    let p = cmd.parse(args)?;
+    let p = with_log_flags(cmd).parse(args)?;
+    apply_log_flags(&p);
     let task = catalog::find_task(p.get("task").unwrap())
         .ok_or_else(|| "unknown task".to_string())?;
     let device = DeviceProfile::by_name(p.get("device").unwrap()).ok_or("unknown device")?;
@@ -265,11 +289,9 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
         .opt("db", "", "JSONL path for cache persistence ('' = in-memory only)")
         .opt("journal", "", "JSONL write-ahead job journal; restart replays queued/in-flight jobs ('' = volatile)")
         .opt("lease-ttl", "30", "journal owner-lease TTL in seconds (heartbeat at ttl/3)")
-        .flag("verbose", "debug logging");
-    let p = cmd.parse(args)?;
-    if p.has_flag("verbose") {
-        kernelfoundry::util::log::set_level(kernelfoundry::util::log::Level::Debug);
-    }
+        .opt("trace", "", "JSONL job-lifecycle trace sink for `kernelfoundry trace` ('' = off)");
+    let p = with_log_flags(cmd).parse(args)?;
+    apply_log_flags(&p);
     let mut devices = Vec::new();
     for name in p.get("devices").unwrap().split(',').filter(|s| !s.is_empty()) {
         let device =
@@ -287,6 +309,7 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
         lease_ttl: std::time::Duration::from_secs(
             p.get_usize("lease-ttl").unwrap_or(DEFAULT_LEASE_TTL_SECS as usize).max(1) as u64,
         ),
+        trace_path: p.get("trace").filter(|s| !s.is_empty()).map(Into::into),
     };
     if cfg.journal_path.is_some() && kernelfoundry::service::failpoint::any_armed() {
         eprintln!(
@@ -303,6 +326,9 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
         service.device_names().join(", ")
     );
     println!("stop with: kernelfoundry submit --addr {} --verb shutdown", server.addr());
+    if let Some(trace) = p.get("trace").filter(|s| !s.is_empty()) {
+        println!("trace sink: {trace} (inspect with `kernelfoundry trace <job-id> --sink {trace}`)");
+    }
     server.wait();
     println!("shutting down: draining queued jobs ...");
     service.stop();
@@ -312,7 +338,7 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
 fn cmd_submit(args: &[String]) -> Result<(), String> {
     let cmd = Command::new("submit", "client for a running kernelfoundry daemon")
         .opt("addr", "127.0.0.1:7341", "daemon address")
-        .opt("verb", "submit", "submit | status | result | cancel | stats | shutdown")
+        .opt("verb", "submit", "submit | status | result | cancel | stats | metrics | shutdown")
         .opt("job", "", "job id (status / result / cancel)")
         .opt("task", "", "catalog task id (see `kernelfoundry tasks --json`)")
         .opt("custom-dir", "", "directory with task.yaml + marked source (inline custom task)")
@@ -325,7 +351,8 @@ fn cmd_submit(args: &[String]) -> Result<(), String> {
         .flag("cuda", "generate CUDA instead of SYCL")
         .flag("no-wait", "return right after submission instead of polling to completion")
         .flag("json", "print raw JSON responses");
-    let p = cmd.parse(args)?;
+    let p = with_log_flags(cmd).parse(args)?;
+    apply_log_flags(&p);
     let addr = p.get("addr").unwrap();
     let mut client =
         Client::connect(addr).map_err(|e| format!("connecting to daemon at {addr}: {e}"))?;
@@ -345,6 +372,18 @@ fn cmd_submit(args: &[String]) -> Result<(), String> {
             println!("{}", resp.to_string_compact());
             return Ok(());
         }
+        "metrics" => {
+            let resp = simple(&mut client, &proto::Request::Metrics)?;
+            if raw {
+                println!("{}", resp.to_string_compact());
+            } else {
+                print!(
+                    "{}",
+                    resp.get("prometheus").and_then(|v| v.as_str()).unwrap_or("")
+                );
+            }
+            return Ok(());
+        }
         verb @ ("status" | "result" | "cancel") => {
             let id = p.get_u64("job").ok_or("--job <id> required for this verb")?;
             let req = match verb {
@@ -357,7 +396,11 @@ fn cmd_submit(args: &[String]) -> Result<(), String> {
             return Ok(());
         }
         "submit" => {}
-        other => return Err(format!("unknown verb '{other}'")),
+        other => {
+            return Err(format!(
+                "unknown verb '{other}' (submit | status | result | cancel | stats | metrics | shutdown)"
+            ))
+        }
     }
 
     // Build the submit spec: catalog id or inline custom bundle.
@@ -469,11 +512,94 @@ fn cmd_submit(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_metrics(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("metrics", "fetch a daemon's metrics in Prometheus text exposition")
+        .opt("addr", "127.0.0.1:7341", "daemon address")
+        .flag("json", "print the raw JSON response instead of the exposition text");
+    let p = with_log_flags(cmd).parse(args)?;
+    apply_log_flags(&p);
+    let addr = p.get("addr").unwrap();
+    let mut client =
+        Client::connect(addr).map_err(|e| format!("connecting to daemon at {addr}: {e}"))?;
+    let resp = client
+        .request(&proto::Request::Metrics)
+        .map_err(|e| e.to_string())?;
+    if !proto::response_ok(&resp) {
+        return Err(format!(
+            "metrics request failed: {}",
+            resp.get("error").and_then(|e| e.as_str()).unwrap_or("unknown error")
+        ));
+    }
+    if p.has_flag("json") {
+        println!("{}", resp.to_string_compact());
+    } else {
+        print!(
+            "{}",
+            resp.get("prometheus").and_then(|v| v.as_str()).unwrap_or("")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<(), String> {
+    let cmd = Command::new("trace", "reconstruct a job's lifecycle timeline from a trace sink")
+        .opt("sink", "trace.jsonl", "trace sink path (the daemon's --trace file)")
+        .opt("job", "", "job id (alternative to the positional argument)")
+        .flag("json", "machine-readable output (one JSON array)");
+    let p = with_log_flags(cmd).parse(args)?;
+    apply_log_flags(&p);
+    let job_id = match (p.positional.first(), p.get("job").filter(|s| !s.is_empty())) {
+        (Some(pos), _) => pos
+            .parse::<u64>()
+            .map_err(|_| format!("job id '{pos}' is not a number"))?,
+        (None, Some(opt)) => opt
+            .parse::<u64>()
+            .map_err(|_| format!("job id '{opt}' is not a number"))?,
+        (None, None) => return Err("usage: kernelfoundry trace <job-id> --sink <path>".into()),
+    };
+    let sink = Path::new(p.get("sink").unwrap());
+    if !sink.exists() {
+        return Err(format!(
+            "trace sink {} does not exist (start the daemon with --trace <path>)",
+            sink.display()
+        ));
+    }
+    let timeline = kernelfoundry::obs::TraceSink::timeline(sink, job_id);
+    if timeline.is_empty() {
+        return Err(format!("no events for job {job_id} in {}", sink.display()));
+    }
+    if p.has_flag("json") {
+        let arr: Vec<Json> = timeline.iter().map(|e| e.to_json()).collect();
+        println!("{}", Json::Arr(arr).to_string_compact());
+        return Ok(());
+    }
+    println!(
+        "job {job_id} (trace {}) — {} events",
+        timeline[0].trace_id,
+        timeline.len()
+    );
+    let t0 = timeline[0].ts_ms;
+    let mut prev = t0;
+    for ev in &timeline {
+        println!(
+            "  +{:>9.1} ms  {:<10} {:<8} (+{:.1} ms)",
+            ev.ts_ms - t0,
+            ev.stage,
+            ev.device.as_deref().unwrap_or("-"),
+            ev.ts_ms - prev,
+        );
+        prev = ev.ts_ms;
+    }
+    println!("total: {:.1} ms submit -> {}", prev - t0, timeline.last().unwrap().stage);
+    Ok(())
+}
+
 fn cmd_tasks(args: &[String]) -> Result<(), String> {
     let cmd = Command::new("tasks", "list benchmark tasks")
         .opt("suite", "all", "l1 | l2 | rkb | onednn | custom | all")
         .flag("json", "machine-readable output (one JSON array)");
-    let p = cmd.parse(args)?;
+    let p = with_log_flags(cmd).parse(args)?;
+    apply_log_flags(&p);
     let tasks = match p.get("suite").unwrap() {
         "l1" => catalog::kernelbench_l1(),
         "l2" => catalog::kernelbench_l2(),
@@ -507,7 +633,8 @@ fn cmd_report(args: &[String]) -> Result<(), String> {
         .opt("method", "kernelfoundry", "method to summarize")
         .opt("top", "0", "show only the N best tasks by speedup (0 = all)")
         .flag("json", "machine-readable output (one JSON array)");
-    let p = cmd.parse(args)?;
+    let p = with_log_flags(cmd).parse(args)?;
+    apply_log_flags(&p);
     let db = Database::new();
     let n = db
         .load(Path::new(p.get("db").unwrap()))

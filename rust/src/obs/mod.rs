@@ -1,0 +1,31 @@
+//! Observability: metrics registry + job-lifecycle trace sink.
+//!
+//! The service layer (and the search/eval hot paths underneath it) report
+//! into two zero-dependency primitives:
+//!
+//! - [`registry`] — named counters, gauges and log-bucketed latency
+//!   histograms (p50/p90/p99 summaries), snapshottable and renderable in
+//!   Prometheus text-exposition format. A process-wide default lives
+//!   behind [`registry::global`]; components that need isolated numbers
+//!   (one [`Registry`] per `KernelService`, so parallel daemons in one
+//!   test process don't bleed into each other's `stats`) instantiate
+//!   their own.
+//! - [`trace`] — an append-only JSONL trace sink, one timestamped stage
+//!   event per job-lifecycle transition
+//!   (`submit → queued → dispatched → compiled → executed → committed →
+//!   responded`), written with the same whole-line-append discipline as
+//!   `service::journal` and read back tolerantly (a torn final line is
+//!   dropped). `kernelfoundry trace <job-id>` reconstructs a job's
+//!   timeline from this file.
+//!
+//! DESIGN.md §8 documents the metric naming scheme, the trace-event
+//! schema and the exposition format.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    bucket_bounds, global, labeled, Counter, Gauge, Histogram, HistogramSnapshot, Registry,
+    Snapshot, HIST_BUCKETS,
+};
+pub use trace::{now_ms, stage, TraceEvent, TraceSink};

@@ -1,0 +1,427 @@
+//! The metrics registry: counters, gauges, log-bucketed histograms.
+//!
+//! Everything is lock-free on the hot path (atomics behind `Arc` handles;
+//! the registry mutexes are only taken on name lookup and snapshot).
+//! Snapshots are plain data, merge commutatively, and render to the
+//! Prometheus text-exposition format.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise the counter to `v` if it is currently below it (no-op
+    /// otherwise) — for mirroring an external monotone counter into the
+    /// registry without ever moving backwards under concurrent raises.
+    pub fn set_to(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn value(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins instantaneous value (stored as `f64` bits).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of finite histogram bucket bounds (the last bucket is +Inf).
+pub const HIST_BUCKETS: usize = 28;
+
+/// The shared log-spaced bucket upper bounds, in milliseconds:
+/// `0.001 * 2^i` for `i in 0..HIST_BUCKETS` (1 µs … ~134 s). Every
+/// histogram in the process uses the same bounds so snapshots merge
+/// bucket-for-bucket.
+pub fn bucket_bounds() -> &'static [f64] {
+    static BOUNDS: OnceLock<Vec<f64>> = OnceLock::new();
+    BOUNDS.get_or_init(|| (0..HIST_BUCKETS).map(|i| 0.001 * 2f64.powi(i as i32)).collect())
+}
+
+/// A log-bucketed latency histogram (milliseconds).
+#[derive(Debug)]
+pub struct Histogram {
+    /// `HIST_BUCKETS` finite buckets plus one overflow (+Inf) bucket.
+    buckets: Vec<AtomicU64>,
+    /// Sum of observed values, as `f64` bits (CAS-updated).
+    sum: AtomicU64,
+}
+
+fn add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: (0..=HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one observation (negative / non-finite values clamp to 0).
+    pub fn observe(&self, v: f64) {
+        let v = if v.is_finite() && v >= 0.0 { v } else { 0.0 };
+        let idx = bucket_bounds()
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(HIST_BUCKETS);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        add_f64(&self.sum, v);
+    }
+
+    /// Point-in-time copy. The observation count is *derived* from the
+    /// bucket counts, so `snapshot.count() == sum(snapshot.buckets)` holds
+    /// by construction even when readers race writers.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: f64::from_bits(self.sum.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Plain-data copy of one histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts, aligned with [`bucket_bounds`] plus a final
+    /// overflow bucket.
+    pub buckets: Vec<u64>,
+    /// Sum of all observed values (ms).
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// Total observations — always the sum of the bucket counts.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Quantile estimate: the upper bound of the bucket containing the
+    /// `q`-th observation (log-bucket resolution; the overflow bucket
+    /// reports the largest finite bound). Returns 0 for an empty
+    /// histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let bounds = bucket_bounds();
+        let mut cum = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bounds[i.min(bounds.len() - 1)];
+            }
+        }
+        bounds[bounds.len() - 1]
+    }
+
+    /// Bucket-wise commutative merge (`a.merge(b) == b.merge(a)`).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (mine, theirs) in self.buckets.iter_mut().zip(&other.buckets) {
+            *mine += theirs;
+        }
+        self.sum += other.sum;
+    }
+}
+
+/// A point-in-time copy of a whole registry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge values by name.
+    pub gauges: BTreeMap<String, f64>,
+    /// Histogram snapshots by name.
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl Snapshot {
+    /// Commutative merge: counters and histogram buckets add; a gauge
+    /// present on both sides keeps the maximum (the only commutative
+    /// choice — in practice merged registries use disjoint gauge names).
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            let e = self.gauges.entry(k.clone()).or_insert(f64::NEG_INFINITY);
+            *e = e.max(*v);
+        }
+        for (k, h) in &other.histograms {
+            match self.histograms.get_mut(k) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.histograms.insert(k.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// Render in Prometheus text-exposition format: counters and gauges
+    /// as single samples, histograms as cumulative `_bucket{le=...}`
+    /// series plus `_sum`/`_count` and p50/p90/p99 summary gauges.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_type_line = String::new();
+        let mut type_line = |out: &mut String, name: &str, kind: &str| {
+            let base = name.split('{').next().unwrap_or(name);
+            let line = format!("# TYPE {base} {kind}\n");
+            if line != last_type_line {
+                out.push_str(&line);
+                last_type_line = line;
+            }
+        };
+        for (name, v) in &self.counters {
+            type_line(&mut out, name, "counter");
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            type_line(&mut out, name, "gauge");
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        let bounds = bucket_bounds();
+        for (name, h) in &self.histograms {
+            type_line(&mut out, name, "histogram");
+            let mut cum = 0u64;
+            for (i, c) in h.buckets.iter().enumerate() {
+                cum += c;
+                if i < bounds.len() {
+                    out.push_str(&format!("{name}_bucket{{le=\"{}\"}} {cum}\n", bounds[i]));
+                } else {
+                    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                }
+            }
+            out.push_str(&format!("{name}_sum {}\n", h.sum));
+            out.push_str(&format!("{name}_count {}\n", h.count()));
+            for (suffix, q) in [("p50", 0.5), ("p90", 0.9), ("p99", 0.99)] {
+                out.push_str(&format!("# TYPE {name}_{suffix} gauge\n"));
+                out.push_str(&format!("{name}_{suffix} {}\n", h.quantile(q)));
+            }
+            last_type_line.clear();
+        }
+        out
+    }
+}
+
+/// A named collection of metrics. Instantiable (`KernelService` owns one
+/// per daemon so `stats` counts stay exact under parallel in-process
+/// daemons); a process-wide default lives behind [`global`].
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// Fresh, empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create the named counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get or create the named histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.histograms.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Current value of a counter (0 if it was never touched).
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.value())
+            .unwrap_or(0)
+    }
+
+    /// Record one latency observation into the named histogram.
+    pub fn observe_ms(&self, name: &str, ms: f64) {
+        self.histogram(name).observe(ms);
+    }
+
+    /// Point-in-time copy of every metric.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.value()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.value()))
+                .collect(),
+            histograms: self
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// The process-wide default registry. Components without a service
+/// handle (the evolution engine, the eval pipeline, `dist::pool`, the
+/// journal) report here; `KernelService::metrics_text` merges this into
+/// its per-daemon snapshot.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Attach a Prometheus label: `labeled("kf_lane_units_done_total",
+/// "device", "b580")` → `kf_lane_units_done_total{device="b580"}`.
+pub fn labeled(name: &str, label: &str, value: &str) -> String {
+    format!("{name}{{{label}=\"{value}\"}}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        r.counter("c").add(3);
+        r.counter("c").inc();
+        r.gauge("g").set(2.5);
+        assert_eq!(r.counter_value("c"), 4);
+        let snap = r.snapshot();
+        assert_eq!(snap.counters["c"], 4);
+        assert_eq!(snap.gauges["g"], 2.5);
+    }
+
+    #[test]
+    fn histogram_buckets_sum_to_count() {
+        let h = Histogram::default();
+        for v in [0.0, 0.0005, 0.13, 7.2, 1e9] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 5);
+        // 1e9 ms lands in the overflow bucket.
+        assert_eq!(s.buckets[HIST_BUCKETS], 1);
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_bounded() {
+        let h = Histogram::default();
+        for i in 0..100 {
+            h.observe(i as f64);
+        }
+        let s = h.snapshot();
+        let (p50, p90, p99) = (s.quantile(0.5), s.quantile(0.9), s.quantile(0.99));
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        assert!(p50 >= 32.0 && p50 <= 64.0, "p50 {p50}");
+        assert_eq!(s.quantile(0.0), s.quantile(1e-9));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::new();
+        r.counter("kf_cache_hits_total").inc();
+        r.gauge("kf_queue_depth").set(3.0);
+        r.observe_ms("kf_stage_run_ms", 1.5);
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE kf_cache_hits_total counter"));
+        assert!(text.contains("kf_cache_hits_total 1"));
+        assert!(text.contains("# TYPE kf_queue_depth gauge"));
+        assert!(text.contains("# TYPE kf_stage_run_ms histogram"));
+        assert!(text.contains("kf_stage_run_ms_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("kf_stage_run_ms_count 1"));
+        assert!(text.contains("kf_stage_run_ms_p50"));
+        assert!(text.contains("kf_stage_run_ms_p99"));
+    }
+
+    #[test]
+    fn labeled_metrics_share_one_type_line() {
+        let r = Registry::new();
+        r.counter(&labeled("kf_lane_units_done_total", "device", "b580")).inc();
+        r.counter(&labeled("kf_lane_units_done_total", "device", "lnl")).inc();
+        let text = r.snapshot().to_prometheus();
+        assert_eq!(text.matches("# TYPE kf_lane_units_done_total counter").count(), 1);
+        assert!(text.contains("kf_lane_units_done_total{device=\"b580\"} 1"));
+    }
+
+    #[test]
+    fn snapshot_merge_is_commutative() {
+        let a = Registry::new();
+        a.counter("c").add(2);
+        a.observe_ms("h", 0.5);
+        a.gauge("g").set(1.0);
+        let b = Registry::new();
+        b.counter("c").add(5);
+        b.counter("only_b").inc();
+        b.observe_ms("h", 40.0);
+        b.gauge("g").set(7.0);
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        let mut ab = sa.clone();
+        ab.merge(&sb);
+        let mut ba = sb.clone();
+        ba.merge(&sa);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.counters["c"], 7);
+        assert_eq!(ab.histograms["h"].count(), 2);
+        assert_eq!(ab.gauges["g"], 7.0);
+    }
+}

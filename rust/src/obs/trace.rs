@@ -1,0 +1,263 @@
+//! Job-lifecycle span tracing: an append-only JSONL trace sink.
+//!
+//! Every job carries a trace id; each lifecycle transition appends one
+//! timestamped stage event to the sink (whole-line writes under a mutex,
+//! exactly like `service::journal`, so the file lives safely next to the
+//! journal). `kernelfoundry trace <job-id>` reads the file back —
+//! tolerantly, dropping a torn final line — and reconstructs the job's
+//! timeline with per-stage durations.
+
+use crate::dist::load_jsonl_tolerant;
+use crate::obs::registry::{global, labeled};
+use crate::util::json::Json;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// The canonical lifecycle stage names, in timeline order.
+pub mod stage {
+    /// Job accepted by the RPC layer.
+    pub const SUBMIT: &str = "submit";
+    /// Job entered the bounded job queue (cache miss path).
+    pub const QUEUED: &str = "queued";
+    /// A fleet lane popped the unit for its device.
+    pub const DISPATCHED: &str = "dispatched";
+    /// Candidate generation + compilation finished; evaluation begins.
+    pub const COMPILED: &str = "compiled";
+    /// Evaluation finished (the unit has a verdict).
+    pub const EXECUTED: &str = "executed";
+    /// The verdict was durably committed (journal marker + cache row).
+    pub const COMMITTED: &str = "committed";
+    /// The finished result was handed to a client.
+    pub const RESPONDED: &str = "responded";
+    /// Terminal failure of a unit.
+    pub const FAILED: &str = "failed";
+    /// Unit(s) cancelled while queued.
+    pub const CANCELLED: &str = "cancelled";
+
+    /// Every stage above, in timeline order.
+    pub const ALL: &[&str] = &[
+        SUBMIT, QUEUED, DISPATCHED, COMPILED, EXECUTED, COMMITTED, RESPONDED, FAILED, CANCELLED,
+    ];
+}
+
+/// Wall-clock Unix milliseconds (same convention as `service::journal`).
+pub fn now_ms() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64() * 1e3)
+        .unwrap_or(0.0)
+}
+
+/// One timestamped lifecycle event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Stage name (one of [`stage::ALL`]).
+    pub stage: String,
+    /// The job this event belongs to.
+    pub job_id: u64,
+    /// The job's trace id (stable across all of the job's events).
+    pub trace_id: String,
+    /// Device lane, when the stage is device-scoped.
+    pub device: Option<String>,
+    /// Wall-clock Unix milliseconds (monotone non-decreasing per sink).
+    pub ts_ms: f64,
+}
+
+impl TraceEvent {
+    /// Serialize to the on-disk JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("t", self.stage.as_str())
+            .set("job", self.job_id as usize)
+            .set("trace", self.trace_id.as_str())
+            .set("ts_ms", self.ts_ms);
+        if let Some(d) = &self.device {
+            o.set("device", d.as_str());
+        }
+        o
+    }
+
+    /// Parse one on-disk JSON object; `None` on schema mismatch.
+    pub fn from_json(v: &Json) -> Option<TraceEvent> {
+        Some(TraceEvent {
+            stage: v.get("t")?.as_str()?.to_string(),
+            job_id: v.get("job")?.as_i64()? as u64,
+            trace_id: v.get("trace")?.as_str()?.to_string(),
+            device: v.get("device").and_then(|d| d.as_str()).map(str::to_string),
+            ts_ms: v.get("ts_ms")?.as_f64()?,
+        })
+    }
+}
+
+struct SinkFile {
+    file: File,
+    /// Clamp for monotone non-decreasing timestamps within one sink.
+    last_ts: f64,
+}
+
+/// Append-only JSONL trace sink.
+///
+/// Writes are whole lines under a mutex (create + append), so concurrent
+/// lanes never interleave bytes and a crash can tear at most the final
+/// line — which [`TraceSink::load`] drops, like every JSONL store in this
+/// repo. Emission is best-effort: an I/O error is logged, never
+/// propagated into the job path.
+pub struct TraceSink {
+    path: PathBuf,
+    sink: Mutex<SinkFile>,
+    ids: Mutex<std::collections::BTreeMap<u64, String>>,
+}
+
+impl TraceSink {
+    /// Open (creating if needed) the sink at `path` for appending.
+    pub fn open(path: &Path) -> std::io::Result<TraceSink> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(TraceSink {
+            path: path.to_path_buf(),
+            sink: Mutex::new(SinkFile { file, last_ts: 0.0 }),
+            ids: Mutex::new(std::collections::BTreeMap::new()),
+        })
+    }
+
+    /// The sink's file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Mint and remember a trace id for a freshly submitted job.
+    pub fn register(&self, job_id: u64) -> String {
+        let id = format!("{job_id:08x}-{:x}", now_ms() as u64);
+        self.ids.lock().unwrap().insert(job_id, id.clone());
+        id
+    }
+
+    /// The job's trace id — a deterministic fallback for jobs submitted
+    /// before this process (journal replay) covers unregistered ids.
+    pub fn trace_id(&self, job_id: u64) -> String {
+        self.ids
+            .lock()
+            .unwrap()
+            .get(&job_id)
+            .cloned()
+            .unwrap_or_else(|| format!("{job_id:08x}-replayed"))
+    }
+
+    /// Append one stage event for `job_id` (timestamped now).
+    pub fn stage(&self, stage: &str, job_id: u64, device: Option<&str>) {
+        let trace_id = self.trace_id(job_id);
+        let mut guard = self.sink.lock().unwrap();
+        let ts_ms = now_ms().max(guard.last_ts);
+        guard.last_ts = ts_ms;
+        let ev = TraceEvent {
+            stage: stage.to_string(),
+            job_id,
+            trace_id,
+            device: device.map(str::to_string),
+            ts_ms,
+        };
+        let mut line = ev.to_json().to_string_compact();
+        line.push('\n');
+        if let Err(e) = guard.file.write_all(line.as_bytes()) {
+            crate::log_warn!("trace sink {}: {e}", self.path.display());
+        }
+        drop(guard);
+        global().counter("kf_trace_events_total").inc();
+        global().counter(&labeled("kf_trace_stage_total", "stage", stage)).inc();
+    }
+
+    /// Load every event from a sink file. A missing file is an empty
+    /// timeline; a torn final line is dropped.
+    pub fn load(path: &Path) -> Vec<TraceEvent> {
+        if !path.exists() {
+            return Vec::new();
+        }
+        match load_jsonl_tolerant(path, TraceEvent::from_json) {
+            Ok((events, _)) => events,
+            Err(e) => {
+                crate::log_warn!("trace sink {}: {e}", path.display());
+                Vec::new()
+            }
+        }
+    }
+
+    /// One job's events in timestamp order (stable on ties, so equal
+    /// timestamps keep append order).
+    pub fn timeline(path: &Path, job_id: u64) -> Vec<TraceEvent> {
+        let mut events: Vec<TraceEvent> = Self::load(path)
+            .into_iter()
+            .filter(|e| e.job_id == job_id)
+            .collect();
+        events.sort_by(|a, b| a.ts_ms.partial_cmp(&b.ts_ms).unwrap_or(std::cmp::Ordering::Equal));
+        events
+    }
+}
+
+/// A global fallback used by components that are handed no sink: events
+/// are counted in the registry but not persisted.
+static NULL_SINK_WARNED: OnceLock<()> = OnceLock::new();
+
+/// Record a stage transition when no sink is configured: registry
+/// counters still advance so `metrics` stays truthful, and the first
+/// call logs a hint that `--trace` would persist timelines.
+pub fn stage_unsunk(stage: &str, _job_id: u64) {
+    NULL_SINK_WARNED.get_or_init(|| {
+        crate::log_debug!("no trace sink configured; pass --trace to persist job timelines");
+    });
+    global().counter("kf_trace_events_total").inc();
+    global().counter(&labeled("kf_trace_stage_total", "stage", stage)).inc();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("kf_obs_trace_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn events_roundtrip_and_order() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let sink = TraceSink::open(&path).unwrap();
+        let id = sink.register(7);
+        sink.stage(stage::SUBMIT, 7, None);
+        sink.stage(stage::QUEUED, 7, None);
+        sink.stage(stage::DISPATCHED, 7, Some("b580"));
+        sink.stage(stage::COMMITTED, 7, Some("b580"));
+        sink.stage(stage::SUBMIT, 8, None); // another job interleaved
+        let tl = TraceSink::timeline(&path, 7);
+        assert_eq!(tl.len(), 4);
+        assert!(tl.iter().all(|e| e.trace_id == id));
+        assert_eq!(tl[0].stage, stage::SUBMIT);
+        assert_eq!(tl[3].stage, stage::COMMITTED);
+        assert!(tl.windows(2).all(|w| w[0].ts_ms <= w[1].ts_ms));
+        assert_eq!(tl[2].device.as_deref(), Some("b580"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_and_torn_files_load_safely() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        assert!(TraceSink::load(&path).is_empty());
+        {
+            let sink = TraceSink::open(&path).unwrap();
+            sink.register(1);
+            sink.stage(stage::SUBMIT, 1, None);
+        }
+        // Tear the tail mid-record, as a crash would.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"t\":\"queued\",\"job\":1,\"tr");
+        std::fs::write(&path, text).unwrap();
+        let events = TraceSink::load(&path);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].stage, stage::SUBMIT);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -89,6 +89,7 @@ fn trigger_shutdown(state: &ServerState) {
 }
 
 fn handle_connection(stream: TcpStream, service: Arc<KernelService>, state: Arc<ServerState>) {
+    crate::obs::global().counter("kf_rpc_connections_total").inc();
     let Ok(read_half) = stream.try_clone() else { return };
     let mut writer = stream;
     let reader = BufReader::new(read_half);
@@ -99,9 +100,15 @@ fn handle_connection(stream: TcpStream, service: Arc<KernelService>, state: Arc<
         }
         let mut stop = false;
         let response = match json::parse(&line) {
-            Err(e) => proto::error_response(&format!("bad request json: {e}")),
+            Err(e) => {
+                crate::obs::global().counter("kf_rpc_bad_requests_total").inc();
+                proto::error_response(&format!("bad request json: {e}"))
+            }
             Ok(v) => match Request::from_json(&v) {
-                Err(e) => proto::error_response(&e),
+                Err(e) => {
+                    crate::obs::global().counter("kf_rpc_bad_requests_total").inc();
+                    proto::error_response(&e)
+                }
                 Ok(req) => {
                     stop = matches!(req, Request::Shutdown);
                     service.handle(&req)
@@ -173,7 +180,7 @@ mod tests {
             compile_workers: 1,
             exec_workers: 2,
             queue_capacity: 8,
-            db_path: None,
+            ..ServiceConfig::default()
         })
         .unwrap();
         let server = Server::start(Arc::clone(&service), "127.0.0.1:0").unwrap();

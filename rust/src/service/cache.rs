@@ -16,12 +16,13 @@
 use super::job::{DeviceResult, JobSpec, TaskSource};
 use crate::coordinator::engine::hash_str_pub;
 use crate::dist::{Database, DbRow};
+use crate::obs::Registry;
 use crate::util::error::Error;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// `method` column of persisted cache rows (distinguishes them from
 /// `serve`-subcommand rows sharing a database file).
@@ -60,6 +61,10 @@ pub struct ResultCache {
     /// Lookups that found nothing.
     pub misses: AtomicU64,
     db: Option<(Database, PathBuf)>,
+    /// Owning service's metrics registry (set once via
+    /// [`ResultCache::attach_obs`]); hits/misses mirror into
+    /// `kf_cache_hits_total` / `kf_cache_misses_total` when present.
+    obs: OnceLock<Arc<Registry>>,
 }
 
 impl ResultCache {
@@ -70,6 +75,31 @@ impl ResultCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             db: None,
+            obs: OnceLock::new(),
+        }
+    }
+
+    /// Attach the owning service's metrics registry (idempotent; the
+    /// first registry wins). From then on every hit/miss also advances
+    /// the registry counters the `metrics` verb exposes.
+    pub fn attach_obs(&self, obs: &Arc<Registry>) {
+        if self.obs.set(Arc::clone(obs)).is_ok() {
+            // Materialize both series immediately so the exposition
+            // always carries them, even before the first lookup.
+            obs.counter("kf_cache_hits_total");
+            obs.counter("kf_cache_misses_total");
+        }
+    }
+
+    fn count(&self, hit: bool) {
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(obs) = self.obs.get() {
+            let name = if hit { "kf_cache_hits_total" } else { "kf_cache_misses_total" };
+            obs.counter(name).inc();
         }
     }
 
@@ -118,6 +148,7 @@ impl ResultCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             db: Some((db, path.to_path_buf())),
+            obs: OnceLock::new(),
         })
     }
 
@@ -137,13 +168,13 @@ impl ResultCache {
         let entries = self.entries.lock().unwrap();
         match entries.get(key) {
             Some(r) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.count(true);
                 let mut r = r.clone();
                 r.cached = true;
                 Some(r)
             }
             None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.count(false);
                 None
             }
         }
@@ -333,6 +364,19 @@ mod tests {
         let stats = cache.stats_json();
         assert_eq!(stats.get("entries").unwrap().as_usize(), Some(1));
         assert_eq!(stats.get("hit_rate").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn attached_registry_mirrors_hit_and_miss_counters() {
+        let cache = ResultCache::in_memory();
+        let obs = Arc::new(Registry::new());
+        cache.attach_obs(&obs);
+        cache.attach_obs(&Arc::new(Registry::new())); // idempotent: first wins
+        assert!(cache.lookup("k").is_none());
+        cache.insert("k", result("b580", 2.0));
+        cache.lookup("k").unwrap();
+        assert_eq!(obs.counter_value("kf_cache_hits_total"), 1);
+        assert_eq!(obs.counter_value("kf_cache_misses_total"), 1);
     }
 
     #[test]

@@ -25,6 +25,8 @@ use crate::coordinator::EvolutionEngine;
 use crate::dist::{ClusterConfig, WorkerPool};
 use crate::eval::ExecBackend;
 use crate::hwsim::DeviceProfile;
+use crate::obs::trace::stage;
+use crate::obs::{labeled, Registry, TraceSink};
 use crate::tasks::{catalog, custom};
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -71,6 +73,8 @@ impl Fleet {
         jobs: &Arc<JobTable>,
         cache: &Arc<ResultCache>,
         journal: Option<&Arc<Journal>>,
+        obs: &Arc<Registry>,
+        trace: Option<&Arc<TraceSink>>,
     ) -> Fleet {
         let mut lanes = Vec::new();
         let mut handles = Vec::new();
@@ -85,6 +89,8 @@ impl Fleet {
             let jobs = Arc::clone(jobs);
             let cache = Arc::clone(cache);
             let journal = journal.map(Arc::clone);
+            let obs = Arc::clone(obs);
+            let trace = trace.map(Arc::clone);
             let compile_workers = cfg.compile_workers;
             let exec_workers = cfg.exec_workers;
             let queue_capacity = cfg.queue_capacity;
@@ -98,6 +104,8 @@ impl Fleet {
                     jobs,
                     cache,
                     journal,
+                    obs,
+                    trace,
                     stats,
                 )
             }));
@@ -178,6 +186,8 @@ fn lane_main(
     jobs: Arc<JobTable>,
     cache: Arc<ResultCache>,
     journal: Option<Arc<Journal>>,
+    obs: Arc<Registry>,
+    trace: Option<Arc<TraceSink>>,
     stats: Arc<LaneStats>,
 ) {
     while let Some(unit) = queue.pop_for(device.name) {
@@ -190,6 +200,16 @@ fn lane_main(
                 crate::log_warn!("journal dispatch failed: {e}");
             }
             failpoint::hit("dispatch.after_journal");
+        }
+        if let Some(t) = &trace {
+            t.stage(stage::DISPATCHED, unit.job_id, Some(device.name));
+        }
+        // Queue-wait latency: submit → this lane picking the unit up.
+        if let Some(job) = jobs.get(unit.job_id) {
+            obs.observe_ms(
+                "kf_stage_queued_ms",
+                job.submitted_at.elapsed().as_secs_f64() * 1000.0,
+            );
         }
         jobs.set_unit_state(unit.job_id, device.name, JobState::Generating);
         let t0 = Instant::now();
@@ -204,6 +224,8 @@ fn lane_main(
                 exec_workers,
                 queue_capacity,
                 &jobs,
+                &obs,
+                trace.as_ref(),
                 &stats,
             )
         }))
@@ -211,8 +233,12 @@ fn lane_main(
         stats
             .busy_us
             .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        obs.observe_ms("kf_stage_run_ms", t0.elapsed().as_secs_f64() * 1000.0);
         match outcome {
             Ok(result) => {
+                if let Some(t) = &trace {
+                    t.stage(stage::EXECUTED, unit.job_id, Some(device.name));
+                }
                 // Slot-commit protocol: the journal Commit marker is
                 // written *before* the cache row. A crash between the
                 // two is repaired idempotently at replay (the marker's
@@ -233,10 +259,22 @@ fn lane_main(
                 }
                 cache.insert(&cache_key(&unit.spec, device.name), result.clone());
                 failpoint::hit("commit.after_row");
+                if let Some(t) = &trace {
+                    t.stage(stage::COMMITTED, unit.job_id, Some(device.name));
+                }
+                obs.counter("kf_units_committed_total").inc();
+                obs.counter(&labeled("kf_lane_units_done_total", "device", device.name))
+                    .inc();
                 stats.units_done.fetch_add(1, Ordering::Relaxed);
                 jobs.complete_unit(unit.job_id, device.name, result);
             }
             Err(msg) => {
+                if let Some(t) = &trace {
+                    t.stage(stage::FAILED, unit.job_id, Some(device.name));
+                }
+                obs.counter("kf_units_failed_total").inc();
+                obs.counter(&labeled("kf_lane_units_failed_total", "device", device.name))
+                    .inc();
                 if let Some(jnl) = &journal {
                     let rec = JournalRecord::Fail {
                         job_id: unit.job_id,
@@ -256,6 +294,7 @@ fn lane_main(
 
 /// Execute one unit: resolve the task, build engine + pool for this
 /// lane's device, run the evolution loop, summarize.
+#[allow(clippy::too_many_arguments)]
 fn run_unit(
     unit: &QueuedUnit,
     device: &DeviceProfile,
@@ -263,6 +302,8 @@ fn run_unit(
     exec_workers: usize,
     queue_capacity: usize,
     jobs: &JobTable,
+    obs: &Arc<Registry>,
+    trace: Option<&Arc<TraceSink>>,
     stats: &LaneStats,
 ) -> Result<DeviceResult, String> {
     let task = match &unit.spec.task {
@@ -291,10 +332,16 @@ fn run_unit(
         seed: engine.pipeline.seed(),
     });
 
+    // Engine + Fig. 4 cluster are built: generation is set up and the
+    // compile workers are live — the unit's `compiled` trace point.
+    if let Some(t) = trace {
+        t.stage(stage::COMPILED, unit.job_id, Some(device.name));
+    }
     jobs.set_unit_state(unit.job_id, device.name, JobState::Evaluating);
     let t0 = Instant::now();
     let report = engine.run_distributed(&pool);
     let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    obs.observe_ms("kf_unit_evolution_ms", wall_ms);
 
     stats
         .executed
@@ -334,7 +381,8 @@ mod tests {
     #[test]
     fn lane_runs_a_unit_to_completion() {
         let (cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
-        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None);
+        let obs = Arc::new(Registry::new());
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None, &obs, None);
         assert!(fleet.has_device("b580"));
         assert!(!fleet.has_device("lnl"));
 
@@ -376,6 +424,12 @@ mod tests {
         assert_eq!(cache.len(), 1, "completed unit populated the cache");
         assert_eq!(fleet.lanes[0].stats.units_done.load(Ordering::Relaxed), 1);
         assert!(fleet.lanes[0].stats.busy_us.load(Ordering::Relaxed) > 0);
+        assert_eq!(obs.counter_value("kf_units_committed_total"), 1);
+        assert_eq!(
+            obs.counter_value(&labeled("kf_lane_units_done_total", "device", "b580")),
+            1
+        );
+        assert_eq!(obs.histogram("kf_stage_run_ms").snapshot().count(), 1);
 
         queue.shutdown();
         fleet.join();
@@ -386,7 +440,8 @@ mod tests {
     #[test]
     fn lane_survives_a_failing_unit() {
         let (cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
-        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None);
+        let obs = Arc::new(Registry::new());
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None, &obs, None);
         let spec = JobSpec::catalog("no_such_task", "b580");
         jobs.insert(Job {
             id: 1,

@@ -490,6 +490,7 @@ impl Journal {
         file.write_all(line.as_bytes())
             .with_context(|| format!("appending to journal {}", self.path.display()))?;
         self.written.fetch_add(1, Ordering::Relaxed);
+        crate::obs::global().counter("kf_journal_records_total").inc();
         Ok(())
     }
 

@@ -48,6 +48,8 @@ pub use queue::{JobQueue, QueuedUnit, QueueError};
 
 use crate::dist::ClusterConfig;
 use crate::hwsim::DeviceProfile;
+use crate::obs::trace::stage;
+use crate::obs::{Registry, TraceSink};
 use crate::tasks::{catalog, custom};
 use crate::util::json::Json;
 use journal::ReplayUnitState;
@@ -85,6 +87,12 @@ pub struct ServiceConfig {
     /// once the last heartbeat is older than this (or after a clean
     /// release). Ignored without `journal_path`.
     pub lease_ttl: Duration,
+    /// JSONL path of the job-lifecycle trace sink (`None` = tracing
+    /// off). Each lifecycle transition of every job appends one
+    /// timestamped stage event; `kernelfoundry trace <job-id>` rebuilds
+    /// a job's timeline from this file. Lives naturally next to the
+    /// journal (same append-only whole-line discipline).
+    pub trace_path: Option<PathBuf>,
 }
 
 /// Default journal owner-lease TTL (seconds).
@@ -101,6 +109,7 @@ impl Default for ServiceConfig {
             db_path: None,
             journal_path: None,
             lease_ttl: Duration::from_secs(DEFAULT_LEASE_TTL_SECS),
+            trace_path: None,
         }
     }
 }
@@ -187,6 +196,11 @@ pub struct KernelService {
     cache: Arc<ResultCache>,
     fleet: Fleet,
     journal: Option<Arc<Journal>>,
+    /// Per-daemon metrics registry (merged with [`crate::obs::global`]
+    /// for the `metrics` verb, so two in-process daemons never bleed
+    /// into each other's exact `stats` counts).
+    obs: Arc<Registry>,
+    trace: Option<Arc<TraceSink>>,
     replay_stats: ReplayStats,
     heartbeat_stop: Arc<AtomicBool>,
     heartbeat: Mutex<Option<thread::JoinHandle<()>>>,
@@ -210,10 +224,19 @@ impl KernelService {
         if cfg.devices.is_empty() {
             return Err("service needs at least one fleet device".to_string());
         }
+        let obs = Arc::new(Registry::new());
+        let trace = match &cfg.trace_path {
+            None => None,
+            Some(path) => Some(Arc::new(
+                TraceSink::open(path)
+                    .map_err(|e| format!("trace sink {}: {e}", path.display()))?,
+            )),
+        };
         let cache = match &cfg.db_path {
             None => ResultCache::in_memory(),
             Some(path) => ResultCache::with_database(path).map_err(|e| e.to_string())?,
         };
+        cache.attach_obs(&obs);
 
         // Acquire the journal lease and fold its records into the state
         // every queued/in-flight job was in when the last owner stopped.
@@ -328,7 +351,8 @@ impl KernelService {
                 .push(to_queue)
                 .map_err(|e| format!("re-enqueueing replayed units: {e}"))?;
         }
-        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, journal.as_ref());
+        let fleet =
+            Fleet::spawn(&cfg, &queue, &jobs, &cache, journal.as_ref(), &obs, trace.as_ref());
 
         // Heartbeat: refresh the owner lease at ttl/3 so a standby
         // daemon can distinguish "owner is alive" from "owner is gone".
@@ -359,6 +383,8 @@ impl KernelService {
             cache,
             fleet,
             journal,
+            obs,
+            trace,
             replay_stats,
             heartbeat_stop,
             heartbeat: Mutex::new(heartbeat),
@@ -405,6 +431,11 @@ impl KernelService {
         };
 
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        self.obs.counter("kf_jobs_submitted_total").inc();
+        if let Some(t) = &self.trace {
+            t.register(id);
+            t.stage(stage::SUBMIT, id, None);
+        }
         let mut units = Vec::new();
         let mut to_queue = Vec::new();
         for device in &devices {
@@ -477,7 +508,22 @@ impl KernelService {
                         crate::log_warn!("journal cancel-on-reject failed: {je}");
                     }
                 }
+                self.obs.counter("kf_jobs_rejected_total").inc();
+                if let Some(t) = &self.trace {
+                    t.stage(stage::CANCELLED, id, None);
+                }
                 return Err(e.to_string());
+            }
+            if let Some(t) = &self.trace {
+                t.stage(stage::QUEUED, id, None);
+            }
+        } else {
+            // A fully cached job never visits a lane; its timeline
+            // still records a terminal `committed` (the results are
+            // durable) so no finished job lacks one.
+            self.obs.counter("kf_jobs_cached_total").inc();
+            if let Some(t) = &self.trace {
+                t.stage(stage::COMMITTED, id, None);
             }
         }
         Ok(SubmitReceipt {
@@ -505,6 +551,10 @@ impl KernelService {
             return Err(format!("job {id} is already running"));
         }
         self.jobs.cancel_units(id, &removed);
+        self.obs.counter("kf_jobs_cancelled_total").inc();
+        if let Some(t) = &self.trace {
+            t.stage(stage::CANCELLED, id, None);
+        }
         if let Some(jnl) = &self.journal {
             let rec = JournalRecord::Cancel {
                 job_id: id,
@@ -521,13 +571,48 @@ impl KernelService {
             .unwrap_or(JobState::Cancelled))
     }
 
+    /// Sample the instantaneous service state (queue depth, job counts,
+    /// cache entries, uptime) into the per-daemon registry. Both `stats`
+    /// and the `metrics` verb render from this one synchronized set of
+    /// values instead of each re-deriving its own.
+    fn sync_registry(&self) {
+        self.obs.gauge("kf_queue_depth").set(self.queue.len() as f64);
+        self.obs.gauge("kf_queue_capacity").set(self.queue.capacity() as f64);
+        self.obs
+            .gauge("kf_uptime_ms")
+            .set(self.started.elapsed().as_secs_f64() * 1000.0);
+        if let Some(counts) = self.jobs.counts().to_json().as_obj() {
+            for (k, v) in counts {
+                if let Some(x) = v.as_f64() {
+                    self.obs.gauge(&format!("kf_jobs_{k}")).set(x);
+                }
+            }
+        }
+        if let Some(entries) = self.cache.stats_json().get("entries").and_then(|v| v.as_f64()) {
+            self.obs.gauge("kf_cache_entries").set(entries);
+        }
+    }
+
+    /// The full metrics registry — per-daemon counters merged with the
+    /// process-wide [`crate::obs::global`] registry (search telemetry,
+    /// eval-stage timings, journal/pool counters) — rendered in
+    /// Prometheus text-exposition format. The `metrics` RPC verb and
+    /// `kernelfoundry metrics` return exactly this string.
+    pub fn metrics_text(&self) -> String {
+        self.sync_registry();
+        let mut snap = self.obs.snapshot();
+        snap.merge(&crate::obs::global().snapshot());
+        snap.to_prometheus()
+    }
+
     /// Service-wide counters: jobs, queue depth, cache metrics, per-
     /// device fleet utilization.
     pub fn stats(&self) -> Json {
+        self.sync_registry();
         let mut queue_o = Json::obj();
         queue_o
-            .set("depth", self.queue.len())
-            .set("capacity", self.queue.capacity());
+            .set("depth", self.obs.gauge("kf_queue_depth").value())
+            .set("capacity", self.obs.gauge("kf_queue_capacity").value());
         let mut journal_o = Json::obj();
         match &self.journal {
             None => {
@@ -559,6 +644,14 @@ impl KernelService {
     /// Dispatch one parsed RPC request to a wire response. `Shutdown`
     /// only acknowledges — the transport layer owns the actual stop.
     pub fn handle(&self, req: &Request) -> Json {
+        let t0 = Instant::now();
+        let resp = self.handle_inner(req);
+        self.obs
+            .observe_ms("kf_rpc_handle_ms", t0.elapsed().as_secs_f64() * 1000.0);
+        resp
+    }
+
+    fn handle_inner(&self, req: &Request) -> Json {
         match req {
             Request::Submit(spec) => match self.submit(spec.clone()) {
                 Ok(receipt) => {
@@ -579,6 +672,15 @@ impl KernelService {
                 Some(job) => {
                     let state = job.state();
                     if state.finished() {
+                        // The job's span ends when a client actually
+                        // receives the finished result.
+                        self.obs.observe_ms(
+                            "kf_job_submit_to_responded_ms",
+                            job.submitted_at.elapsed().as_secs_f64() * 1000.0,
+                        );
+                        if let Some(t) = &self.trace {
+                            t.stage(stage::RESPONDED, *id, None);
+                        }
                         job.to_json(true)
                     } else {
                         proto::error_response(&format!(
@@ -600,6 +702,11 @@ impl KernelService {
                 Err(e) => proto::error_response(&e),
             },
             Request::Stats => self.stats(),
+            Request::Metrics => {
+                let mut o = Json::obj();
+                o.set("ok", true).set("prometheus", self.metrics_text());
+                o
+            }
             Request::Shutdown => {
                 let mut o = Json::obj();
                 o.set("ok", true).set("state", "shutting_down");
@@ -768,6 +875,22 @@ mod tests {
         let job = svc.wait(receipt.job_id, Duration::from_secs(60)).unwrap();
         assert_eq!(job.state(), JobState::Done, "cancel must not corrupt the run");
         assert!(job.units[0].result.is_some());
+        svc.stop();
+    }
+
+    #[test]
+    fn metrics_text_is_prometheus_shaped() {
+        let svc = quick_service(vec![DeviceProfile::b580()]);
+        let receipt = svc.submit(tiny_spec("20_LeakyReLU", "b580")).unwrap();
+        svc.wait(receipt.job_id, Duration::from_secs(30));
+        let resp = svc.handle(&Request::Metrics);
+        assert!(proto::response_ok(&resp));
+        let text = resp.get("prometheus").unwrap().as_str().unwrap();
+        assert!(text.contains("# TYPE kf_queue_depth gauge"), "{text}");
+        assert!(text.contains("kf_queue_capacity"), "{text}");
+        assert!(text.contains("kf_jobs_submitted_total 1"), "{text}");
+        assert!(text.contains("kf_cache_misses_total"), "{text}");
+        assert!(text.contains("kf_rpc_handle_ms_bucket"), "{text}");
         svc.stop();
     }
 

@@ -11,6 +11,7 @@
 //! {"verb":"result","job_id":1}
 //! {"verb":"cancel","job_id":1}
 //! {"verb":"stats"}
+//! {"verb":"metrics"}
 //! {"verb":"shutdown"}
 //! ```
 //!
@@ -35,6 +36,9 @@ pub enum Request {
     /// Service-wide counters: jobs, queue, cache, per-device fleet
     /// utilization.
     Stats,
+    /// Full metrics registry in Prometheus text-exposition format
+    /// (returned as the `prometheus` string field of the response).
+    Metrics,
     /// Stop the daemon (drains queued work, then exits).
     Shutdown,
 }
@@ -58,9 +62,10 @@ impl Request {
             "result" => Ok(Request::Result(job_id()?)),
             "cancel" => Ok(Request::Cancel(job_id()?)),
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!(
-                "unknown verb '{other}' (submit | status | result | cancel | stats | shutdown)"
+                "unknown verb '{other}' (submit | status | result | cancel | stats | metrics | shutdown)"
             )),
         }
     }
@@ -85,6 +90,11 @@ impl Request {
             Request::Stats => {
                 let mut o = Json::obj();
                 o.set("verb", "stats");
+                o
+            }
+            Request::Metrics => {
+                let mut o = Json::obj();
+                o.set("verb", "metrics");
                 o
             }
             Request::Shutdown => {
@@ -121,6 +131,7 @@ mod tests {
             Request::Result(4),
             Request::Cancel(5),
             Request::Stats,
+            Request::Metrics,
             Request::Shutdown,
         ];
         for req in reqs {
@@ -135,6 +146,8 @@ mod tests {
         let cases = [
             (r#"{}"#, "verb"),
             (r#"{"verb":"warp"}"#, "unknown verb"),
+            // The unknown-verb error enumerates the full verb set.
+            (r#"{"verb":"warp"}"#, "metrics"),
             (r#"{"verb":"status"}"#, "job_id"),
             (r#"{"verb":"cancel","job_id":"three"}"#, "job_id"),
             (r#"{"verb":"submit"}"#, "task"),

@@ -1,26 +1,78 @@
-//! Leveled stderr logging with a global verbosity switch.
+//! Leveled stderr logging: global verbosity switch, `KF_LOG` env
+//! override, monotonic-ish elapsed timestamps and module targets.
+//!
+//! Each line looks like
+//!
+//! ```text
+//! [   0.412s WARN  kernelfoundry::service] queue full, rejecting job
+//! ```
+//!
+//! The timestamp is seconds since the first log call (monotonic clock, so
+//! it never jumps backwards). Verbosity resolves as: `KF_LOG` env var if
+//! set (`error | warn | info | debug`, or `0`–`3`), else the level last
+//! passed to [`set_level`] (the CLI's `--verbose`/`--quiet` flags), else
+//! `info`.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
+/// Log severity, ordered from most to least severe.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
+    /// Unrecoverable or data-affecting problems.
     Error = 0,
+    /// Degraded but continuing.
     Warn = 1,
+    /// Normal operational messages (default).
     Info = 2,
+    /// Per-step detail for debugging.
     Debug = 3,
+}
+
+impl Level {
+    /// Parse a `KF_LOG` value; `None` for unrecognized text.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" | "0" => Some(Level::Error),
+            "warn" | "warning" | "1" => Some(Level::Warn),
+            "info" | "2" => Some(Level::Info),
+            "debug" | "3" => Some(Level::Debug),
+            _ => None,
+        }
+    }
 }
 
 static VERBOSITY: AtomicU8 = AtomicU8::new(2); // Info
 
+fn env_level() -> Option<Level> {
+    static ENV: OnceLock<Option<Level>> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("KF_LOG").ok().as_deref().and_then(Level::parse))
+}
+
+fn start() -> Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Set the global verbosity (overridden by `KF_LOG` when that is set).
 pub fn set_level(level: Level) {
     VERBOSITY.store(level as u8, Ordering::Relaxed);
 }
 
+/// Would a message at `level` be emitted?
 pub fn enabled(level: Level) -> bool {
-    (level as u8) <= VERBOSITY.load(Ordering::Relaxed)
+    let threshold = match env_level() {
+        Some(env) => env as u8,
+        None => VERBOSITY.load(Ordering::Relaxed),
+    };
+    (level as u8) <= threshold
 }
 
-pub fn log(level: Level, msg: &str) {
+/// Emit one line to stderr: elapsed time, level tag, module target, text.
+/// Prefer the `log_info!`/`log_warn!`/`log_debug!` macros, which fill in
+/// `target` from `module_path!`.
+pub fn log(level: Level, target: &str, msg: &str) {
     if enabled(level) {
         let tag = match level {
             Level::Error => "ERROR",
@@ -28,23 +80,27 @@ pub fn log(level: Level, msg: &str) {
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
         };
-        eprintln!("[{tag}] {msg}");
+        let elapsed = start().elapsed().as_secs_f64();
+        eprintln!("[{elapsed:>8.3}s {tag} {target}] {msg}");
     }
 }
 
+/// Log at info level, tagged with the calling module's path.
 #[macro_export]
 macro_rules! log_info {
-    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, &format!($($arg)*)) };
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, module_path!(), &format!($($arg)*)) };
 }
 
+/// Log at warn level, tagged with the calling module's path.
 #[macro_export]
 macro_rules! log_warn {
-    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, &format!($($arg)*)) };
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), &format!($($arg)*)) };
 }
 
+/// Log at debug level, tagged with the calling module's path.
 #[macro_export]
 macro_rules! log_debug {
-    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, &format!($($arg)*)) };
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), &format!($($arg)*)) };
 }
 
 #[cfg(test)]
@@ -60,5 +116,13 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn parses_kf_log_values() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("1"), Some(Level::Warn));
+        assert_eq!(Level::parse("loud"), None);
     }
 }

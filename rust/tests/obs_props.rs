@@ -1,0 +1,95 @@
+//! Property tests for the observability subsystem (ISSUE 7 satellite):
+//! histogram bucket-count conservation and order-independent snapshot
+//! merging, over randomized observation streams.
+
+use kernelfoundry::obs::{bucket_bounds, Histogram, Registry, Snapshot, HIST_BUCKETS};
+use kernelfoundry::util::prop::{check, F64In, VecOf};
+
+/// Observation values spanning every bucket: negatives (clamped to 0),
+/// sub-microsecond, mid-range, and far past the largest finite bound.
+fn obs_gen() -> VecOf<F64In> {
+    VecOf(F64In(-5.0, 500_000.0), 64)
+}
+
+#[test]
+fn bucket_counts_always_sum_to_observation_count() {
+    check(0x0b5_1, &obs_gen(), |values| {
+        let h = Histogram::default();
+        for v in values {
+            h.observe(*v);
+        }
+        let s = h.snapshot();
+        s.count() == values.len() as u64 && s.buckets.iter().sum::<u64>() == values.len() as u64
+    });
+}
+
+#[test]
+fn bucket_counts_conserved_under_extreme_values() {
+    // Non-finite and extreme inputs still land in exactly one bucket.
+    let h = Histogram::default();
+    for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0, 0.0, 1e300] {
+        h.observe(v);
+    }
+    let s = h.snapshot();
+    assert_eq!(s.count(), 6);
+    assert_eq!(s.buckets.len(), HIST_BUCKETS + 1);
+    assert_eq!(s.buckets.iter().sum::<u64>(), 6);
+}
+
+#[test]
+fn merged_snapshots_are_order_independent() {
+    check(0x0b5_2, &obs_gen(), |values| {
+        // Split the stream across three registries, as three daemons (or
+        // the per-service + global registries) would record it.
+        let parts: Vec<Snapshot> = values
+            .chunks(values.len() / 3 + 1)
+            .map(|chunk| {
+                let r = Registry::new();
+                for (i, v) in chunk.iter().enumerate() {
+                    r.observe_ms("kf_stage_run_ms", *v);
+                    r.counter("kf_units_committed_total").add(1 + (i as u64 % 3));
+                    r.gauge("kf_queue_depth").set(*v);
+                }
+                r.snapshot()
+            })
+            .collect();
+
+        let merge_in = |order: &[usize]| {
+            let mut acc = Snapshot::default();
+            for &i in order {
+                if i < parts.len() {
+                    acc.merge(&parts[i]);
+                }
+            }
+            acc
+        };
+        let fwd = merge_in(&[0, 1, 2]);
+        let rev = merge_in(&[2, 1, 0]);
+        let rot = merge_in(&[1, 2, 0]);
+        if fwd != rev || fwd != rot {
+            return false;
+        }
+        // The merge conserves observations and renders identically.
+        let total: u64 = fwd
+            .histograms
+            .get("kf_stage_run_ms")
+            .map(|h| h.count())
+            .unwrap_or(0);
+        total == values.len() as u64 && fwd.to_prometheus() == rev.to_prometheus()
+    });
+}
+
+#[test]
+fn quantiles_track_the_bucket_bounds() {
+    check(0x0b5_3, &F64In(0.0, 100_000.0), |v| {
+        let h = Histogram::default();
+        h.observe(*v);
+        let s = h.snapshot();
+        let q = s.quantile(0.5);
+        // The quantile is a bucket upper bound at or above the clamped
+        // observation (or the largest finite bound for overflow values).
+        let bounds = bucket_bounds();
+        let last = bounds[bounds.len() - 1];
+        bounds.contains(&q) && (q >= v.min(last) || (q - last).abs() < 1e-12)
+    });
+}

@@ -3,11 +3,13 @@
 //! `kernelfoundry submit` client drives it.
 
 use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::obs::{stage, TraceSink};
 use kernelfoundry::service::{
     proto, Client, DeviceTarget, JobSpec, KernelService, Request, Server, ServiceConfig,
     TaskSource,
 };
 use kernelfoundry::util::json::Json;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -315,6 +317,152 @@ fn journal_restart_round_trip() {
     service.stop();
     let _ = std::fs::remove_file(&journal);
     let _ = std::fs::remove_file(&db);
+}
+
+/// Trace-sink location for an e2e test: `KF_E2E_TRACE_DIR` when set (CI
+/// points this at a directory it inspects after the suite), else the
+/// system temp dir. Files under the env dir are kept for CI's
+/// committed-event check; temp-dir files are cleaned up by the test.
+fn trace_sink_for(name: &str) -> (PathBuf, bool) {
+    match std::env::var("KF_E2E_TRACE_DIR") {
+        Ok(dir) => {
+            let dir = PathBuf::from(dir);
+            let _ = std::fs::create_dir_all(&dir);
+            (dir.join(format!("kf_e2e_{name}.trace.jsonl")), true)
+        }
+        Err(_) => (
+            std::env::temp_dir().join(format!("kf_e2e_{name}_{}.trace.jsonl", std::process::id())),
+            false,
+        ),
+    }
+}
+
+fn start_traced_daemon(name: &str) -> (Arc<KernelService>, Server, PathBuf, bool) {
+    let (path, keep) = trace_sink_for(name);
+    let _ = std::fs::remove_file(&path);
+    let service = KernelService::start(ServiceConfig {
+        devices: vec![DeviceProfile::b580()],
+        compile_workers: 1,
+        exec_workers: 2,
+        queue_capacity: 16,
+        trace_path: Some(path.clone()),
+        ..ServiceConfig::default()
+    })
+    .expect("service starts");
+    let server = Server::start(Arc::clone(&service), "127.0.0.1:0").expect("server binds");
+    (service, server, path, keep)
+}
+
+/// One Prometheus sample's value (exact-name match; labeled series and
+/// `_bucket`/`_count` suffixes never collide because of the space).
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| {
+            l.strip_prefix(name)
+                .and_then(|rest| rest.strip_prefix(' '))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or_else(|| panic!("metric {name} missing from exposition:\n{text}"))
+}
+
+/// Acceptance criterion: after a submit/result round trip, the `metrics`
+/// RPC verb returns Prometheus text exposition with queue gauges, cache
+/// counters and nonzero per-stage lifecycle histograms with p50/p99
+/// summaries.
+#[test]
+fn metrics_verb_reports_lifecycle_histograms() {
+    let (service, mut server, trace, keep) = start_traced_daemon("metrics");
+    let mut client = connect(&server);
+
+    let id = submit(&mut client, tiny_spec("20_LeakyReLU", "b580"));
+    assert_eq!(poll_to_completion(&mut client, id), "done");
+    fetch_result(&mut client, id);
+
+    let resp = client.request(&Request::Metrics).expect("metrics rpc");
+    assert!(proto::response_ok(&resp), "{resp}");
+    let text = resp.get("prometheus").unwrap().as_str().unwrap().to_string();
+
+    // Queue gauges and cache counters.
+    assert!(text.contains("# TYPE kf_queue_depth gauge"), "{text}");
+    assert_eq!(metric_value(&text, "kf_queue_capacity"), 16.0);
+    assert_eq!(metric_value(&text, "kf_jobs_submitted_total"), 1.0);
+    assert_eq!(metric_value(&text, "kf_cache_misses_total"), 1.0);
+    assert_eq!(metric_value(&text, "kf_cache_hits_total"), 0.0);
+
+    // Nonzero lifecycle histograms with quantile summaries.
+    for h in ["kf_stage_queued_ms", "kf_stage_run_ms", "kf_job_submit_to_responded_ms"] {
+        assert!(text.contains(&format!("# TYPE {h} histogram")), "{h} missing:\n{text}");
+        assert!(metric_value(&text, &format!("{h}_count")) >= 1.0, "{h} empty:\n{text}");
+        assert!(metric_value(&text, &format!("{h}_p50")) >= 0.0);
+        let (p50, p99) = (
+            metric_value(&text, &format!("{h}_p50")),
+            metric_value(&text, &format!("{h}_p99")),
+        );
+        assert!(p99 >= p50, "{h}: p99 {p99} < p50 {p50}");
+    }
+    // The RPC layer measures itself, and the fleet labels its lanes.
+    assert!(metric_value(&text, "kf_rpc_handle_ms_count") >= 1.0);
+    assert!(text.contains("kf_lane_units_done_total{device=\"b580\"} 1"), "{text}");
+
+    server.shutdown();
+    server.wait();
+    service.stop();
+    if !keep {
+        let _ = std::fs::remove_file(&trace);
+    }
+}
+
+/// Acceptance criterion: `trace <job-id>` reconstructs a monotonically
+/// ordered submit → responded timeline from the sink after a
+/// submit/result round trip; a cached resubmission still records a
+/// terminal `committed`.
+#[test]
+fn trace_timeline_is_monotone_and_complete() {
+    let (service, mut server, trace, keep) = start_traced_daemon("timeline");
+    let mut client = connect(&server);
+
+    let id = submit(&mut client, tiny_spec("20_LeakyReLU", "b580"));
+    assert_eq!(poll_to_completion(&mut client, id), "done");
+    fetch_result(&mut client, id);
+
+    let timeline = TraceSink::timeline(&trace, id);
+    let stages: Vec<&str> = timeline.iter().map(|e| e.stage.as_str()).collect();
+    assert_eq!(
+        stages,
+        vec![
+            stage::SUBMIT,
+            stage::QUEUED,
+            stage::DISPATCHED,
+            stage::COMPILED,
+            stage::EXECUTED,
+            stage::COMMITTED,
+            stage::RESPONDED,
+        ],
+        "full lifecycle in order"
+    );
+    assert!(
+        timeline.windows(2).all(|w| w[0].ts_ms <= w[1].ts_ms),
+        "timestamps are monotone: {timeline:?}"
+    );
+    let tid = &timeline[0].trace_id;
+    assert!(timeline.iter().all(|e| &e.trace_id == tid), "one trace id per job");
+    assert_eq!(timeline[2].device.as_deref(), Some("b580"), "dispatch is device-scoped");
+
+    // A cache-hit resubmission never visits a lane but still commits.
+    let resp = client.request(&Request::Submit(tiny_spec("20_LeakyReLU", "b580"))).unwrap();
+    assert_eq!(resp.get("cached").unwrap().as_bool(), Some(true), "{resp}");
+    let id2 = resp.get("job_id").unwrap().as_usize().unwrap() as u64;
+    fetch_result(&mut client, id2);
+    let cached_stages: Vec<String> =
+        TraceSink::timeline(&trace, id2).iter().map(|e| e.stage.clone()).collect();
+    assert_eq!(cached_stages, vec![stage::SUBMIT, stage::COMMITTED, stage::RESPONDED]);
+
+    server.shutdown();
+    server.wait();
+    service.stop();
+    if !keep {
+        let _ = std::fs::remove_file(&trace);
+    }
 }
 
 /// Wire-level robustness: unknown tasks, unknown devices, unknown job

@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""CI invariant over job-lifecycle trace sinks (DESIGN.md §8).
+
+Scans the `*.trace.jsonl` sinks the e2e suite leaves behind when
+`KF_E2E_TRACE_DIR` is set and fails if any job reached `executed`
+without a matching `committed` event — i.e. a unit produced a verdict
+that was never durably published. Torn final lines (crash-cut sinks)
+are tolerated the same way the Rust loader tolerates them.
+
+Usage: check_traces.py <trace-dir>
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+def scan(path):
+    """Return {job_id: set(stages)} for one trace sink."""
+    stages = {}
+    with open(path, encoding="utf-8") as fh:
+        lines = fh.read().splitlines()
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                continue  # torn tail from a crash-cut append
+            raise SystemExit(f"{path}:{i + 1}: malformed mid-file trace line")
+        stages.setdefault(ev["job"], set()).add(ev["t"])
+    return stages
+
+
+def main():
+    if len(sys.argv) != 2:
+        raise SystemExit(__doc__)
+    trace_dir = sys.argv[1]
+    files = sorted(glob.glob(os.path.join(trace_dir, "*.trace.jsonl")))
+    if not files:
+        raise SystemExit(f"no *.trace.jsonl sinks under {trace_dir}; "
+                         "was KF_E2E_TRACE_DIR exported for the e2e run?")
+    bad = []
+    jobs = 0
+    for path in files:
+        for job, seen in sorted(scan(path).items()):
+            jobs += 1
+            if "executed" in seen and "committed" not in seen:
+                bad.append(f"{path}: job {job} has 'executed' but no "
+                           f"'committed' event (stages: {sorted(seen)})")
+    if bad:
+        raise SystemExit("\n".join(bad))
+    print(f"OK: {jobs} job(s) across {len(files)} sink(s); "
+          "every executed job was committed")
+
+
+if __name__ == "__main__":
+    main()

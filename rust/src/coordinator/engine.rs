@@ -7,6 +7,7 @@ use crate::dist::WorkerPool;
 use crate::eval::{EvalOutcome, EvalPipeline, EvalRecord, ExecBackend};
 use crate::gradient::{hints_for, GradientEstimator};
 use crate::prompts::{EvolvablePrompt, MetaPrompter, Prompt, PromptArchive, PromptBuilder};
+use crate::report::history::{SearchLog, SearchStatsRow};
 use crate::selection::{IslandState, Selector};
 use crate::simllm::{CapabilityProfile, Ensemble, SimLlm};
 use crate::tasks::TaskSpec;
@@ -14,6 +15,7 @@ use crate::transitions::{Outcome, Transition, TransitionTracker};
 use crate::util::rng::Rng;
 use crate::util::textdiff;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// The full §3.1 loop bound to one task.
 pub struct EvolutionEngine {
@@ -44,6 +46,12 @@ pub struct EvolutionEngine {
     rng: Rng,
     /// Seed genome for custom tasks with an initial implementation.
     pub initial_genome: Option<crate::ir::KernelGenome>,
+    /// Per-generation search-history sink (`--search-log`), shared by
+    /// every engine in the process.
+    search_log: Option<Arc<SearchLog>>,
+    /// Run label stamped on search-history rows (the fleet's cache key,
+    /// or a CLI run label).
+    run_label: String,
 }
 
 impl EvolutionEngine {
@@ -108,10 +116,23 @@ impl EvolutionEngine {
             incorrect: 0,
             rng: Rng::with_stream(seed, 0xc0),
             initial_genome: None,
+            search_log: None,
+            run_label: String::new(),
             pipeline,
             task,
             config,
         }
+    }
+
+    /// Attach a per-generation search-history log: every finished
+    /// generation appends one [`SearchStatsRow`] labeled `run` (the
+    /// service fleet passes the unit's cache key so history rows join
+    /// persisted cache rows; the CLI passes an equivalent label). Pure
+    /// telemetry — appending never touches the engine RNG, so seeded
+    /// runs stay bit-identical with or without a log.
+    pub fn attach_search_log(&mut self, log: Arc<SearchLog>, run: &str) {
+        self.search_log = Some(log);
+        self.run_label = run.to_string();
     }
 
     fn hardware_desc(&self) -> String {
@@ -343,6 +364,28 @@ impl EvolutionEngine {
             .set_to(stats.insertions as u64);
         obs.counter("kf_search_attempts_total")
             .set_to(stats.attempts as u64);
+
+        // Persist the same snapshot as one search-history row, so the
+        // gauges' last-value-only view survives the process and the
+        // report layer can reconstruct full per-generation curves.
+        if let Some(log) = &self.search_log {
+            log.append(&SearchStatsRow {
+                run: self.run_label.clone(),
+                task_id: self.task.id.clone(),
+                device: self.config.device.clone(),
+                generation: self.iteration,
+                qd_score: stats.qd_score,
+                coverage,
+                best_fitness: stats.best_fitness,
+                best_speedup: stats.best_speedup,
+                acceptance,
+                insertions: stats.insertions,
+                attempts: stats.attempts,
+                occupied: stats.occupied,
+                evaluations: self.records.len(),
+                ts_ms: crate::obs::trace::now_ms(),
+            });
+        }
     }
 
     fn meta_prompt_update(&mut self) {
@@ -581,6 +624,39 @@ mod tests {
             let dist_rec = dist_e.records.get(id).expect("same genome ids");
             assert_eq!(inline_rec.outcome, dist_rec.outcome, "genome {id}");
         }
+    }
+
+    /// Satellite-task test: an attached search log records one row per
+    /// generation with the engine's run label, and attaching it leaves
+    /// the seeded search trajectory bit-identical (telemetry is pure).
+    #[test]
+    fn search_log_covers_every_generation_without_perturbing_search() {
+        let path = std::env::temp_dir()
+            .join(format!("kf_engine_searchlog_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let plain = engine_for("20_LeakyReLU").run(false).best_speedup();
+
+        let mut e = engine_for("20_LeakyReLU");
+        let log = Arc::new(SearchLog::open(&path).unwrap());
+        e.attach_search_log(log, "20_LeakyReLU|b580|sycl|s1|i12|p4");
+        let logged = e.run(false).best_speedup();
+        assert_eq!(plain, logged, "search log must not perturb the search");
+
+        let rows = SearchLog::load(&path);
+        assert_eq!(rows.len(), 12, "one row per generation");
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.generation, i);
+            assert_eq!(row.run, "20_LeakyReLU|b580|sycl|s1|i12|p4");
+            assert_eq!(row.task_id, "20_LeakyReLU");
+            assert_eq!(row.device, "b580");
+            assert!(row.coverage >= 0.0 && row.coverage <= 1.0);
+        }
+        // Curves are cumulative: QD-score and evaluations never shrink.
+        for w in rows.windows(2) {
+            assert!(w[1].qd_score >= w[0].qd_score);
+            assert!(w[1].evaluations >= w[0].evaluations);
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod experiments;
 pub mod gradient;
 pub mod obs;
 pub mod prompts;
+pub mod report;
 pub mod runtime;
 pub mod selection;
 pub mod service;

@@ -9,7 +9,10 @@
 //! kernelfoundry metrics    --addr 127.0.0.1:7341 (Prometheus text exposition)
 //! kernelfoundry trace      <job-id> --sink trace.jsonl (job timeline)
 //! kernelfoundry tasks      [--suite l1|l2|rkb|onednn] [--json]
-//! kernelfoundry report     --db runs.jsonl [--top N] [--json]
+//! kernelfoundry report     --db runs.jsonl [--device d] [--suite s] [--trace t] [--journal j]
+//!                          [--search-log s] [--html out.html] [--top N] [--json]
+//! kernelfoundry report regressions --db runs.jsonl --baseline old.jsonl
+//!                          [--max-speedup-drop 0.10] (exits nonzero on regression)
 //! ```
 //!
 //! Every subcommand accepts `--verbose` (debug logging) and `--quiet`
@@ -21,13 +24,14 @@ use kernelfoundry::dist::{ClusterConfig, Database, DbRow, WorkerPool};
 use kernelfoundry::eval::ExecBackend;
 use kernelfoundry::experiments::{self, ExperimentScale};
 use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::report;
 use kernelfoundry::service::{
     self, proto, Client, KernelService, Server, ServiceConfig, DEFAULT_LEASE_TTL_SECS,
 };
 use kernelfoundry::tasks::catalog;
-use kernelfoundry::util::cli::Command;
+use kernelfoundry::util::cli::{Command, Parsed};
 use kernelfoundry::util::json::Json;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 use std::sync::Arc;
 
@@ -65,7 +69,7 @@ fn main() -> ExitCode {
 fn print_usage() {
     println!(
         "kernelfoundry {} — hardware-aware evolutionary GPU kernel optimization (reproduction)\n\n\
-         subcommands:\n  run      optimize kernels for one task\n  bench    regenerate a paper table/figure\n  serve    distributed worker-pool demo\n  daemon   long-running kernel-generation service (TCP JSON RPC)\n  submit   client for a running daemon (submit/status/result/cancel/stats/metrics)\n  metrics  fetch a daemon's Prometheus text exposition\n  trace    reconstruct a job's lifecycle timeline from a trace sink\n  tasks    list benchmark tasks\n  report   summarize a results database\n\nevery subcommand takes --verbose / --quiet (KF_LOG overrides both)\nuse <subcommand> --help for options",
+         subcommands:\n  run      optimize kernels for one task\n  bench    regenerate a paper table/figure\n  serve    distributed worker-pool demo\n  daemon   long-running kernel-generation service (TCP JSON RPC)\n  submit   client for a running daemon (submit/status/result/cancel/stats/metrics)\n  metrics  fetch a daemon's Prometheus text exposition\n  trace    reconstruct a job's lifecycle timeline from a trace sink\n  tasks    list benchmark tasks\n  report   analytics over run artifacts (summary, HTML dashboard, regression gate)\n\nevery subcommand takes --verbose / --quiet (KF_LOG overrides both)\nuse <subcommand> --help for options",
         kernelfoundry::version()
     );
 }
@@ -97,6 +101,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .opt("seed", "20260710", "RNG seed")
         .opt("models", "gpt-4.1,gpt-5-mini", "ensemble model profiles")
         .opt("config", "", "YAML config file (overrides defaults)")
+        .opt("search-log", "", "JSONL per-generation search history for `report` ('' = off)")
         .flag("param-opt", "run the templated parameter-optimization phase")
         .flag("cuda", "generate CUDA instead of SYCL");
     let p = with_log_flags(cmd).parse(args)?;
@@ -128,6 +133,23 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         task.id, device.name, config.evolution.max_generations, config.evolution.population
     );
     let mut engine = EvolutionEngine::new(config, task, ExecBackend::HwSim(device));
+    if let Some(path) = p.get("search-log").filter(|s| !s.is_empty()) {
+        let log = report::SearchLog::open(Path::new(path))
+            .map_err(|e| format!("search log {path}: {e}"))?;
+        // Same shape as the service cache key (device at index 1), so
+        // `report` folds CLI and daemon histories identically.
+        let label = format!(
+            "{}|{}|{}|s{}|i{}|p{}",
+            engine.task.id,
+            engine.config.device,
+            engine.config.language,
+            engine.config.seed,
+            engine.config.evolution.max_generations,
+            engine.config.evolution.population,
+        );
+        engine.attach_search_log(Arc::new(log), &label);
+        println!("search log: {path} (inspect with `kernelfoundry report --search-log {path}`)");
+    }
     let report = engine.run(p.has_flag("param-opt"));
     println!(
         "evaluations: {} (compile errors {}, incorrect {})",
@@ -289,7 +311,8 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
         .opt("db", "", "JSONL path for cache persistence ('' = in-memory only)")
         .opt("journal", "", "JSONL write-ahead job journal; restart replays queued/in-flight jobs ('' = volatile)")
         .opt("lease-ttl", "30", "journal owner-lease TTL in seconds (heartbeat at ttl/3)")
-        .opt("trace", "", "JSONL job-lifecycle trace sink for `kernelfoundry trace` ('' = off)");
+        .opt("trace", "", "JSONL job-lifecycle trace sink for `kernelfoundry trace` ('' = off)")
+        .opt("search-log", "", "JSONL per-generation search history for `kernelfoundry report` ('' = off)");
     let p = with_log_flags(cmd).parse(args)?;
     apply_log_flags(&p);
     let mut devices = Vec::new();
@@ -310,6 +333,7 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
             p.get_usize("lease-ttl").unwrap_or(DEFAULT_LEASE_TTL_SECS as usize).max(1) as u64,
         ),
         trace_path: p.get("trace").filter(|s| !s.is_empty()).map(Into::into),
+        search_log_path: p.get("search-log").filter(|s| !s.is_empty()).map(Into::into),
     };
     if cfg.journal_path.is_some() && kernelfoundry::service::failpoint::any_armed() {
         eprintln!(
@@ -328,6 +352,9 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
     println!("stop with: kernelfoundry submit --addr {} --verb shutdown", server.addr());
     if let Some(trace) = p.get("trace").filter(|s| !s.is_empty()) {
         println!("trace sink: {trace} (inspect with `kernelfoundry trace <job-id> --sink {trace}`)");
+    }
+    if let Some(slog) = p.get("search-log").filter(|s| !s.is_empty()) {
+        println!("search log: {slog} (inspect with `kernelfoundry report --search-log {slog}`)");
     }
     server.wait();
     println!("shutting down: draining queued jobs ...");
@@ -628,21 +655,66 @@ fn cmd_tasks(args: &[String]) -> Result<(), String> {
 }
 
 fn cmd_report(args: &[String]) -> Result<(), String> {
-    let cmd = Command::new("report", "summarize a results database")
-        .opt("db", "runs.jsonl", "JSONL database path")
+    let about = "analytics over run artifacts: summary, HTML dashboard, regression gate";
+    let cmd = Command::new("report", about)
+        .opt("db", "runs.jsonl", "JSONL results database path")
+        .opt("baseline", "", "baseline database (`report regressions` only)")
         .opt("method", "kernelfoundry", "method to summarize")
         .opt("top", "0", "show only the N best tasks by speedup (0 = all)")
+        .opt("device", "", "keep only rows that ran on this device")
+        .opt("suite", "", "keep only tasks of one suite: l1 | l2 | rkb | onednn | custom")
+        .opt("trace", "", "job-lifecycle trace sink (adds the latency breakdown)")
+        .opt("journal", "", "write-ahead job journal (adds the reliability view)")
+        .opt("search-log", "", "per-generation search history (adds the search-health view)")
+        .opt("html", "", "write the self-contained HTML dashboard to this path")
+        .opt("max-speedup-drop", "0.10", "regression tolerance, fraction of baseline speedup")
+        .flag("allow-missing", "baseline keys absent from the current database do not regress")
         .flag("json", "machine-readable output (one JSON array)");
     let p = with_log_flags(cmd).parse(args)?;
     apply_log_flags(&p);
+
+    let filter = report::RowFilter {
+        device: p.get("device").filter(|s| !s.is_empty()).map(String::from),
+        suite: p
+            .get("suite")
+            .filter(|s| !s.is_empty())
+            .map(report::views::canonical_suite),
+    };
+    if p.positional.first().map(String::as_str) == Some("regressions") {
+        return report_regressions(&p, &filter);
+    }
+
+    let opt_path = |k: &str| p.get(k).filter(|s| !s.is_empty()).map(PathBuf::from);
+    let db_path = PathBuf::from(p.get("db").unwrap());
+    let trace = opt_path("trace");
+    let journal = opt_path("journal");
+    let search = opt_path("search-log");
+    let mut artifacts = report::Artifacts::load(
+        Some(&db_path),
+        trace.as_deref(),
+        journal.as_deref(),
+        search.as_deref(),
+    )?;
+    let n = artifacts.rows.len();
+    artifacts.rows.retain(|r| filter.matches(r));
+
+    if let Some(out) = opt_path("html") {
+        let html = report::html::render(&artifacts, journal.is_some());
+        std::fs::write(&out, &html).map_err(|e| format!("writing {}: {e}", out.display()))?;
+        println!("dashboard: {} ({} bytes, self-contained)", out.display(), html.len());
+        return Ok(());
+    }
+
     let db = Database::new();
-    let n = db
-        .load(Path::new(p.get("db").unwrap()))
-        .map_err(|e| e.to_string())?;
+    for row in &artifacts.rows {
+        db.insert(row.clone());
+    }
     let mut best: Vec<DbRow> = db.best_per_task(p.get("method").unwrap());
     let top = p.get_usize("top").unwrap_or(0);
     if top > 0 {
-        best.sort_by(|a, b| b.speedup.partial_cmp(&a.speedup).unwrap_or(std::cmp::Ordering::Equal));
+        // total_cmp: NaN speedups sort deterministically to the bottom
+        // instead of leaving the order to chance.
+        best.sort_by(|a, b| b.speedup.total_cmp(&a.speedup));
         best.truncate(top);
     }
     if p.has_flag("json") {
@@ -650,12 +722,128 @@ fn cmd_report(args: &[String]) -> Result<(), String> {
         println!("{}", Json::Arr(arr).to_string_compact());
         return Ok(());
     }
-    println!("loaded {n} rows");
+    println!("loaded {n} rows ({} after filters)", artifacts.rows.len());
     for row in &best {
         println!(
             "{:<55} fitness {:.3} speedup {:.3} cell {:?} by {}",
             row.task_id, row.fitness, row.speedup, row.coords, row.produced_by
         );
     }
+    if trace.is_some() {
+        let lat = report::LatencyView::build(&artifacts.events);
+        println!("\nlatency breakdown ({} trace events):", artifacts.events.len());
+        if lat.lanes.is_empty() {
+            println!("  (no closed stage segments)");
+        }
+        for l in &lat.lanes {
+            println!(
+                "  {:<8} {:<12} n={:<4} p50 {:>8.1} ms  p90 {:>8.1} ms  p99 {:>8.1} ms",
+                l.device, l.segment, l.n, l.p50, l.p90, l.p99
+            );
+        }
+    }
+    if journal.is_some() {
+        let rel = report::ReliabilityView::build(&artifacts.journal);
+        println!("\nreliability ({} journal records):", artifacts.journal.len());
+        println!(
+            "  submits {}  dispatches {}  commits {}  fails {}  cancelled {}",
+            rel.submits, rel.dispatches, rel.commits, rel.fails, rel.cancelled_units
+        );
+        println!(
+            "  crash-replays {}  lost units {}  sessions {} (unclean {})  lease takeovers {}",
+            rel.replayed_dispatches,
+            rel.lost_units,
+            rel.sessions,
+            rel.unclean_sessions(),
+            rel.lease_takeovers
+        );
+    }
+    if search.is_some() {
+        use kernelfoundry::report::views::SearchRunCurve;
+        let health = report::SearchHealthView::build(&artifacts.search);
+        println!("\nsearch health ({} runs):", health.runs.len());
+        for run in &health.runs {
+            println!(
+                "  {:<50} gens {:<3} qd {:>7.3}  coverage {:>5.1}%  acceptance {:>5.1}%  best {:.3}x",
+                run.run,
+                run.generations(),
+                SearchRunCurve::final_of(&run.qd_curve),
+                SearchRunCurve::final_of(&run.coverage_curve) * 100.0,
+                SearchRunCurve::final_of(&run.acceptance_curve) * 100.0,
+                SearchRunCurve::final_of(&run.best_speedup_curve),
+            );
+        }
+    }
     Ok(())
+}
+
+/// `kernelfoundry report regressions`: compare the current database
+/// against a baseline and exit nonzero when any (task, device) best
+/// speedup dropped beyond tolerance — the CI gate over real artifacts.
+fn report_regressions(p: &Parsed, filter: &report::RowFilter) -> Result<(), String> {
+    let baseline_path = p
+        .get("baseline")
+        .filter(|s| !s.is_empty())
+        .ok_or("report regressions needs --baseline <db>")?;
+    let load = |path: &str| -> Result<Vec<DbRow>, String> {
+        let db = Database::new();
+        db.load(Path::new(path)).map_err(|e| e.to_string())?;
+        Ok(db.rows())
+    };
+    let baseline = load(baseline_path)?;
+    let current = load(p.get("db").unwrap())?;
+    let cfg = report::RegressionConfig {
+        max_speedup_drop: p.get_f64("max-speedup-drop").unwrap_or(0.10),
+        missing_is_regression: !p.has_flag("allow-missing"),
+    };
+    let found = report::detect(&baseline, &current, filter, &cfg);
+    if p.has_flag("json") {
+        let arr: Vec<Json> = found
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("task_id", r.task_id.as_str())
+                    .set("device", r.device.as_str())
+                    .set("baseline_speedup", r.baseline_speedup)
+                    .set("current_speedup", r.current_speedup)
+                    .set("drop_frac", r.drop_frac)
+                    .set("missing", r.missing);
+                o
+            })
+            .collect();
+        println!("{}", Json::Arr(arr).to_string_compact());
+    } else if found.is_empty() {
+        println!(
+            "no regressions: every (task, device) best is within {:.1}% of baseline",
+            cfg.max_speedup_drop * 100.0
+        );
+    } else {
+        println!(
+            "{} regression(s) beyond {:.1}% tolerance:",
+            found.len(),
+            cfg.max_speedup_drop * 100.0
+        );
+        for r in &found {
+            if r.missing {
+                println!(
+                    "  {:<45} {:<8} baseline {:.3}x -> MISSING",
+                    r.task_id, r.device, r.baseline_speedup
+                );
+            } else {
+                println!(
+                    "  {:<45} {:<8} baseline {:.3}x -> {:.3}x (-{:.1}%)",
+                    r.task_id,
+                    r.device,
+                    r.baseline_speedup,
+                    r.current_speedup,
+                    r.drop_frac * 100.0
+                );
+            }
+        }
+    }
+    if found.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("{} speedup regression(s) detected", found.len()))
+    }
 }

@@ -1,0 +1,233 @@
+//! The per-generation search-history log: `kf_search_*` telemetry that
+//! survives the process.
+//!
+//! The metrics registry (PR 4) publishes search health as *last-value
+//! gauges* — one number per metric, overwritten every generation and
+//! gone at exit. [`SearchLog`] persists the same quantities as one
+//! [`SearchStatsRow`] per generation per run, written with the repo's
+//! standard append-only JSONL discipline (whole-line `O_APPEND` writes
+//! under a mutex, torn final line repaired by
+//! [`crate::dist::load_jsonl_tolerant`] on reload). The analytics layer
+//! ([`super::views::SearchHealthView`]) folds these rows into QD-score,
+//! coverage and acceptance *curves*, which is what the surrogate-model
+//! and federation roadmap items need to read back.
+
+use crate::dist::load_jsonl_tolerant;
+use crate::util::json::Json;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One generation's archive snapshot for one evolution run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchStatsRow {
+    /// Run identifier. Fleet lanes use the unit's result-cache key, so
+    /// search rows join against persisted cache rows on `DbRow::run`;
+    /// CLI runs use an equivalent `task|device|language|s<seed>|...`
+    /// label.
+    pub run: String,
+    /// Task the run optimizes.
+    pub task_id: String,
+    /// Device profile the run targets.
+    pub device: String,
+    /// Generation index (0-based, one row per generation).
+    pub generation: usize,
+    /// QD-score: sum of elite fitness over occupied cells.
+    pub qd_score: f64,
+    /// Occupied cells / total cells.
+    pub coverage: f64,
+    /// Best elite fitness so far.
+    pub best_fitness: f64,
+    /// Best elite speedup so far.
+    pub best_speedup: f64,
+    /// Archive insertions / insertion attempts so far.
+    pub acceptance: f64,
+    /// Cumulative archive insertions.
+    pub insertions: usize,
+    /// Cumulative insertion attempts.
+    pub attempts: usize,
+    /// Occupied archive cells.
+    pub occupied: usize,
+    /// Candidates evaluated so far in the run.
+    pub evaluations: usize,
+    /// Wall-clock Unix milliseconds when the row was recorded.
+    pub ts_ms: f64,
+}
+
+impl SearchStatsRow {
+    /// Serialize to the JSONL object form. Non-finite metrics are
+    /// clamped (NaN → 0, ±inf → ±MAX) so one bad value can never make
+    /// the whole log unloadable.
+    pub fn to_json(&self) -> Json {
+        fn finite(v: f64) -> f64 {
+            if v.is_finite() {
+                v
+            } else if v.is_nan() {
+                0.0
+            } else if v > 0.0 {
+                f64::MAX
+            } else {
+                f64::MIN
+            }
+        }
+        let mut o = Json::obj();
+        o.set("run", self.run.as_str())
+            .set("task_id", self.task_id.as_str())
+            .set("device", self.device.as_str())
+            .set("gen", self.generation)
+            .set("qd_score", finite(self.qd_score))
+            .set("coverage", finite(self.coverage))
+            .set("best_fitness", finite(self.best_fitness))
+            .set("best_speedup", finite(self.best_speedup))
+            .set("acceptance", finite(self.acceptance))
+            .set("insertions", self.insertions)
+            .set("attempts", self.attempts)
+            .set("occupied", self.occupied)
+            .set("evaluations", self.evaluations)
+            .set("ts_ms", finite(self.ts_ms));
+        o
+    }
+
+    /// Parse a row back from its JSON object form; `None` on schema
+    /// mismatch.
+    pub fn from_json(v: &Json) -> Option<SearchStatsRow> {
+        Some(SearchStatsRow {
+            run: v.get("run")?.as_str()?.to_string(),
+            task_id: v.get("task_id")?.as_str()?.to_string(),
+            device: v.get("device")?.as_str()?.to_string(),
+            generation: v.get("gen")?.as_usize()?,
+            qd_score: v.get("qd_score")?.as_f64()?,
+            coverage: v.get("coverage")?.as_f64()?,
+            best_fitness: v.get("best_fitness")?.as_f64()?,
+            best_speedup: v.get("best_speedup")?.as_f64()?,
+            acceptance: v.get("acceptance")?.as_f64()?,
+            insertions: v.get("insertions")?.as_usize()?,
+            attempts: v.get("attempts")?.as_usize()?,
+            occupied: v.get("occupied")?.as_usize()?,
+            evaluations: v.get("evaluations")?.as_usize()?,
+            ts_ms: v.get("ts_ms")?.as_f64()?,
+        })
+    }
+}
+
+/// Append-only JSONL writer for [`SearchStatsRow`]s, shared by every
+/// engine in the process (CLI run, or one per fleet lane unit).
+///
+/// Appends are best-effort: an I/O error is logged and swallowed, never
+/// propagated into the evolution loop — telemetry must not be able to
+/// fail a run.
+pub struct SearchLog {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl SearchLog {
+    /// Open (creating if needed) the log at `path` for appending.
+    pub fn open(path: &Path) -> std::io::Result<SearchLog> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(SearchLog {
+            path: path.to_path_buf(),
+            file: Mutex::new(file),
+        })
+    }
+
+    /// The log's file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one row as a whole line.
+    pub fn append(&self, row: &SearchStatsRow) {
+        let mut line = row.to_json().to_string_compact();
+        line.push('\n');
+        let mut guard = self.file.lock().unwrap();
+        if let Err(e) = guard.write_all(line.as_bytes()) {
+            crate::log_warn!("search log {}: {e}", self.path.display());
+        }
+    }
+
+    /// Load every row from a log file. A missing file is an empty
+    /// history; a torn final line is dropped (and repaired on disk).
+    pub fn load(path: &Path) -> Vec<SearchStatsRow> {
+        if !path.exists() {
+            return Vec::new();
+        }
+        match load_jsonl_tolerant(path, SearchStatsRow::from_json) {
+            Ok((rows, _)) => rows,
+            Err(e) => {
+                crate::log_warn!("search log {}: {e}", path.display());
+                Vec::new()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(run: &str, generation: usize, qd: f64) -> SearchStatsRow {
+        SearchStatsRow {
+            run: run.to_string(),
+            task_id: "t1".to_string(),
+            device: "b580".to_string(),
+            generation,
+            qd_score: qd,
+            coverage: 0.25,
+            best_fitness: 0.9,
+            best_speedup: 1.8,
+            acceptance: 0.5,
+            insertions: 4,
+            attempts: 8,
+            occupied: 3,
+            evaluations: 16,
+            ts_ms: 1.0e12,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kf_search_log_{name}_{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn rows_roundtrip_through_the_log() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let log = SearchLog::open(&path).unwrap();
+        log.append(&row("r1", 0, 1.5));
+        log.append(&row("r1", 1, 2.5));
+        log.append(&row("r2", 0, 0.5));
+        let rows = SearchLog::load(&path);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], row("r1", 0, 1.5));
+        assert_eq!(rows[2].run, "r2");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_and_torn_tail_load_safely() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        assert!(SearchLog::load(&path).is_empty());
+        {
+            let log = SearchLog::open(&path).unwrap();
+            log.append(&row("r1", 0, 1.0));
+        }
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"run\":\"r1\",\"tas");
+        std::fs::write(&path, text).unwrap();
+        let rows = SearchLog::load(&path);
+        assert_eq!(rows.len(), 1, "intact rows survive a torn tail");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn non_finite_metrics_stay_loadable() {
+        let mut r = row("r1", 0, f64::NAN);
+        r.best_speedup = f64::INFINITY;
+        let back = SearchStatsRow::from_json(&r.to_json()).expect("row stays loadable");
+        assert_eq!(back.qd_score, 0.0);
+        assert!(back.best_speedup.is_finite());
+    }
+}

@@ -1,0 +1,309 @@
+//! Self-contained HTML run dashboard: all four analytics views in one
+//! file with inline CSS and inline SVG sparklines — no external assets,
+//! no JavaScript, so the report can be archived as a CI artifact and
+//! opened anywhere.
+
+use super::views::{
+    Artifacts, LatencyView, ReliabilityView, SearchHealthView, SearchRunCurve, TrajectoryView,
+};
+use crate::obs::trace::stage;
+use std::fmt::Write as _;
+
+/// HTML-escape text content and attribute values.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            '\'' => out.push_str("&#39;"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// An inline SVG sparkline over `values` (auto-scaled to its own
+/// min/max; a flat or single-point series renders as a midline).
+fn sparkline(values: &[f64]) -> String {
+    const W: f64 = 120.0;
+    const H: f64 = 24.0;
+    const PAD: f64 = 2.0;
+    if values.is_empty() {
+        return String::from("<span class=\"empty\">—</span>");
+    }
+    let lo = values.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let span = if (hi - lo).abs() < 1e-12 { 1.0 } else { hi - lo };
+    let n = values.len();
+    let points: Vec<String> = values
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            let x = if n == 1 {
+                W / 2.0
+            } else {
+                PAD + (W - 2.0 * PAD) * i as f64 / (n - 1) as f64
+            };
+            let y = H - PAD - (H - 2.0 * PAD) * (v - lo) / span;
+            format!("{x:.1},{y:.1}")
+        })
+        .collect();
+    format!(
+        "<svg class=\"spark\" viewBox=\"0 0 {W:.0} {H:.0}\" width=\"{W:.0}\" height=\"{H:.0}\" \
+         role=\"img\"><polyline points=\"{}\" fill=\"none\" stroke=\"#2a7ae2\" \
+         stroke-width=\"1.5\"/></svg>",
+        points.join(" ")
+    )
+}
+
+fn section(out: &mut String, title: &str, body: &str) {
+    let _ = write!(out, "<section><h2>{}</h2>{body}</section>\n", esc(title));
+}
+
+fn stage_coverage(artifacts: &Artifacts) -> String {
+    let mut rows = String::new();
+    for s in stage::ALL {
+        let count = artifacts.events.iter().filter(|e| e.stage == *s).count();
+        let _ = write!(
+            rows,
+            "<tr><td class=\"stage\">{}</td><td class=\"num\">{count}</td></tr>",
+            esc(s)
+        );
+    }
+    format!(
+        "<p>Every lifecycle stage with its event count across the trace sink.</p>\
+         <table><tr><th>stage</th><th>events</th></tr>{rows}</table>"
+    )
+}
+
+fn trajectories(view: &TrajectoryView) -> String {
+    if view.points.is_empty() {
+        return "<p class=\"empty\">no correct rows in the results database</p>".to_string();
+    }
+    let mut rows = String::new();
+    for p in &view.points {
+        let curve: Vec<f64> = p.runs.iter().map(|(_, s)| *s).collect();
+        let delta = if p.runs.len() >= 2 {
+            format!("{:+.3}", p.delta)
+        } else {
+            "—".to_string()
+        };
+        let _ = write!(
+            rows,
+            "<tr><td>{}</td><td>{:?}</td><td>{}</td><td class=\"num\">{:.3}</td>\
+             <td class=\"num\">{:.3}×</td><td class=\"num\">{}</td><td>{}</td>\
+             <td class=\"num\">{}</td></tr>",
+            esc(&p.task_id),
+            p.coords,
+            esc(&p.device),
+            p.best_fitness,
+            p.best_speedup,
+            delta,
+            sparkline(&curve),
+            p.n_rows,
+        );
+    }
+    format!(
+        "<p>Best kernel per (task, MAP-Elites cell, device); the sparkline tracks \
+         per-run best speedup, Δ is the last run-over-run change.</p>\
+         <table><tr><th>task</th><th>cell</th><th>device</th><th>fitness</th>\
+         <th>speedup</th><th>Δ</th><th>per-run</th><th>rows</th></tr>{rows}</table>"
+    )
+}
+
+fn latency(view: &LatencyView) -> String {
+    if view.lanes.is_empty() {
+        return "<p class=\"empty\">no closed stage segments in the trace sink</p>".to_string();
+    }
+    let mut rows = String::new();
+    for l in &view.lanes {
+        let _ = write!(
+            rows,
+            "<tr><td>{}</td><td class=\"stage\">{}</td><td class=\"num\">{}</td>\
+             <td class=\"num\">{:.1}</td><td class=\"num\">{:.1}</td>\
+             <td class=\"num\">{:.1}</td><td class=\"num\">{:.1}</td>\
+             <td class=\"num\">{:.1}</td></tr>",
+            esc(&l.device),
+            esc(&l.segment),
+            l.n,
+            l.p50,
+            l.p90,
+            l.p99,
+            l.min,
+            l.max,
+        );
+    }
+    format!(
+        "<p>Per-stage latency (ms) per device lane: queue-wait (queued→dispatched), \
+         compile (dispatched→compiled), exec (compiled→executed), \
+         commit (executed→committed).</p>\
+         <table><tr><th>device</th><th>segment</th><th>n</th><th>p50</th>\
+         <th>p90</th><th>p99</th><th>min</th><th>max</th></tr>{rows}</table>"
+    )
+}
+
+fn reliability(view: &ReliabilityView, have_journal: bool) -> String {
+    if !have_journal {
+        return "<p class=\"empty\">no journal supplied (daemon --journal)</p>".to_string();
+    }
+    let mut rows = String::new();
+    let counters: &[(&str, usize)] = &[
+        ("jobs submitted", view.submits),
+        ("units dispatched", view.dispatches),
+        ("units committed", view.commits),
+        ("units failed", view.fails),
+        ("units cancelled", view.cancelled_units),
+        ("crash-replay re-dispatches", view.replayed_dispatches),
+        ("lost (in-flight) units", view.lost_units),
+        ("owner sessions", view.sessions),
+        ("clean releases", view.clean_releases),
+        ("unclean sessions (crashes + live)", view.unclean_sessions()),
+        ("stale-lease takeovers", view.lease_takeovers),
+    ];
+    for (name, value) in counters {
+        let _ = write!(
+            rows,
+            "<tr><td>{}</td><td class=\"num\">{value}</td></tr>",
+            esc(name)
+        );
+    }
+    format!(
+        "<p>Crash/replay/lease accounting folded from the write-ahead journal.</p>\
+         <table><tr><th>counter</th><th>count</th></tr>{rows}</table>"
+    )
+}
+
+fn search_run_row(run: &SearchRunCurve) -> String {
+    format!(
+        "<tr><td class=\"run\">{}</td><td>{}</td><td>{}</td><td class=\"num\">{}</td>\
+         <td class=\"num\">{:.3}</td><td>{}</td>\
+         <td class=\"num\">{:.1}%</td><td>{}</td>\
+         <td class=\"num\">{:.1}%</td><td>{}</td>\
+         <td class=\"num\">{:.3}×</td><td>{}</td></tr>",
+        esc(&run.run),
+        esc(&run.task_id),
+        esc(&run.device),
+        run.generations(),
+        SearchRunCurve::final_of(&run.qd_curve),
+        sparkline(&run.qd_curve),
+        SearchRunCurve::final_of(&run.coverage_curve) * 100.0,
+        sparkline(&run.coverage_curve),
+        SearchRunCurve::final_of(&run.acceptance_curve) * 100.0,
+        sparkline(&run.acceptance_curve),
+        SearchRunCurve::final_of(&run.best_speedup_curve),
+        sparkline(&run.best_speedup_curve),
+    )
+}
+
+fn search_health(view: &SearchHealthView) -> String {
+    if view.runs.is_empty() {
+        return "<p class=\"empty\">no search history supplied (--search-log)</p>".to_string();
+    }
+    let rows: String = view.runs.iter().map(search_run_row).collect();
+    format!(
+        "<p>Per-generation MAP-Elites health per run: QD-score, archive coverage, \
+         mutation acceptance and best speedup curves.</p>\
+         <table><tr><th>run</th><th>task</th><th>device</th><th>gens</th>\
+         <th>QD</th><th></th><th>coverage</th><th></th>\
+         <th>acceptance</th><th></th><th>best</th><th></th></tr>{rows}</table>"
+    )
+}
+
+/// Render the full dashboard. `have_journal` distinguishes "journal
+/// supplied but empty" from "no journal configured".
+pub fn render(artifacts: &Artifacts, have_journal: bool) -> String {
+    let trajectory = TrajectoryView::build(&artifacts.rows);
+    let lat = LatencyView::build(&artifacts.events);
+    let rel = ReliabilityView::build(&artifacts.journal);
+    let search = SearchHealthView::build(&artifacts.search);
+
+    let mut out = String::with_capacity(16 * 1024);
+    out.push_str(
+        "<!DOCTYPE html>\n<html lang=\"en\"><head><meta charset=\"utf-8\">\
+         <title>KernelFoundry run report</title>\n<style>\n\
+         body{font:14px/1.5 system-ui,sans-serif;margin:2rem auto;max-width:72rem;\
+         padding:0 1rem;color:#1c2733}\n\
+         h1{font-size:1.5rem}h2{font-size:1.15rem;border-bottom:2px solid #2a7ae2;\
+         padding-bottom:.2rem;margin-top:2rem}\n\
+         table{border-collapse:collapse;width:100%;margin:.5rem 0}\n\
+         th,td{border:1px solid #d5dde5;padding:.25rem .5rem;text-align:left;\
+         vertical-align:middle}\n\
+         th{background:#eef3f8}\n\
+         td.num{text-align:right;font-variant-numeric:tabular-nums}\n\
+         td.stage,td.run{font-family:ui-monospace,monospace;font-size:.85em}\n\
+         .empty{color:#7a8794}\n\
+         .meta{color:#51606e;font-size:.9em}\n\
+         svg.spark{display:block}\n\
+         </style></head><body>\n<h1>KernelFoundry run report</h1>\n",
+    );
+    let _ = write!(
+        out,
+        "<p class=\"meta\">sources: {} database rows · {} trace events · \
+         {} journal records · {} search-history rows</p>\n",
+        artifacts.rows.len(),
+        artifacts.events.len(),
+        artifacts.journal.len(),
+        artifacts.search.len(),
+    );
+    section(&mut out, "Job lifecycle coverage", &stage_coverage(artifacts));
+    section(&mut out, "Speedup trajectories", &trajectories(&trajectory));
+    section(&mut out, "Latency breakdown", &latency(&lat));
+    section(&mut out, "Reliability", &reliability(&rel, have_journal));
+    section(&mut out, "Search health", &search_health(&search));
+    out.push_str("</body></html>\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceEvent;
+
+    #[test]
+    fn empty_artifacts_render_a_complete_page() {
+        let html = render(&Artifacts::default(), false);
+        assert!(html.starts_with("<!DOCTYPE html>"));
+        assert!(html.ends_with("</html>\n"));
+        for s in stage::ALL {
+            assert!(html.contains(s), "stage {s} missing from the dashboard");
+        }
+        for title in [
+            "Speedup trajectories",
+            "Latency breakdown",
+            "Reliability",
+            "Search health",
+        ] {
+            assert!(html.contains(title), "{title} section missing");
+        }
+        assert!(!html.contains("<script"), "dashboard must carry no JS");
+    }
+
+    #[test]
+    fn sparkline_is_inline_svg() {
+        let svg = sparkline(&[1.0, 3.0, 2.0]);
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.contains("polyline"));
+        assert_eq!(sparkline(&[]), "<span class=\"empty\">—</span>");
+    }
+
+    #[test]
+    fn content_is_escaped() {
+        let mut a = Artifacts::default();
+        let bad = "<script>alert(1)</script>";
+        for (s, ts) in [("dispatched", 1.0), ("compiled", 2.0)] {
+            a.events.push(TraceEvent {
+                stage: s.to_string(),
+                job_id: 1,
+                trace_id: "t".to_string(),
+                device: Some(bad.to_string()),
+                ts_ms: ts,
+            });
+        }
+        let html = render(&a, false);
+        assert!(html.contains("&lt;script&gt;"), "device name must render escaped");
+        assert!(!html.contains(bad), "raw device name must not appear");
+    }
+}

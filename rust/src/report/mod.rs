@@ -1,0 +1,37 @@
+//! The search observatory: cross-run analytics over the append-only
+//! JSONL stores (ROADMAP "cross-run analytics").
+//!
+//! The repo persists four JSONL sources — results
+//! [`crate::dist::Database`] rows, [`crate::obs::TraceSink`] lifecycle
+//! events, [`crate::service::Journal`] records, and the per-generation
+//! search history this module's [`SearchLog`] adds — and this subsystem
+//! turns them into typed, order-independent views (DESIGN.md §9):
+//!
+//! * [`views::TrajectoryView`] — best speedup per (task, MAP-Elites
+//!   cell, device) with run-over-run deltas;
+//! * [`views::LatencyView`] — queue-wait / compile / exec / commit
+//!   percentiles per device lane, from trace-event deltas;
+//! * [`views::ReliabilityView`] — crash / replay / lost-unit /
+//!   lease-takeover counts folded from the journal;
+//! * [`views::SearchHealthView`] — QD-score, coverage and acceptance
+//!   curves per generation per run.
+//!
+//! On top of the views: [`regression::detect`] (the
+//! `kernelfoundry report regressions --baseline <db>` gate, nonzero
+//! exit on regression) and [`html::render`] (a single self-contained
+//! HTML dashboard with inline SVG sparklines, no JS).
+//!
+//! JSONL stays the append-only source of truth; every view is a pure
+//! fold over reloaded rows, so the analytics layer can be rebuilt from
+//! the artifacts of any past run.
+
+pub mod history;
+pub mod html;
+pub mod regression;
+pub mod views;
+
+pub use history::{SearchLog, SearchStatsRow};
+pub use regression::{detect, Regression, RegressionConfig};
+pub use views::{
+    Artifacts, LatencyView, ReliabilityView, RowFilter, SearchHealthView, TrajectoryView,
+};

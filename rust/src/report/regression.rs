@@ -1,0 +1,178 @@
+//! Per-device regression detection between two results databases.
+//!
+//! `kernelfoundry report regressions --baseline <db>` compares the best
+//! kernel per (task, device) in the current database against a
+//! historical baseline database and reports every key whose speedup
+//! dropped by more than a configurable tolerance. The CLI exits nonzero
+//! when any regression is found, so the check gates CI the same way
+//! `scripts/bench_gate.py` gates service throughput.
+
+use super::views::{row_device, RowFilter};
+use crate::dist::DbRow;
+use std::collections::BTreeMap;
+
+/// Thresholds for the detector.
+#[derive(Debug, Clone, Copy)]
+pub struct RegressionConfig {
+    /// Maximum tolerated speedup drop, as a fraction of the baseline
+    /// (0.10 = a current best more than 10% below baseline regresses).
+    pub max_speedup_drop: f64,
+    /// Whether a (task, device) present in the baseline but absent from
+    /// the current database counts as a regression (default: it does —
+    /// a silently vanished result is worse than a slower one).
+    pub missing_is_regression: bool,
+}
+
+impl Default for RegressionConfig {
+    fn default() -> RegressionConfig {
+        RegressionConfig {
+            max_speedup_drop: 0.10,
+            missing_is_regression: true,
+        }
+    }
+}
+
+/// One detected regression.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    /// Task id.
+    pub task_id: String,
+    /// Device name (`-` when the rows carry none).
+    pub device: String,
+    /// Best speedup in the baseline database.
+    pub baseline_speedup: f64,
+    /// Best speedup in the current database (0 when missing).
+    pub current_speedup: f64,
+    /// Fractional drop: `1 - current / baseline`.
+    pub drop_frac: f64,
+    /// Whether the key is entirely missing from the current database.
+    pub missing: bool,
+}
+
+/// Best speedup per (task, device) over correct rows — the key space
+/// both sides of the comparison are reduced to.
+pub fn best_by_task_device(rows: &[DbRow], filter: &RowFilter) -> BTreeMap<(String, String), f64> {
+    let mut best: BTreeMap<(String, String), f64> = BTreeMap::new();
+    for row in rows.iter().filter(|r| r.is_correct() && filter.matches(r)) {
+        let device = row_device(row).unwrap_or("-").to_string();
+        let entry = best.entry((row.task_id.clone(), device)).or_insert(0.0);
+        if row.speedup > *entry {
+            *entry = row.speedup;
+        }
+    }
+    best
+}
+
+/// Compare current against baseline; returns regressions sorted by
+/// severity (largest drop first). Keys only in the current database
+/// (new tasks/devices) are never regressions.
+pub fn detect(
+    baseline: &[DbRow],
+    current: &[DbRow],
+    filter: &RowFilter,
+    cfg: &RegressionConfig,
+) -> Vec<Regression> {
+    let base = best_by_task_device(baseline, filter);
+    let cur = best_by_task_device(current, filter);
+    let mut out = Vec::new();
+    for ((task_id, device), &baseline_speedup) in &base {
+        if baseline_speedup <= 0.0 {
+            continue;
+        }
+        match cur.get(&(task_id.clone(), device.clone())) {
+            Some(&current_speedup) => {
+                let drop_frac = 1.0 - current_speedup / baseline_speedup;
+                if drop_frac > cfg.max_speedup_drop {
+                    out.push(Regression {
+                        task_id: task_id.clone(),
+                        device: device.clone(),
+                        baseline_speedup,
+                        current_speedup,
+                        drop_frac,
+                        missing: false,
+                    });
+                }
+            }
+            None if cfg.missing_is_regression => out.push(Regression {
+                task_id: task_id.clone(),
+                device: device.clone(),
+                baseline_speedup,
+                current_speedup: 0.0,
+                drop_frac: 1.0,
+                missing: true,
+            }),
+            None => {}
+        }
+    }
+    out.sort_by(|a, b| b.drop_frac.total_cmp(&a.drop_frac));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(run: &str, task: &str, speedup: f64) -> DbRow {
+        DbRow {
+            run: run.to_string(),
+            method: "service".to_string(),
+            idx: 0,
+            task_id: task.to_string(),
+            genome_id: 1,
+            produced_by: "gpt-4.1".to_string(),
+            outcome: "correct".to_string(),
+            coords: [0, 0, 0],
+            fitness: 1.0,
+            speedup,
+            time_ms: 0.5,
+            baseline_ms: 1.0,
+        }
+    }
+
+    #[test]
+    fn detects_drops_beyond_tolerance_only() {
+        let base = vec![
+            row("cat:a|b580|sycl|s1|i2|p2", "a", 2.0),
+            row("cat:b|b580|sycl|s1|i2|p2", "b", 2.0),
+        ];
+        let cur = vec![
+            row("cat:a|b580|sycl|s1|i2|p2", "a", 1.0), // 50% drop
+            row("cat:b|b580|sycl|s1|i2|p2", "b", 1.9), // 5% drop, tolerated
+        ];
+        let found = detect(&base, &cur, &RowFilter::default(), &RegressionConfig::default());
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].task_id, "a");
+        assert_eq!(found[0].device, "b580");
+        assert!((found[0].drop_frac - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_keys_regress_unless_disabled() {
+        let base = vec![row("cat:a|b580|sycl|s1|i2|p2", "a", 2.0)];
+        let cur: Vec<DbRow> = Vec::new();
+        let found = detect(&base, &cur, &RowFilter::default(), &RegressionConfig::default());
+        assert_eq!(found.len(), 1);
+        assert!(found[0].missing);
+        let lax = RegressionConfig {
+            missing_is_regression: false,
+            ..RegressionConfig::default()
+        };
+        assert!(detect(&base, &cur, &RowFilter::default(), &lax).is_empty());
+    }
+
+    #[test]
+    fn new_keys_and_improvements_never_regress() {
+        let base = vec![row("cat:a|b580|sycl|s1|i2|p2", "a", 2.0)];
+        let cur = vec![
+            row("cat:a|b580|sycl|s1|i2|p2", "a", 3.0),
+            row("cat:new|lnl|sycl|s1|i2|p2", "new", 0.5),
+        ];
+        assert!(detect(&base, &cur, &RowFilter::default(), &RegressionConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn identical_databases_pass() {
+        let rows = vec![row("cat:a|b580|sycl|s1|i2|p2", "a", 2.0)];
+        assert!(detect(&rows, &rows, &RowFilter::default(), &RegressionConfig::default()).is_empty());
+    }
+}

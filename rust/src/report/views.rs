@@ -1,0 +1,659 @@
+//! Typed, order-independent analytics views over the four JSONL
+//! sources.
+//!
+//! Every view is a *fold*: it buckets rows/events by a key and combines
+//! within each bucket with commutative operations (min, max, count,
+//! per-bucket sort), so the result is independent of file order — the
+//! property `tests/report_suite.rs` pins. The one deliberate exception
+//! is [`ReliabilityView`]: the journal is a write-ahead log whose
+//! *sequence* carries meaning (a lease following a different owner's
+//! lease without a release is a takeover), so that view folds in record
+//! order.
+
+use super::history::{SearchLog, SearchStatsRow};
+use crate::dist::{Database, DbRow};
+use crate::obs::trace::{stage, TraceEvent, TraceSink};
+use crate::service::journal::{Journal, JournalRecord};
+use crate::tasks::catalog;
+use crate::util::stats::percentile;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Everything `kernelfoundry report` reads: the four JSONL sources,
+/// each optional (an unset source yields empty views, never an error).
+#[derive(Default)]
+pub struct Artifacts {
+    /// Results-database rows (`--db`).
+    pub rows: Vec<DbRow>,
+    /// Job-lifecycle trace events (`--trace`).
+    pub events: Vec<TraceEvent>,
+    /// Write-ahead journal records (`--journal`).
+    pub journal: Vec<JournalRecord>,
+    /// Per-generation search-history rows (`--search-log`).
+    pub search: Vec<SearchStatsRow>,
+}
+
+impl Artifacts {
+    /// Load every configured source. A `None` path loads nothing; a
+    /// missing trace/journal/search file is an empty source (they are
+    /// all optional sidecars); a missing or corrupt database is an
+    /// error (it is the primary source).
+    pub fn load(
+        db: Option<&Path>,
+        trace: Option<&Path>,
+        journal: Option<&Path>,
+        search: Option<&Path>,
+    ) -> Result<Artifacts, String> {
+        let mut a = Artifacts::default();
+        if let Some(path) = db {
+            let store = Database::new();
+            store.load(path).map_err(|e| e.to_string())?;
+            a.rows = store.rows();
+        }
+        if let Some(path) = trace {
+            a.events = TraceSink::load(path);
+        }
+        if let Some(path) = journal {
+            if path.exists() {
+                a.journal = Journal::load_records(path).map_err(|e| e.to_string())?;
+            }
+        }
+        if let Some(path) = search {
+            a.search = SearchLog::load(path);
+        }
+        Ok(a)
+    }
+}
+
+/// The device a database row ran on. Service cache rows carry the full
+/// cache key (`fp|device|language|s..|i..|p..`) in `run`; rows from the
+/// `serve` subcommand carry no device.
+pub fn row_device(row: &DbRow) -> Option<&str> {
+    if row.run.contains('|') {
+        row.run.split('|').nth(1)
+    } else {
+        None
+    }
+}
+
+/// The suite a row's task belongs to, when the task is in the catalog.
+pub fn row_suite(row: &DbRow) -> Option<&'static str> {
+    catalog::find_task(&row.task_id).map(|t| t.suite.name())
+}
+
+/// Canonicalize a `--suite` filter argument: short CLI names (`l1`,
+/// `l2`, `rkb`, `onednn`, `custom`, matching `kernelfoundry tasks`) map
+/// to the catalog suite names; full names pass through.
+pub fn canonical_suite(arg: &str) -> String {
+    match arg {
+        "l1" => "kernelbench-l1".to_string(),
+        "l2" => "kernelbench-l2".to_string(),
+        "rkb" => "robust-kbench".to_string(),
+        other => other.to_string(),
+    }
+}
+
+/// Row filter shared by `report` and the regression detector.
+#[derive(Debug, Clone, Default)]
+pub struct RowFilter {
+    /// Keep only rows that ran on this device (`None` = all).
+    pub device: Option<String>,
+    /// Keep only rows whose task belongs to this suite (`None` = all).
+    pub suite: Option<String>,
+}
+
+impl RowFilter {
+    /// Whether a row passes the filter. A device filter drops rows
+    /// whose device is unknown (no `|`-keyed run); a suite filter drops
+    /// rows whose task is not in the catalog.
+    pub fn matches(&self, row: &DbRow) -> bool {
+        if let Some(want) = &self.device {
+            if row_device(row) != Some(want.as_str()) {
+                return false;
+            }
+        }
+        if let Some(want) = &self.suite {
+            if row_suite(row) != Some(want.as_str()) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Best fitness/speedup pair under the engine's best-kernel rule
+/// (max fitness, ties broken by speedup).
+fn better(a: (f64, f64), b: (f64, f64)) -> (f64, f64) {
+    if b.0 > a.0 || (b.0 == a.0 && b.1 > a.1) {
+        b
+    } else {
+        a
+    }
+}
+
+/// One (task, cell, device) trajectory: its all-time best and the
+/// per-run bests it moved through.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrajectoryPoint {
+    /// Task id.
+    pub task_id: String,
+    /// MAP-Elites cell coordinates.
+    pub coords: [usize; 3],
+    /// Device name, `-` when the row's run carries none.
+    pub device: String,
+    /// Best fitness across all runs.
+    pub best_fitness: f64,
+    /// Best speedup across all runs (paired with `best_fitness` by the
+    /// engine's fitness-then-speedup rule).
+    pub best_speedup: f64,
+    /// Per-run best speedup, sorted by run id.
+    pub runs: Vec<(String, f64)>,
+    /// Run-over-run delta: last run's best speedup minus the previous
+    /// run's (0 with fewer than two runs).
+    pub delta: f64,
+    /// Correct rows folded into this point.
+    pub n_rows: usize,
+}
+
+/// Speedup trajectories: best-per-(task, cell, device) over time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TrajectoryView {
+    /// One point per occupied (task, cell, device), sorted by key.
+    pub points: Vec<TrajectoryPoint>,
+}
+
+impl TrajectoryView {
+    /// Fold correct rows into trajectories. Order-independent: every
+    /// per-bucket combine is a commutative max, and run ordering comes
+    /// from sorting run ids, not file order.
+    pub fn build(rows: &[DbRow]) -> TrajectoryView {
+        type Key = (String, [usize; 3], String);
+        let mut buckets: BTreeMap<Key, (BTreeMap<String, (f64, f64)>, usize)> = BTreeMap::new();
+        for row in rows.iter().filter(|r| r.is_correct()) {
+            let device = row_device(row).unwrap_or("-").to_string();
+            let key = (row.task_id.clone(), row.coords, device);
+            let (per_run, n) = buckets.entry(key).or_default();
+            let entry = per_run.entry(row.run.clone()).or_insert((f64::NEG_INFINITY, 0.0));
+            *entry = better(*entry, (row.fitness, row.speedup));
+            *n += 1;
+        }
+        let points = buckets
+            .into_iter()
+            .map(|((task_id, coords, device), (per_run, n_rows))| {
+                let best = per_run
+                    .values()
+                    .copied()
+                    .fold((f64::NEG_INFINITY, 0.0), better);
+                let runs: Vec<(String, f64)> =
+                    per_run.into_iter().map(|(run, (_f, s))| (run, s)).collect();
+                let delta = if runs.len() >= 2 {
+                    runs[runs.len() - 1].1 - runs[runs.len() - 2].1
+                } else {
+                    0.0
+                };
+                TrajectoryPoint {
+                    task_id,
+                    coords,
+                    device,
+                    best_fitness: best.0,
+                    best_speedup: best.1,
+                    runs,
+                    delta,
+                    n_rows,
+                }
+            })
+            .collect();
+        TrajectoryView { points }
+    }
+}
+
+/// The per-stage latency segments derived from trace events:
+/// (label, from-stage, to-stage).
+pub const STAGE_SEGMENTS: &[(&str, &str, &str)] = &[
+    ("queue-wait", stage::QUEUED, stage::DISPATCHED),
+    ("compile", stage::DISPATCHED, stage::COMPILED),
+    ("exec", stage::COMPILED, stage::EXECUTED),
+    ("commit", stage::EXECUTED, stage::COMMITTED),
+];
+
+/// Raw per-(device, segment) latency samples, in milliseconds.
+///
+/// For each job: the segment start is the earliest matching event (the
+/// `queued` start is job-scoped; every other stage is scoped to the
+/// device lane that emitted it), the end is that device's earliest
+/// end-stage event. Earliest-event selection makes the fold
+/// order-independent; segments whose endpoints are missing or inverted
+/// (merged sinks with skewed clocks) are skipped rather than invented.
+pub fn stage_deltas(events: &[TraceEvent]) -> BTreeMap<(String, String), Vec<f64>> {
+    // (job) -> queued ts; (job, device) -> stage -> min ts.
+    let mut queued: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut by_lane: BTreeMap<(u64, String), BTreeMap<&str, f64>> = BTreeMap::new();
+    for ev in events {
+        if ev.stage == stage::QUEUED {
+            let entry = queued.entry(ev.job_id).or_insert(f64::INFINITY);
+            *entry = entry.min(ev.ts_ms);
+        }
+        if let Some(device) = &ev.device {
+            let lane = by_lane.entry((ev.job_id, device.clone())).or_default();
+            for (_, from, to) in STAGE_SEGMENTS {
+                if ev.stage == *from || ev.stage == *to {
+                    let entry = lane.entry(if ev.stage == *from { *from } else { *to });
+                    let slot = entry.or_insert(f64::INFINITY);
+                    *slot = slot.min(ev.ts_ms);
+                }
+            }
+        }
+    }
+    let mut out: BTreeMap<(String, String), Vec<f64>> = BTreeMap::new();
+    for ((job, device), lane) in &by_lane {
+        for (label, from, to) in STAGE_SEGMENTS {
+            let start = if *from == stage::QUEUED {
+                queued.get(job).copied()
+            } else {
+                lane.get(from).copied()
+            };
+            let (Some(start), Some(end)) = (start, lane.get(to).copied()) else {
+                continue;
+            };
+            if !start.is_finite() || !end.is_finite() || end < start {
+                continue;
+            }
+            out.entry((device.clone(), label.to_string()))
+                .or_default()
+                .push(end - start);
+        }
+    }
+    // Deterministic sample order regardless of event order.
+    for samples in out.values_mut() {
+        samples.sort_by(f64::total_cmp);
+    }
+    out
+}
+
+/// Latency summary of one (device, segment) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyLane {
+    /// Device lane.
+    pub device: String,
+    /// Segment label (see [`STAGE_SEGMENTS`]).
+    pub segment: String,
+    /// Samples folded in.
+    pub n: usize,
+    /// Median, ms.
+    pub p50: f64,
+    /// 90th percentile, ms.
+    pub p90: f64,
+    /// 99th percentile, ms.
+    pub p99: f64,
+    /// Minimum, ms.
+    pub min: f64,
+    /// Maximum, ms.
+    pub max: f64,
+}
+
+/// Latency breakdown: queue-wait / compile / exec / commit percentiles
+/// per device lane.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencyView {
+    /// One summary per (device, segment) with at least one sample.
+    pub lanes: Vec<LatencyLane>,
+}
+
+impl LatencyView {
+    /// Summarize [`stage_deltas`] into percentiles.
+    pub fn build(events: &[TraceEvent]) -> LatencyView {
+        let lanes = stage_deltas(events)
+            .into_iter()
+            .map(|((device, segment), samples)| LatencyLane {
+                device,
+                segment,
+                n: samples.len(),
+                p50: percentile(&samples, 50.0),
+                p90: percentile(&samples, 90.0),
+                p99: percentile(&samples, 99.0),
+                min: samples[0],
+                max: samples[samples.len() - 1],
+            })
+            .collect();
+        LatencyView { lanes }
+    }
+}
+
+/// Reliability counters folded from the write-ahead journal.
+///
+/// Unlike the other views this fold is order-*dependent* by design: the
+/// journal is a log whose sequence carries meaning (ownership changes,
+/// dispatch-before-commit), so records are consumed in write order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReliabilityView {
+    /// `submit` records (jobs accepted).
+    pub submits: usize,
+    /// `dispatch` records (units handed to a lane).
+    pub dispatches: usize,
+    /// `commit` records (units durably published).
+    pub commits: usize,
+    /// `fail` records.
+    pub fails: usize,
+    /// Units cancelled (summed over `cancel` records' device lists).
+    pub cancelled_units: usize,
+    /// Extra `dispatch` records for a unit already dispatched once —
+    /// crash-replay re-runs (at-least-once execution made visible).
+    pub replayed_dispatches: usize,
+    /// Units dispatched but never committed / failed / cancelled by the
+    /// end of the log: in flight at a crash or shutdown.
+    pub lost_units: usize,
+    /// Distinct owner acquisitions (initial lease per owner session).
+    pub sessions: usize,
+    /// Clean `release` records.
+    pub clean_releases: usize,
+    /// A `lease` by a new owner while another owner held the journal
+    /// (no intervening `release`): a stale-lease takeover.
+    pub lease_takeovers: usize,
+}
+
+impl ReliabilityView {
+    /// Fold the record stream. `sessions - clean_releases` counts
+    /// unclean endings (crashes plus any currently-live owner).
+    pub fn build(records: &[JournalRecord]) -> ReliabilityView {
+        let mut v = ReliabilityView::default();
+        let mut owner: Option<&str> = None;
+        // (job, device) -> (dispatches, reached a terminal record).
+        let mut units: BTreeMap<(u64, &str), (usize, bool)> = BTreeMap::new();
+        for rec in records {
+            match rec {
+                JournalRecord::Lease { owner: o, .. } => {
+                    match owner {
+                        Some(cur) if cur == o.as_str() => {} // heartbeat
+                        Some(_) => {
+                            v.lease_takeovers += 1;
+                            v.sessions += 1;
+                            owner = Some(o.as_str());
+                        }
+                        None => {
+                            v.sessions += 1;
+                            owner = Some(o.as_str());
+                        }
+                    }
+                }
+                JournalRecord::Release { owner: o, .. } => {
+                    if owner == Some(o.as_str()) {
+                        v.clean_releases += 1;
+                        owner = None;
+                    }
+                }
+                JournalRecord::Submit { .. } => v.submits += 1,
+                JournalRecord::Dispatch { job_id, device } => {
+                    v.dispatches += 1;
+                    let unit = units.entry((*job_id, device.as_str())).or_default();
+                    if unit.0 > 0 && !unit.1 {
+                        v.replayed_dispatches += 1;
+                    }
+                    unit.0 += 1;
+                    unit.1 = false; // a re-dispatch reopens the unit
+                }
+                JournalRecord::Commit { job_id, device, .. } => {
+                    v.commits += 1;
+                    units.entry((*job_id, device.as_str())).or_default().1 = true;
+                }
+                JournalRecord::Fail { job_id, device, .. } => {
+                    v.fails += 1;
+                    units.entry((*job_id, device.as_str())).or_default().1 = true;
+                }
+                JournalRecord::Cancel { job_id, devices } => {
+                    v.cancelled_units += devices.len();
+                    for device in devices {
+                        units.entry((*job_id, device.as_str())).or_default().1 = true;
+                    }
+                }
+            }
+        }
+        v.lost_units = units.values().filter(|(d, done)| *d > 0 && !done).count();
+        v
+    }
+
+    /// Unclean session endings: owner acquisitions never released.
+    pub fn unclean_sessions(&self) -> usize {
+        self.sessions.saturating_sub(self.clean_releases)
+    }
+}
+
+/// One run's search-health curves, indexed by generation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchRunCurve {
+    /// Run identifier (the fleet's cache key, or the CLI run label).
+    pub run: String,
+    /// Task id.
+    pub task_id: String,
+    /// Device name.
+    pub device: String,
+    /// QD-score per generation.
+    pub qd_curve: Vec<f64>,
+    /// Coverage per generation.
+    pub coverage_curve: Vec<f64>,
+    /// Acceptance rate per generation.
+    pub acceptance_curve: Vec<f64>,
+    /// Best speedup per generation.
+    pub best_speedup_curve: Vec<f64>,
+    /// Evaluations at the last generation.
+    pub evaluations: usize,
+}
+
+impl SearchRunCurve {
+    /// Generations recorded.
+    pub fn generations(&self) -> usize {
+        self.qd_curve.len()
+    }
+
+    /// Final value of a curve (0 when empty).
+    pub fn final_of(curve: &[f64]) -> f64 {
+        curve.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Search health: QD-score / coverage / acceptance curves per
+/// generation per run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SearchHealthView {
+    /// One curve set per run, sorted by run id.
+    pub runs: Vec<SearchRunCurve>,
+}
+
+impl SearchHealthView {
+    /// Fold rows into per-run curves. Order-independent: rows bucket by
+    /// run and sort by generation; a duplicated generation (the same
+    /// run re-executed after crash replay) keeps the later recording
+    /// (max `ts_ms`, ties by max attempts).
+    pub fn build(rows: &[SearchStatsRow]) -> SearchHealthView {
+        let mut by_run: BTreeMap<String, BTreeMap<usize, SearchStatsRow>> = BTreeMap::new();
+        for row in rows {
+            let gens = by_run.entry(row.run.clone()).or_default();
+            match gens.get(&row.generation) {
+                Some(cur)
+                    if (cur.ts_ms, cur.attempts) >= (row.ts_ms, row.attempts) => {}
+                _ => {
+                    gens.insert(row.generation, row.clone());
+                }
+            }
+        }
+        let runs = by_run
+            .into_iter()
+            .map(|(run, gens)| {
+                let ordered: Vec<&SearchStatsRow> = gens.values().collect();
+                let last = ordered.last().expect("non-empty bucket");
+                SearchRunCurve {
+                    run,
+                    task_id: last.task_id.clone(),
+                    device: last.device.clone(),
+                    qd_curve: ordered.iter().map(|r| r.qd_score).collect(),
+                    coverage_curve: ordered.iter().map(|r| r.coverage).collect(),
+                    acceptance_curve: ordered.iter().map(|r| r.acceptance).collect(),
+                    best_speedup_curve: ordered.iter().map(|r| r.best_speedup).collect(),
+                    evaluations: last.evaluations,
+                }
+            })
+            .collect();
+        SearchHealthView { runs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db_row(run: &str, task: &str, coords: [usize; 3], fitness: f64, speedup: f64) -> DbRow {
+        DbRow {
+            run: run.to_string(),
+            method: "service".to_string(),
+            idx: 0,
+            task_id: task.to_string(),
+            genome_id: 1,
+            produced_by: "gpt-4.1".to_string(),
+            outcome: "correct".to_string(),
+            coords,
+            fitness,
+            speedup,
+            time_ms: 0.5,
+            baseline_ms: 1.0,
+        }
+    }
+
+    fn ev(stage_name: &str, job: u64, device: Option<&str>, ts: f64) -> TraceEvent {
+        TraceEvent {
+            stage: stage_name.to_string(),
+            job_id: job,
+            trace_id: "t".to_string(),
+            device: device.map(str::to_string),
+            ts_ms: ts,
+        }
+    }
+
+    #[test]
+    fn trajectory_extracts_device_and_run_deltas() {
+        let rows = vec![
+            db_row("cat:t|b580|sycl|s1|i2|p2", "t", [0, 0, 0], 0.8, 1.5),
+            db_row("cat:t|b580|sycl|s2|i2|p2", "t", [0, 0, 0], 0.9, 2.0),
+            db_row("serve", "t", [0, 0, 0], 0.7, 1.2), // no device
+        ];
+        let v = TrajectoryView::build(&rows);
+        assert_eq!(v.points.len(), 2, "device-less rows bucket separately");
+        let b580 = v.points.iter().find(|p| p.device == "b580").unwrap();
+        assert_eq!(b580.best_speedup, 2.0);
+        assert_eq!(b580.runs.len(), 2);
+        assert!((b580.delta - 0.5).abs() < 1e-12, "run-over-run delta");
+        let bare = v.points.iter().find(|p| p.device == "-").unwrap();
+        assert_eq!(bare.best_speedup, 1.2);
+    }
+
+    #[test]
+    fn trajectory_skips_incorrect_rows() {
+        let mut bad = db_row("r", "t", [0, 0, 0], 0.2, 0.0);
+        bad.outcome = "compile_error".to_string();
+        assert!(TrajectoryView::build(&[bad]).points.is_empty());
+    }
+
+    #[test]
+    fn latency_segments_per_device() {
+        let events = vec![
+            ev(stage::SUBMIT, 1, None, 0.0),
+            ev(stage::QUEUED, 1, None, 1.0),
+            ev(stage::DISPATCHED, 1, Some("b580"), 4.0),
+            ev(stage::COMPILED, 1, Some("b580"), 6.0),
+            ev(stage::EXECUTED, 1, Some("b580"), 16.0),
+            ev(stage::COMMITTED, 1, Some("b580"), 17.0),
+            ev(stage::DISPATCHED, 1, Some("lnl"), 2.0),
+            ev(stage::COMPILED, 1, Some("lnl"), 3.0),
+        ];
+        let v = LatencyView::build(&events);
+        let lane = |d: &str, s: &str| v.lanes.iter().find(|l| l.device == d && l.segment == s);
+        assert_eq!(lane("b580", "queue-wait").unwrap().p50, 3.0);
+        assert_eq!(lane("b580", "compile").unwrap().p50, 2.0);
+        assert_eq!(lane("b580", "exec").unwrap().p50, 10.0);
+        assert_eq!(lane("b580", "commit").unwrap().p50, 1.0);
+        assert_eq!(lane("lnl", "queue-wait").unwrap().p50, 1.0);
+        assert_eq!(lane("lnl", "compile").unwrap().p50, 1.0);
+        assert!(lane("lnl", "exec").is_none(), "open segments are skipped");
+    }
+
+    #[test]
+    fn reliability_counts_takeovers_replays_and_losses() {
+        let lease = |o: &str, ts: f64| JournalRecord::Lease {
+            owner: o.to_string(),
+            ts_ms: ts,
+        };
+        let dispatch = |job: u64| JournalRecord::Dispatch {
+            job_id: job,
+            device: "b580".to_string(),
+        };
+        let records = vec![
+            lease("a", 1.0),
+            lease("a", 2.0), // heartbeat, not a session
+            dispatch(1),
+            dispatch(2),
+            lease("b", 3.0), // stale takeover: no release from "a"
+            dispatch(1),     // replayed after the crash
+            JournalRecord::Fail {
+                job_id: 1,
+                device: "b580".to_string(),
+                error: "x".to_string(),
+            },
+            JournalRecord::Release {
+                owner: "b".to_string(),
+                ts_ms: 4.0,
+            },
+        ];
+        let v = ReliabilityView::build(&records);
+        assert_eq!(v.sessions, 2);
+        assert_eq!(v.lease_takeovers, 1);
+        assert_eq!(v.clean_releases, 1);
+        assert_eq!(v.unclean_sessions(), 1);
+        assert_eq!(v.replayed_dispatches, 1);
+        assert_eq!(v.fails, 1);
+        assert_eq!(v.lost_units, 1, "job 2 never reached a terminal record");
+    }
+
+    #[test]
+    fn search_health_orders_generations_and_dedupes_replays() {
+        let mk = |generation: usize, qd: f64, ts: f64| SearchStatsRow {
+            run: "r".to_string(),
+            task_id: "t".to_string(),
+            device: "b580".to_string(),
+            generation,
+            qd_score: qd,
+            coverage: 0.1,
+            best_fitness: 0.5,
+            best_speedup: 1.1,
+            acceptance: 0.5,
+            insertions: 1,
+            attempts: 2,
+            occupied: 1,
+            evaluations: 4,
+            ts_ms: ts,
+        };
+        // Shuffled generations + a replayed generation 0 (later ts wins).
+        let rows = vec![mk(1, 2.0, 10.0), mk(0, 1.0, 5.0), mk(0, 1.5, 20.0)];
+        let v = SearchHealthView::build(&rows);
+        assert_eq!(v.runs.len(), 1);
+        assert_eq!(v.runs[0].qd_curve, vec![1.5, 2.0]);
+        assert_eq!(v.runs[0].generations(), 2);
+    }
+
+    #[test]
+    fn row_filters_by_device_and_suite() {
+        let service_row = db_row("cat:20_LeakyReLU|lnl|sycl|s1|i2|p2", "20_LeakyReLU", [0; 3], 0.5, 1.0);
+        let f = RowFilter {
+            device: Some("lnl".to_string()),
+            suite: Some(canonical_suite("l1")),
+        };
+        assert!(f.matches(&service_row));
+        let other_dev = RowFilter {
+            device: Some("b580".to_string()),
+            ..RowFilter::default()
+        };
+        assert!(!other_dev.matches(&service_row));
+        let wrong_suite = RowFilter {
+            suite: Some(canonical_suite("onednn")),
+            ..RowFilter::default()
+        };
+        assert!(!wrong_suite.matches(&service_row));
+    }
+}

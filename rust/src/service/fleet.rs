@@ -27,6 +27,7 @@ use crate::eval::ExecBackend;
 use crate::hwsim::DeviceProfile;
 use crate::obs::trace::stage;
 use crate::obs::{labeled, Registry, TraceSink};
+use crate::report::SearchLog;
 use crate::tasks::{catalog, custom};
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -67,6 +68,7 @@ pub struct Fleet {
 impl Fleet {
     /// Spawn one lane thread per configured device. Lanes run until the
     /// queue shuts down (draining remaining units first).
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         cfg: &ServiceConfig,
         queue: &Arc<JobQueue>,
@@ -75,6 +77,7 @@ impl Fleet {
         journal: Option<&Arc<Journal>>,
         obs: &Arc<Registry>,
         trace: Option<&Arc<TraceSink>>,
+        search_log: Option<&Arc<SearchLog>>,
     ) -> Fleet {
         let mut lanes = Vec::new();
         let mut handles = Vec::new();
@@ -91,6 +94,7 @@ impl Fleet {
             let journal = journal.map(Arc::clone);
             let obs = Arc::clone(obs);
             let trace = trace.map(Arc::clone);
+            let search_log = search_log.map(Arc::clone);
             let compile_workers = cfg.compile_workers;
             let exec_workers = cfg.exec_workers;
             let queue_capacity = cfg.queue_capacity;
@@ -106,6 +110,7 @@ impl Fleet {
                     journal,
                     obs,
                     trace,
+                    search_log,
                     stats,
                 )
             }));
@@ -188,6 +193,7 @@ fn lane_main(
     journal: Option<Arc<Journal>>,
     obs: Arc<Registry>,
     trace: Option<Arc<TraceSink>>,
+    search_log: Option<Arc<SearchLog>>,
     stats: Arc<LaneStats>,
 ) {
     while let Some(unit) = queue.pop_for(device.name) {
@@ -226,6 +232,7 @@ fn lane_main(
                 &jobs,
                 &obs,
                 trace.as_ref(),
+                search_log.as_ref(),
                 &stats,
             )
         }))
@@ -304,6 +311,7 @@ fn run_unit(
     jobs: &JobTable,
     obs: &Arc<Registry>,
     trace: Option<&Arc<TraceSink>>,
+    search_log: Option<&Arc<SearchLog>>,
     stats: &LaneStats,
 ) -> Result<DeviceResult, String> {
     let task = match &unit.spec.task {
@@ -322,6 +330,11 @@ fn run_unit(
     config.evolution.population = unit.spec.population;
 
     let mut engine = EvolutionEngine::new(config, task, ExecBackend::HwSim(device.clone()));
+    // Search-history rows are labeled with the unit's cache key, so a
+    // run's per-generation curves join its persisted result row.
+    if let Some(log) = search_log {
+        engine.attach_search_log(Arc::clone(log), &cache_key(&unit.spec, device.name));
+    }
     // The lane's Fig. 4 cluster, seeded so every verdict matches the
     // engine's inline pipeline (see `EvalPipeline::seed`).
     let pool = WorkerPool::new(ClusterConfig {
@@ -382,7 +395,7 @@ mod tests {
     fn lane_runs_a_unit_to_completion() {
         let (cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
         let obs = Arc::new(Registry::new());
-        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None, &obs, None);
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None, &obs, None, None);
         assert!(fleet.has_device("b580"));
         assert!(!fleet.has_device("lnl"));
 
@@ -441,7 +454,7 @@ mod tests {
     fn lane_survives_a_failing_unit() {
         let (cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
         let obs = Arc::new(Registry::new());
-        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None, &obs, None);
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None, &obs, None, None);
         let spec = JobSpec::catalog("no_such_task", "b580");
         jobs.insert(Job {
             id: 1,

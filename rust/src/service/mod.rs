@@ -50,6 +50,7 @@ use crate::dist::ClusterConfig;
 use crate::hwsim::DeviceProfile;
 use crate::obs::trace::stage;
 use crate::obs::{Registry, TraceSink};
+use crate::report::SearchLog;
 use crate::tasks::{catalog, custom};
 use crate::util::json::Json;
 use journal::ReplayUnitState;
@@ -93,6 +94,12 @@ pub struct ServiceConfig {
     /// a job's timeline from this file. Lives naturally next to the
     /// journal (same append-only whole-line discipline).
     pub trace_path: Option<PathBuf>,
+    /// JSONL path of the per-generation search-history log (`None` =
+    /// history off). Every fleet-lane evolution run appends one
+    /// [`crate::report::SearchStatsRow`] per generation, keyed by the
+    /// unit's cache key; `kernelfoundry report --search-log` folds the
+    /// rows into QD-score / coverage / acceptance curves.
+    pub search_log_path: Option<PathBuf>,
 }
 
 /// Default journal owner-lease TTL (seconds).
@@ -110,6 +117,7 @@ impl Default for ServiceConfig {
             journal_path: None,
             lease_ttl: Duration::from_secs(DEFAULT_LEASE_TTL_SECS),
             trace_path: None,
+            search_log_path: None,
         }
     }
 }
@@ -232,6 +240,13 @@ impl KernelService {
                     .map_err(|e| format!("trace sink {}: {e}", path.display()))?,
             )),
         };
+        let search_log = match &cfg.search_log_path {
+            None => None,
+            Some(path) => Some(Arc::new(
+                SearchLog::open(path)
+                    .map_err(|e| format!("search log {}: {e}", path.display()))?,
+            )),
+        };
         let cache = match &cfg.db_path {
             None => ResultCache::in_memory(),
             Some(path) => ResultCache::with_database(path).map_err(|e| e.to_string())?,
@@ -347,12 +362,28 @@ impl KernelService {
             jobs.insert(job);
         }
         if !to_queue.is_empty() {
+            // Replayed units re-enter the queue like fresh ones; their
+            // timelines record the re-queueing (before the push, so a
+            // lane can never emit `dispatched` ahead of it).
+            if let Some(t) = &trace {
+                for unit in &to_queue {
+                    t.stage(stage::QUEUED, unit.job_id, None);
+                }
+            }
             queue
                 .push(to_queue)
                 .map_err(|e| format!("re-enqueueing replayed units: {e}"))?;
         }
-        let fleet =
-            Fleet::spawn(&cfg, &queue, &jobs, &cache, journal.as_ref(), &obs, trace.as_ref());
+        let fleet = Fleet::spawn(
+            &cfg,
+            &queue,
+            &jobs,
+            &cache,
+            journal.as_ref(),
+            &obs,
+            trace.as_ref(),
+            search_log.as_ref(),
+        );
 
         // Heartbeat: refresh the owner lease at ttl/3 so a standby
         // daemon can distinguish "owner is alive" from "owner is gone".
@@ -495,6 +526,12 @@ impl KernelService {
         let state = job.state();
         self.jobs.insert(job);
         if !cached {
+            // Trace `queued` before the push: once a unit is in the
+            // queue a lane can pop it immediately, and its `dispatched`
+            // event must never precede `queued` in the sink.
+            if let Some(t) = &self.trace {
+                t.stage(stage::QUEUED, id, None);
+            }
             if let Err(e) = self.queue.push(to_queue) {
                 self.jobs.remove(id);
                 // Compensating record: without it, replay would
@@ -513,9 +550,6 @@ impl KernelService {
                     t.stage(stage::CANCELLED, id, None);
                 }
                 return Err(e.to_string());
-            }
-            if let Some(t) = &self.trace {
-                t.stage(stage::QUEUED, id, None);
             }
         } else {
             // A fully cached job never visits a lane; its timeline

@@ -1,0 +1,550 @@
+//! Report-subsystem tests (ISSUE 8): property tests pinning the
+//! analytics folds (order independence vs brute force, quantile
+//! bounds), the `report regressions` exit-code contract, and the
+//! observability end-to-end — a journaled + traced + search-logged
+//! daemon whose artifacts feed `kernelfoundry report --html`.
+
+use kernelfoundry::dist::DbRow;
+use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::obs::{stage, TraceEvent, TraceSink};
+use kernelfoundry::report::history::{SearchLog, SearchStatsRow};
+use kernelfoundry::report::views::{stage_deltas, LatencyView, SearchHealthView, TrajectoryView};
+use kernelfoundry::service::{
+    proto, Client, JobSpec, KernelService, Request, Server, ServiceConfig,
+};
+use kernelfoundry::util::json::Json;
+use kernelfoundry::util::prop::{check_cases, Gen};
+use kernelfoundry::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Property: trajectory fold is order-independent and matches brute force
+// ---------------------------------------------------------------------------
+
+/// Row spec: (task idx, run idx, coords idx, fitness, speedup, correct).
+type RowSpec = (usize, usize, usize, f64, f64, bool);
+
+const TASKS: [&str; 2] = ["20_LeakyReLU", "synthetic_other"];
+const RUNS: [&str; 4] = [
+    "cat:20_LeakyReLU|b580|sycl|s1|i3|p2",
+    "cat:20_LeakyReLU|b580|sycl|s2|i3|p2",
+    "cat:20_LeakyReLU|lnl|sycl|s1|i3|p2",
+    "serve-run", // no `|`: device unknown, buckets under "-"
+];
+const COORDS: [[usize; 3]; 2] = [[0, 0, 0], [1, 2, 0]];
+
+fn spec_row(spec: &RowSpec) -> DbRow {
+    let (task, run, coords, fitness, speedup, correct) = *spec;
+    DbRow {
+        run: RUNS[run % RUNS.len()].to_string(),
+        method: "service".to_string(),
+        idx: 0,
+        task_id: TASKS[task % TASKS.len()].to_string(),
+        genome_id: 1,
+        produced_by: "gpt-4.1".to_string(),
+        outcome: if correct { "correct" } else { "compile_error" }.to_string(),
+        coords: COORDS[coords % COORDS.len()],
+        fitness,
+        speedup,
+        time_ms: 0.5,
+        baseline_ms: 1.0,
+    }
+}
+
+struct RowSpecs;
+impl Gen for RowSpecs {
+    type Value = Vec<RowSpec>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = rng.below(60);
+        (0..n)
+            .map(|_| {
+                (
+                    rng.below(TASKS.len()),
+                    rng.below(RUNS.len()),
+                    rng.below(COORDS.len()),
+                    rng.f64() * 2.0,
+                    rng.f64() * 3.0,
+                    rng.below(4) != 0, // mostly correct rows
+                )
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        if v.is_empty() {
+            vec![]
+        } else {
+            vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+        }
+    }
+}
+
+fn device_of(run: &str) -> String {
+    if run.contains('|') {
+        run.split('|').nth(1).unwrap_or("-").to_string()
+    } else {
+        "-".to_string()
+    }
+}
+
+#[test]
+fn prop_trajectory_fold_is_order_independent_and_matches_brute_force() {
+    check_cases(0x9e901, 150, &RowSpecs, |specs| {
+        let rows: Vec<DbRow> = specs.iter().map(spec_row).collect();
+        let view = TrajectoryView::build(&rows);
+
+        // Order independence: any shuffle folds to the identical view.
+        let mut shuffled = rows.clone();
+        Rng::new(specs.len() as u64 + 7).shuffle(&mut shuffled);
+        if TrajectoryView::build(&shuffled) != view {
+            return false;
+        }
+
+        // Brute force: global lexicographic max of (fitness, speedup)
+        // per (task, cell, device) over correct rows.
+        let mut expect: BTreeMap<(String, [usize; 3], String), (f64, f64)> = BTreeMap::new();
+        for row in rows.iter().filter(|r| r.is_correct()) {
+            let key = (row.task_id.clone(), row.coords, device_of(&row.run));
+            let e = expect.entry(key).or_insert((f64::NEG_INFINITY, 0.0));
+            if row.fitness > e.0 || (row.fitness == e.0 && row.speedup > e.1) {
+                *e = (row.fitness, row.speedup);
+            }
+        }
+        if view.points.len() != expect.len() {
+            return false;
+        }
+        view.points.iter().all(|p| {
+            let key = (p.task_id.clone(), p.coords, p.device.clone());
+            match expect.get(&key) {
+                Some(&(f, s)) => {
+                    (p.best_fitness - f).abs() < 1e-12 && (p.best_speedup - s).abs() < 1e-12
+                }
+                None => false,
+            }
+        })
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Property: latency quantiles are bounded by the segment samples
+// ---------------------------------------------------------------------------
+
+/// Event spec: (stage idx, job id, device idx (0 = none), ts).
+type EventSpec = (usize, u64, usize, f64);
+
+const DEVICES: [&str; 2] = ["b580", "lnl"];
+
+fn spec_event(spec: &EventSpec) -> TraceEvent {
+    let (stage_idx, job, device, ts) = *spec;
+    TraceEvent {
+        stage: stage::ALL[stage_idx % stage::ALL.len()].to_string(),
+        job_id: job,
+        trace_id: format!("t{job}"),
+        device: if device == 0 {
+            None
+        } else {
+            Some(DEVICES[(device - 1) % DEVICES.len()].to_string())
+        },
+        ts_ms: ts,
+    }
+}
+
+struct EventSpecs;
+impl Gen for EventSpecs {
+    type Value = Vec<EventSpec>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = rng.below(80);
+        (0..n)
+            .map(|_| {
+                (
+                    rng.below(stage::ALL.len()),
+                    rng.below(4) as u64,
+                    rng.below(DEVICES.len() + 1),
+                    rng.f64() * 1000.0,
+                )
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        if v.is_empty() {
+            vec![]
+        } else {
+            vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+        }
+    }
+}
+
+#[test]
+fn prop_latency_quantiles_bounded_by_segment_min_max() {
+    check_cases(0x9e902, 150, &EventSpecs, |specs| {
+        let events: Vec<TraceEvent> = specs.iter().map(spec_event).collect();
+        let view = LatencyView::build(&events);
+        let deltas = stage_deltas(&events);
+        // Lanes and delta buckets are the same key set.
+        if view.lanes.len() != deltas.len() {
+            return false;
+        }
+        view.lanes.iter().all(|l| {
+            let key = (l.device.clone(), l.segment.clone());
+            let Some(samples) = deltas.get(&key) else {
+                return false;
+            };
+            let lo = samples[0];
+            let hi = samples[samples.len() - 1];
+            l.n == samples.len()
+                && l.min == lo
+                && l.max == hi
+                && lo <= l.p50
+                && l.p50 <= l.p90
+                && l.p90 <= l.p99
+                && l.p99 <= hi
+        })
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Property: search-health fold is order-independent, curves per generation
+// ---------------------------------------------------------------------------
+
+/// Stats spec: (run idx, generation, qd, ts, attempts).
+type StatsSpec = (usize, usize, f64, f64, usize);
+
+fn spec_stats(spec: &StatsSpec) -> SearchStatsRow {
+    let (run, generation, qd, ts, attempts) = *spec;
+    SearchStatsRow {
+        run: format!("run{run}"),
+        task_id: "20_LeakyReLU".to_string(),
+        device: "b580".to_string(),
+        generation,
+        qd_score: qd,
+        coverage: 0.25,
+        best_fitness: 0.5,
+        best_speedup: 1.1,
+        acceptance: 0.5,
+        insertions: 1,
+        attempts,
+        occupied: 1,
+        evaluations: 4,
+        ts_ms: ts,
+    }
+}
+
+struct StatsSpecs;
+impl Gen for StatsSpecs {
+    type Value = Vec<StatsSpec>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = rng.below(50);
+        (0..n)
+            .map(|_| {
+                (
+                    rng.below(3),
+                    rng.below(6),
+                    rng.f64() * 10.0,
+                    // Continuous timestamps: exact (ts, attempts) ties
+                    // between distinct rows would make the dedup rule
+                    // keep whichever arrived first.
+                    rng.f64() * 1000.0,
+                    rng.below(8),
+                )
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        if v.is_empty() {
+            vec![]
+        } else {
+            vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+        }
+    }
+}
+
+#[test]
+fn prop_search_health_is_order_independent_with_replay_dedup() {
+    check_cases(0x9e903, 150, &StatsSpecs, |specs| {
+        let rows: Vec<SearchStatsRow> = specs.iter().map(spec_stats).collect();
+        let view = SearchHealthView::build(&rows);
+
+        let mut shuffled = rows.clone();
+        Rng::new(specs.len() as u64 + 13).shuffle(&mut shuffled);
+        if SearchHealthView::build(&shuffled) != view {
+            return false;
+        }
+
+        // Brute force: per run, per generation, the winning row is the
+        // max-(ts, attempts) recording; curves walk generations in order.
+        let mut expect: BTreeMap<String, BTreeMap<usize, (f64, usize, f64)>> = BTreeMap::new();
+        for r in &rows {
+            let gens = expect.entry(r.run.clone()).or_default();
+            let cand = (r.ts_ms, r.attempts, r.qd_score);
+            match gens.get(&r.generation) {
+                Some(&(ts, att, _)) if (ts, att) >= (cand.0, cand.1) => {}
+                _ => {
+                    gens.insert(r.generation, cand);
+                }
+            }
+        }
+        if view.runs.len() != expect.len() {
+            return false;
+        }
+        view.runs.iter().all(|run| match expect.get(&run.run) {
+            Some(gens) => {
+                let qd: Vec<f64> = gens.values().map(|&(_, _, q)| q).collect();
+                run.generations() == gens.len() && run.qd_curve == qd
+            }
+            None => false,
+        })
+    });
+}
+
+// ---------------------------------------------------------------------------
+// `report regressions` exit-code contract (drives the real binary)
+// ---------------------------------------------------------------------------
+
+fn synthetic_row(task: &str, speedup: f64) -> DbRow {
+    DbRow {
+        run: format!("cat:{task}|b580|sycl|s1|i3|p2"),
+        method: "service".to_string(),
+        idx: 0,
+        task_id: task.to_string(),
+        genome_id: 1,
+        produced_by: "gpt-4.1".to_string(),
+        outcome: "correct".to_string(),
+        coords: [0, 0, 0],
+        fitness: 1.0,
+        speedup,
+        time_ms: 0.5,
+        baseline_ms: 1.0,
+    }
+}
+
+fn write_db(path: &Path, rows: &[DbRow]) {
+    let lines: String = rows
+        .iter()
+        .map(|r| format!("{}\n", r.to_json().to_string_compact()))
+        .collect();
+    std::fs::write(path, lines).expect("write synthetic db");
+}
+
+fn report_cmd(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_kernelfoundry"))
+        .args(args)
+        .output()
+        .expect("spawn kernelfoundry")
+}
+
+#[test]
+fn regressions_subcommand_gates_with_nonzero_exit() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let base = dir.join(format!("kf_report_base_{pid}.jsonl"));
+    let cur = dir.join(format!("kf_report_cur_{pid}.jsonl"));
+    write_db(&base, &[synthetic_row("a", 2.0), synthetic_row("b", 2.0)]);
+    write_db(&cur, &[synthetic_row("a", 1.0), synthetic_row("b", 2.0)]);
+    let (base_s, cur_s) = (base.to_str().unwrap(), cur.to_str().unwrap());
+
+    // A 50% drop on task `a` beyond the 10% default tolerance: nonzero.
+    let out = report_cmd(&["report", "regressions", "--db", cur_s, "--baseline", base_s]);
+    assert!(!out.status.success(), "regressed db must exit nonzero");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("regression"), "stdout names the failure: {text}");
+    assert!(text.contains("b580"), "regressed device listed: {text}");
+    assert!(text.contains("-50.0%"), "drop percentage listed: {text}");
+
+    // Machine-readable listing carries the same verdict.
+    let out = report_cmd(&[
+        "report", "regressions", "--db", cur_s, "--baseline", base_s, "--json",
+    ]);
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("\"drop_frac\""), "{text}");
+
+    // Widening the tolerance past the drop passes.
+    let out = report_cmd(&[
+        "report",
+        "regressions",
+        "--db",
+        cur_s,
+        "--baseline",
+        base_s,
+        "--max-speedup-drop",
+        "0.6",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // A database compared against itself never regresses.
+    let out = report_cmd(&["report", "regressions", "--db", base_s, "--baseline", base_s]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("no regressions"));
+
+    // Missing --baseline is a usage error, not a silent pass.
+    let out = report_cmd(&["report", "regressions", "--db", cur_s]);
+    assert!(!out.status.success());
+
+    let _ = std::fs::remove_file(&base);
+    let _ = std::fs::remove_file(&cur);
+}
+
+// ---------------------------------------------------------------------------
+// Observability e2e: daemon → submit → result → `report --html`
+// ---------------------------------------------------------------------------
+
+/// Artifact directory for the e2e: `KF_E2E_REPORT_DIR` when set (CI
+/// keeps and uploads it), else a per-process temp subdirectory.
+fn report_dir() -> (PathBuf, bool) {
+    match std::env::var("KF_E2E_REPORT_DIR") {
+        Ok(dir) => (PathBuf::from(dir), true),
+        Err(_) => (
+            std::env::temp_dir().join(format!("kf_report_e2e_{}", std::process::id())),
+            false,
+        ),
+    }
+}
+
+fn submit(client: &mut Client, spec: JobSpec) -> u64 {
+    let resp = client.request(&Request::Submit(spec)).expect("submit rpc");
+    assert!(proto::response_ok(&resp), "submit failed: {resp}");
+    resp.get("job_id").and_then(|v| v.as_usize()).expect("job_id") as u64
+}
+
+fn poll_to_completion(client: &mut Client, id: u64) -> String {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let resp = client.request(&Request::Status(id)).expect("status rpc");
+        assert!(proto::response_ok(&resp), "status failed: {resp}");
+        let state = resp.get("state").and_then(|s| s.as_str()).unwrap().to_string();
+        if matches!(state.as_str(), "done" | "failed" | "cancelled") {
+            return state;
+        }
+        assert!(Instant::now() < deadline, "job {id} stuck in state {state}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn fetch_result(client: &mut Client, id: u64) -> Json {
+    let resp = client.request(&Request::Result(id)).expect("result rpc");
+    assert!(proto::response_ok(&resp), "result failed: {resp}");
+    resp
+}
+
+#[test]
+fn e2e_report_html_covers_every_lifecycle_stage_and_view() {
+    let (dir, keep) = report_dir();
+    std::fs::create_dir_all(&dir).expect("report dir");
+    let db = dir.join("e2e.db.jsonl");
+    let journal = dir.join("e2e.journal.jsonl");
+    let trace = dir.join("e2e.trace.jsonl");
+    let slog = dir.join("e2e.search.jsonl");
+    let html_path = dir.join("e2e.report.html");
+    for p in [&db, &journal, &trace, &slog, &html_path] {
+        let _ = std::fs::remove_file(p);
+    }
+
+    // A fully-instrumented daemon: results db + journal + trace +
+    // search history, exactly as CI runs it.
+    let service = KernelService::start(ServiceConfig {
+        devices: vec![DeviceProfile::b580()],
+        compile_workers: 1,
+        exec_workers: 2,
+        queue_capacity: 16,
+        db_path: Some(db.clone()),
+        journal_path: Some(journal.clone()),
+        trace_path: Some(trace.clone()),
+        search_log_path: Some(slog.clone()),
+        ..ServiceConfig::default()
+    })
+    .expect("service starts");
+    let mut server = Server::start(Arc::clone(&service), "127.0.0.1:0").expect("server binds");
+    let mut client = Client::connect(&server.addr().to_string()).expect("client connects");
+
+    let mut spec = JobSpec::catalog("20_LeakyReLU", "b580");
+    spec.iters = 3;
+    spec.population = 2;
+    let id = submit(&mut client, spec);
+    assert_eq!(poll_to_completion(&mut client, id), "done");
+    fetch_result(&mut client, id); // emits the terminal `responded` stage
+
+    server.shutdown();
+    server.wait();
+    service.stop();
+
+    // Every lifecycle stage of the happy path reached the trace sink.
+    let events = TraceSink::load(&trace);
+    for s in [
+        stage::SUBMIT,
+        stage::QUEUED,
+        stage::DISPATCHED,
+        stage::COMPILED,
+        stage::EXECUTED,
+        stage::COMMITTED,
+        stage::RESPONDED,
+    ] {
+        assert!(
+            events.iter().any(|e| e.stage == s),
+            "stage {s} missing from trace: {events:?}"
+        );
+    }
+
+    // The engine logged one row per generation, labeled by cache key.
+    let history = SearchLog::load(&slog);
+    assert_eq!(history.len(), 3, "one row per generation: {history:?}");
+    for (generation, row) in history.iter().enumerate() {
+        assert_eq!(row.generation, generation);
+        assert_eq!(row.device, "b580");
+        assert!(row.run.contains("20_LeakyReLU"), "run label joins the db: {}", row.run);
+    }
+
+    // The real binary renders the dashboard from the run's artifacts.
+    let out = report_cmd(&[
+        "report",
+        "--db",
+        db.to_str().unwrap(),
+        "--trace",
+        trace.to_str().unwrap(),
+        "--journal",
+        journal.to_str().unwrap(),
+        "--search-log",
+        slog.to_str().unwrap(),
+        "--html",
+        html_path.to_str().unwrap(),
+    ]);
+    assert!(
+        out.status.success(),
+        "report --html failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let html = std::fs::read_to_string(&html_path).expect("dashboard written");
+
+    for s in stage::ALL {
+        assert!(html.contains(s), "stage {s} missing from dashboard");
+    }
+    for title in [
+        "Job lifecycle coverage",
+        "Speedup trajectories",
+        "Latency breakdown",
+        "Reliability",
+        "Search health",
+    ] {
+        assert!(html.contains(title), "{title} section missing from dashboard");
+    }
+    assert!(html.contains("20_LeakyReLU"), "search-health run row present");
+    assert!(html.contains("b580"), "device lane present");
+    assert!(html.contains("<svg"), "sparklines are inline SVG");
+    assert!(!html.contains("<script"), "dashboard carries no JS");
+
+    // The regression gate runs clean against the run's own database.
+    let out = report_cmd(&[
+        "report",
+        "regressions",
+        "--db",
+        db.to_str().unwrap(),
+        "--baseline",
+        db.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    if !keep {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -3,14 +3,16 @@
 
 Compares a freshly-measured ``BENCH_service.json`` against the committed
 baseline and fails (exit 1) on a >2x throughput regression in either the
-cold (execution) or warm (cache-hit) wave.
+cold (execution) or warm (cache-hit) wave. Either way it prints a
+per-metric delta table — baseline, current, and percent change — so a
+CI log always shows *how far* each metric moved, not just pass/fail.
 
 Bootstrap mode: the first committed baseline carries ``"measured": false``
 (this repo's build environment has no Rust toolchain, so the seed baseline
 cannot carry honest numbers). An unmeasured baseline disables the
-comparison — the gate only validates the current file's shape — and CI
-stays green until a measured baseline is promoted with
-``make bench-baseline``.
+comparison — the gate only validates the current file's shape and prints
+the table with a dash for the baseline column — and CI stays green until
+a measured baseline is promoted with ``make bench-baseline``.
 
 Usage:
     python3 scripts/bench_gate.py --baseline <committed.json> --current BENCH_service.json
@@ -34,6 +36,37 @@ def load(path):
         sys.exit(f"bench gate: cannot read {path}: {e}")
 
 
+def delta_rows(baseline, current, measured):
+    """One (metric, baseline, current, delta%, status) row per metric.
+
+    Higher is better for every gated metric, so a negative delta is a
+    slowdown; `status` is FAIL only when the slowdown factor exceeds
+    MAX_REGRESSION against a measured baseline.
+    """
+    rows = []
+    for metric in GATED_METRICS:
+        cur = current[metric]
+        base = baseline.get(metric) if measured else None
+        if isinstance(base, (int, float)) and base > 0:
+            delta_pct = (cur - base) / base * 100.0
+            status = "FAIL" if base / cur > MAX_REGRESSION else "ok"
+            rows.append((metric, f"{base:.2f}", f"{cur:.2f}",
+                         f"{delta_pct:+.1f}%", status))
+        else:
+            rows.append((metric, "-", f"{cur:.2f}", "-", "n/a"))
+    return rows
+
+
+def print_table(rows):
+    headers = ("metric", "baseline", "current", "delta", "status")
+    widths = [max(len(str(r[i])) for r in rows + [headers])
+              for i in range(len(headers))]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    print("bench gate: " + fmt.format(*headers))
+    for row in rows:
+        print("bench gate: " + fmt.format(*row))
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, help="committed baseline JSON")
@@ -48,25 +81,17 @@ def main():
         if not isinstance(value, (int, float)) or value <= 0:
             sys.exit(f"bench gate: current {metric} missing or non-positive: {value!r}")
 
-    if not baseline.get("measured", False):
+    measured = bool(baseline.get("measured", False))
+    rows = delta_rows(baseline, current, measured)
+    print_table(rows)
+
+    if not measured:
         print("bench gate: baseline is a bootstrap placeholder (measured=false);")
         print("bench gate: shape check passed, comparison skipped.")
         print("bench gate: promote a measured baseline with `make bench-baseline`.")
         return
 
-    failures = []
-    for metric in GATED_METRICS:
-        base = baseline.get(metric, 0.0)
-        cur = current[metric]
-        if base <= 0:
-            continue
-        ratio = base / cur
-        status = "FAIL" if ratio > MAX_REGRESSION else "ok"
-        print(f"bench gate: {metric}: baseline {base:.2f} -> current {cur:.2f} "
-              f"({ratio:.2f}x slower) [{status}]")
-        if ratio > MAX_REGRESSION:
-            failures.append(metric)
-
+    failures = [row[0] for row in rows if row[4] == "FAIL"]
     if failures:
         sys.exit(f"bench gate: >{MAX_REGRESSION:.0f}x throughput regression in: "
                  + ", ".join(failures))

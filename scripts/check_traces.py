@@ -1,11 +1,20 @@
 #!/usr/bin/env python3
-"""CI invariant over job-lifecycle trace sinks (DESIGN.md §8).
+"""CI invariants over job-lifecycle trace sinks (DESIGN.md §8).
 
 Scans the `*.trace.jsonl` sinks the e2e suite leaves behind when
-`KF_E2E_TRACE_DIR` is set and fails if any job reached `executed`
-without a matching `committed` event — i.e. a unit produced a verdict
-that was never durably published. Torn final lines (crash-cut sinks)
-are tolerated the same way the Rust loader tolerates them.
+`KF_E2E_TRACE_DIR` is set and fails if any job violates a lifecycle
+ordering invariant:
+
+  * a job reached `executed` without a matching `committed` event —
+    i.e. a unit produced a verdict that was never durably published;
+  * a job was `dispatched` without a preceding `queued` event — i.e. a
+    lane picked up work the intake never admitted (the service writes
+    `queued` strictly before pushing a unit onto the queue, so in a
+    healthy sink the first `queued` always lands before the first
+    `dispatched`).
+
+Torn final lines (crash-cut sinks) are tolerated the same way the Rust
+loader tolerates them.
 
 Usage: check_traces.py <trace-dir>
 """
@@ -17,7 +26,7 @@ import sys
 
 
 def scan(path):
-    """Return {job_id: set(stages)} for one trace sink."""
+    """Return {job_id: [stages in file order]} for one trace sink."""
     stages = {}
     with open(path, encoding="utf-8") as fh:
         lines = fh.read().splitlines()
@@ -31,8 +40,25 @@ def scan(path):
             if i == len(lines) - 1:
                 continue  # torn tail from a crash-cut append
             raise SystemExit(f"{path}:{i + 1}: malformed mid-file trace line")
-        stages.setdefault(ev["job"], set()).add(ev["t"])
+        stages.setdefault(ev["job"], []).append(ev["t"])
     return stages
+
+
+def check_job(path, job, ordered):
+    """Return a list of invariant violations for one job's stage list."""
+    problems = []
+    seen = set(ordered)
+    if "executed" in seen and "committed" not in seen:
+        problems.append(f"{path}: job {job} has 'executed' but no "
+                        f"'committed' event (stages: {sorted(seen)})")
+    if "dispatched" in seen:
+        if "queued" not in seen:
+            problems.append(f"{path}: job {job} was 'dispatched' but never "
+                            f"'queued' (stages: {sorted(seen)})")
+        elif ordered.index("queued") > ordered.index("dispatched"):
+            problems.append(f"{path}: job {job} has 'dispatched' before "
+                            f"'queued' in write order (stages: {ordered})")
+    return problems
 
 
 def main():
@@ -46,15 +72,13 @@ def main():
     bad = []
     jobs = 0
     for path in files:
-        for job, seen in sorted(scan(path).items()):
+        for job, ordered in sorted(scan(path).items()):
             jobs += 1
-            if "executed" in seen and "committed" not in seen:
-                bad.append(f"{path}: job {job} has 'executed' but no "
-                           f"'committed' event (stages: {sorted(seen)})")
+            bad.extend(check_job(path, job, ordered))
     if bad:
         raise SystemExit("\n".join(bad))
-    print(f"OK: {jobs} job(s) across {len(files)} sink(s); "
-          "every executed job was committed")
+    print(f"OK: {jobs} job(s) across {len(files)} sink(s); every executed "
+          "job was committed and every dispatch followed its queue entry")
 
 
 if __name__ == "__main__":

@@ -5,12 +5,14 @@
 //! kernelfoundry bench      --table 1|2|3|4|11|fig3  [--out results/]
 //! kernelfoundry serve      --compile-workers N --exec-workers M (distributed demo)
 //! kernelfoundry daemon     --addr 127.0.0.1:7341 --devices lnl,b580,a6000 (service)
+//!                          [--alert-rules rules.txt --alert-log alerts.jsonl]
 //! kernelfoundry submit     --addr 127.0.0.1:7341 --task <id> --device b580|all
-//! kernelfoundry metrics    --addr 127.0.0.1:7341 (Prometheus text exposition)
-//! kernelfoundry trace      <job-id> --sink trace.jsonl (job timeline)
+//! kernelfoundry metrics    --addr 127.0.0.1:7341 [--prometheus] [--scope service|global]
+//! kernelfoundry watch      --addr 127.0.0.1:7341 [--interval 1s] [--plain] (live dashboard)
+//! kernelfoundry trace      <job-id> --sink trace.jsonl [--follow] (job timeline)
 //! kernelfoundry tasks      [--suite l1|l2|rkb|onednn] [--json]
 //! kernelfoundry report     --db runs.jsonl [--device d] [--suite s] [--trace t] [--journal j]
-//!                          [--search-log s] [--html out.html] [--top N] [--json]
+//!                          [--search-log s] [--alert-log a] [--html out.html] [--top N] [--json]
 //! kernelfoundry report regressions --db runs.jsonl --baseline old.jsonl
 //!                          [--max-speedup-drop 0.10] (exits nonzero on regression)
 //! ```
@@ -29,7 +31,7 @@ use kernelfoundry::service::{
     self, proto, Client, KernelService, Server, ServiceConfig, DEFAULT_LEASE_TTL_SECS,
 };
 use kernelfoundry::tasks::catalog;
-use kernelfoundry::util::cli::{Command, Parsed};
+use kernelfoundry::util::cli::{parse_duration_ms, Command, Parsed};
 use kernelfoundry::util::json::Json;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -48,6 +50,7 @@ fn main() -> ExitCode {
         "daemon" => cmd_daemon(rest),
         "submit" => cmd_submit(rest),
         "metrics" => cmd_metrics(rest),
+        "watch" => cmd_watch(rest),
         "trace" => cmd_trace(rest),
         "tasks" => cmd_tasks(rest),
         "report" => cmd_report(rest),
@@ -69,7 +72,7 @@ fn main() -> ExitCode {
 fn print_usage() {
     println!(
         "kernelfoundry {} — hardware-aware evolutionary GPU kernel optimization (reproduction)\n\n\
-         subcommands:\n  run      optimize kernels for one task\n  bench    regenerate a paper table/figure\n  serve    distributed worker-pool demo\n  daemon   long-running kernel-generation service (TCP JSON RPC)\n  submit   client for a running daemon (submit/status/result/cancel/stats/metrics)\n  metrics  fetch a daemon's Prometheus text exposition\n  trace    reconstruct a job's lifecycle timeline from a trace sink\n  tasks    list benchmark tasks\n  report   analytics over run artifacts (summary, HTML dashboard, regression gate)\n\nevery subcommand takes --verbose / --quiet (KF_LOG overrides both)\nuse <subcommand> --help for options",
+         subcommands:\n  run      optimize kernels for one task\n  bench    regenerate a paper table/figure\n  serve    distributed worker-pool demo\n  daemon   long-running kernel-generation service (TCP JSON RPC)\n  submit   client for a running daemon (submit/status/result/cancel/stats/metrics)\n  metrics  fetch a daemon's metrics snapshot (JSON or Prometheus text)\n  watch    live dashboard over a daemon's streaming watch RPC\n  trace    reconstruct a job's lifecycle timeline from a trace sink\n  tasks    list benchmark tasks\n  report   analytics over run artifacts (summary, HTML dashboard, regression gate)\n\nevery subcommand takes --verbose / --quiet (KF_LOG overrides both)\nuse <subcommand> --help for options",
         kernelfoundry::version()
     );
 }
@@ -312,7 +315,10 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
         .opt("journal", "", "JSONL write-ahead job journal; restart replays queued/in-flight jobs ('' = volatile)")
         .opt("lease-ttl", "30", "journal owner-lease TTL in seconds (heartbeat at ttl/3)")
         .opt("trace", "", "JSONL job-lifecycle trace sink for `kernelfoundry trace` ('' = off)")
-        .opt("search-log", "", "JSONL per-generation search history for `kernelfoundry report` ('' = off)");
+        .opt("search-log", "", "JSONL per-generation search history for `kernelfoundry report` ('' = off)")
+        .opt("alert-rules", "", "SLO rules file for the alert engine ('' = built-in defaults)")
+        .opt("alert-log", "", "JSONL the alert engine appends firing/resolved transitions to")
+        .opt("alert-interval", "", "alert evaluation cadence, e.g. 250ms | 2s (default 1s)");
     let p = with_log_flags(cmd).parse(args)?;
     apply_log_flags(&p);
     let mut devices = Vec::new();
@@ -334,6 +340,14 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
         ),
         trace_path: p.get("trace").filter(|s| !s.is_empty()).map(Into::into),
         search_log_path: p.get("search-log").filter(|s| !s.is_empty()).map(Into::into),
+        alert_rules_path: p.get("alert-rules").filter(|s| !s.is_empty()).map(Into::into),
+        alert_log_path: p.get("alert-log").filter(|s| !s.is_empty()).map(Into::into),
+        alert_interval: match p.get("alert-interval").filter(|s| !s.is_empty()) {
+            Some(s) => std::time::Duration::from_millis(
+                parse_duration_ms(s).map_err(|e| format!("--alert-interval: {e}"))? as u64,
+            ),
+            None => std::time::Duration::from_millis(service::DEFAULT_ALERT_INTERVAL_MS),
+        },
     };
     if cfg.journal_path.is_some() && kernelfoundry::service::failpoint::any_armed() {
         eprintln!(
@@ -355,6 +369,15 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
     }
     if let Some(slog) = p.get("search-log").filter(|s| !s.is_empty()) {
         println!("search log: {slog} (inspect with `kernelfoundry report --search-log {slog}`)");
+    }
+    let rules = service.alert_rule_names();
+    if !rules.is_empty() {
+        println!(
+            "alert engine: {} rule(s) [{}] (watch with `kernelfoundry watch --addr {}`)",
+            rules.len(),
+            rules.join(", "),
+            server.addr()
+        );
     }
     server.wait();
     println!("shutting down: draining queued jobs ...");
@@ -400,7 +423,7 @@ fn cmd_submit(args: &[String]) -> Result<(), String> {
             return Ok(());
         }
         "metrics" => {
-            let resp = simple(&mut client, &proto::Request::Metrics)?;
+            let resp = simple(&mut client, &proto::Request::Metrics(None))?;
             if raw {
                 println!("{}", resp.to_string_compact());
             } else {
@@ -540,16 +563,23 @@ fn cmd_submit(args: &[String]) -> Result<(), String> {
 }
 
 fn cmd_metrics(args: &[String]) -> Result<(), String> {
-    let cmd = Command::new("metrics", "fetch a daemon's metrics in Prometheus text exposition")
+    let cmd = Command::new("metrics", "fetch a daemon's metrics snapshot")
         .opt("addr", "127.0.0.1:7341", "daemon address")
-        .flag("json", "print the raw JSON response instead of the exposition text");
+        .opt("scope", "", "restrict to one registry: service | global ('' = merged)")
+        .flag("prometheus", "print the Prometheus text exposition instead of JSON")
+        .flag("json", "print the raw compact JSON response");
     let p = with_log_flags(cmd).parse(args)?;
     apply_log_flags(&p);
+    let scope = match p.get("scope").filter(|s| !s.is_empty()) {
+        None => None,
+        Some(s @ ("service" | "global")) => Some(s.to_string()),
+        Some(other) => return Err(format!("bad --scope '{other}' (service | global)")),
+    };
     let addr = p.get("addr").unwrap();
     let mut client =
         Client::connect(addr).map_err(|e| format!("connecting to daemon at {addr}: {e}"))?;
     let resp = client
-        .request(&proto::Request::Metrics)
+        .request(&proto::Request::Metrics(scope))
         .map_err(|e| e.to_string())?;
     if !proto::response_ok(&resp) {
         return Err(format!(
@@ -557,22 +587,177 @@ fn cmd_metrics(args: &[String]) -> Result<(), String> {
             resp.get("error").and_then(|e| e.as_str()).unwrap_or("unknown error")
         ));
     }
-    if p.has_flag("json") {
-        println!("{}", resp.to_string_compact());
-    } else {
+    if p.has_flag("prometheus") {
         print!(
             "{}",
             resp.get("prometheus").and_then(|v| v.as_str()).unwrap_or("")
         );
+    } else if p.has_flag("json") {
+        println!("{}", resp.to_string_compact());
+    } else {
+        println!("{}", resp.to_string_pretty());
     }
     Ok(())
+}
+
+fn cmd_watch(args: &[String]) -> Result<(), String> {
+    let about = "live dashboard over a daemon's streaming watch RPC";
+    let cmd = Command::new("watch", about)
+        .opt("addr", "127.0.0.1:7341", "daemon address")
+        .opt("interval", "1s", "metrics-frame cadence, e.g. 250ms | 1s | 1m")
+        .opt("frames", "0", "exit after N metrics frames (0 = stream until interrupted)")
+        .flag("plain", "line-stream mode: one compact JSON frame per line, no dashboard");
+    let p = with_log_flags(cmd).parse(args)?;
+    apply_log_flags(&p);
+    let interval_ms =
+        parse_duration_ms(p.get("interval").unwrap()).map_err(|e| format!("--interval: {e}"))?;
+    let max_frames = p.get_usize("frames").unwrap_or(0);
+    let plain = p.has_flag("plain");
+    let addr = p.get("addr").unwrap();
+    let mut client =
+        Client::connect(addr).map_err(|e| format!("connecting to daemon at {addr}: {e}"))?;
+    client
+        .send(&proto::Request::Watch(interval_ms as u64))
+        .map_err(|e| e.to_string())?;
+
+    let mut rules: Vec<String> = Vec::new();
+    let mut recent: std::collections::VecDeque<String> = std::collections::VecDeque::new();
+    let mut metrics_frames = 0usize;
+    loop {
+        let Some(frame) = client.next_frame().map_err(|e| e.to_string())? else {
+            if !plain {
+                println!("stream closed by daemon");
+            }
+            return Ok(());
+        };
+        if plain {
+            println!("{}", frame.to_string_compact());
+        }
+        match frame.get("kind").and_then(|k| k.as_str()) {
+            Some("hello") => {
+                if !proto::response_ok(&frame) {
+                    return Err(format!(
+                        "watch rejected: {}",
+                        frame.get("error").and_then(|e| e.as_str()).unwrap_or("unknown error")
+                    ));
+                }
+                rules = frame
+                    .get("alert_rules")
+                    .and_then(|r| r.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .filter_map(|v| v.as_str())
+                            .map(String::from)
+                            .collect()
+                    })
+                    .unwrap_or_default();
+            }
+            Some("metrics") => {
+                metrics_frames += 1;
+                if !plain {
+                    render_dashboard(addr, &frame, &rules, &recent, metrics_frames);
+                }
+                if max_frames > 0 && metrics_frames >= max_frames {
+                    return Ok(());
+                }
+            }
+            Some("trace") => {
+                push_recent(
+                    &mut recent,
+                    format!(
+                        "[trace] job {} {} {}",
+                        frame.get("job").and_then(|v| v.as_usize()).unwrap_or(0),
+                        frame.get("t").and_then(|v| v.as_str()).unwrap_or("?"),
+                        frame.get("device").and_then(|v| v.as_str()).unwrap_or("-"),
+                    ),
+                );
+            }
+            Some("alert") => {
+                push_recent(
+                    &mut recent,
+                    format!(
+                        "[ALERT] {} {} ({} {} {}, value {:.3})",
+                        frame.get("rule").and_then(|v| v.as_str()).unwrap_or("?"),
+                        frame.get("state").and_then(|v| v.as_str()).unwrap_or("?"),
+                        frame.get("metric").and_then(|v| v.as_str()).unwrap_or("?"),
+                        frame.get("op").and_then(|v| v.as_str()).unwrap_or("?"),
+                        frame.get("threshold").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        frame.get("value").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    ),
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Keep the rolling "recent events" strip bounded.
+fn push_recent(recent: &mut std::collections::VecDeque<String>, line: String) {
+    recent.push_back(line);
+    while recent.len() > 10 {
+        recent.pop_front();
+    }
+}
+
+/// Redraw the single-screen `watch` dashboard from one metrics frame.
+fn render_dashboard(
+    addr: &str,
+    frame: &Json,
+    rules: &[String],
+    recent: &std::collections::VecDeque<String>,
+    n: usize,
+) {
+    let dt = frame.get("dt_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    // Clear screen + home: a stable single-screen view, not a scroll.
+    print!("\x1b[2J\x1b[H");
+    println!("kernelfoundry watch — {addr}   frame {n}   window {dt:.0} ms");
+    if rules.is_empty() {
+        println!("alert rules: (none — start the daemon with --alert-rules/--alert-log)");
+    } else {
+        println!("alert rules: {}", rules.join(", "));
+    }
+    let section = |title: &str, key: &str| {
+        if let Some(map) = frame.get(key).and_then(|v| v.as_obj()) {
+            if !map.is_empty() {
+                println!("\n{title}");
+                for (name, v) in map {
+                    if key == "windows" {
+                        let g = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+                        println!(
+                            "  {:<42} n={:<5} p50 {:>8.2}  p90 {:>8.2}  p99 {:>8.2}",
+                            name,
+                            g("count"),
+                            g("p50"),
+                            g("p90"),
+                            g("p99")
+                        );
+                    } else {
+                        println!("  {:<42} {:>12.3}", name, v.as_f64().unwrap_or(0.0));
+                    }
+                }
+            }
+        }
+    };
+    section("derived", "derived");
+    section("gauges", "gauges");
+    section("counter rates (/s)", "rates");
+    section("windowed latencies (ms)", "windows");
+    if !recent.is_empty() {
+        println!("\nrecent events");
+        for line in recent {
+            println!("  {line}");
+        }
+    }
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
 }
 
 fn cmd_trace(args: &[String]) -> Result<(), String> {
     let cmd = Command::new("trace", "reconstruct a job's lifecycle timeline from a trace sink")
         .opt("sink", "trace.jsonl", "trace sink path (the daemon's --trace file)")
         .opt("job", "", "job id (alternative to the positional argument)")
-        .flag("json", "machine-readable output (one JSON array)");
+        .flag("follow", "tail mode: keep polling the sink, exit on the terminal event")
+        .flag("json", "machine-readable output (one array; one object per line with --follow)");
     let p = with_log_flags(cmd).parse(args)?;
     apply_log_flags(&p);
     let job_id = match (p.positional.first(), p.get("job").filter(|s| !s.is_empty())) {
@@ -585,6 +770,9 @@ fn cmd_trace(args: &[String]) -> Result<(), String> {
         (None, None) => return Err("usage: kernelfoundry trace <job-id> --sink <path>".into()),
     };
     let sink = Path::new(p.get("sink").unwrap());
+    if p.has_flag("follow") {
+        return trace_follow(sink, job_id, p.has_flag("json"));
+    }
     if !sink.exists() {
         return Err(format!(
             "trace sink {} does not exist (start the daemon with --trace <path>)",
@@ -619,6 +807,64 @@ fn cmd_trace(args: &[String]) -> Result<(), String> {
     }
     println!("total: {:.1} ms submit -> {}", prev - t0, timeline.last().unwrap().stage);
     Ok(())
+}
+
+/// `trace --follow`: re-poll the sink (the tolerant JSONL reader means
+/// a torn final line from the live daemon never aborts the tail),
+/// print events as they land, exit once the job reaches a terminal
+/// stage (`responded` / `failed` / `cancelled`).
+fn trace_follow(sink: &Path, job_id: u64, json: bool) -> Result<(), String> {
+    use kernelfoundry::obs::stage;
+    let mut printed = 0usize;
+    let mut t0 = 0.0;
+    let mut prev = 0.0;
+    loop {
+        let timeline = if sink.exists() {
+            kernelfoundry::obs::TraceSink::timeline(sink, job_id)
+        } else {
+            Vec::new()
+        };
+        for ev in &timeline[printed.min(timeline.len())..] {
+            if printed == 0 {
+                t0 = ev.ts_ms;
+                prev = ev.ts_ms;
+                if !json {
+                    println!(
+                        "job {job_id} (trace {}) — following {}",
+                        ev.trace_id,
+                        sink.display()
+                    );
+                }
+            }
+            if json {
+                println!("{}", ev.to_json().to_string_compact());
+            } else {
+                println!(
+                    "  +{:>9.1} ms  {:<10} {:<8} (+{:.1} ms)",
+                    ev.ts_ms - t0,
+                    ev.stage,
+                    ev.device.as_deref().unwrap_or("-"),
+                    ev.ts_ms - prev,
+                );
+            }
+            prev = ev.ts_ms;
+            printed += 1;
+        }
+        let terminal = timeline.last().is_some_and(|last| {
+            matches!(
+                last.stage.as_str(),
+                stage::RESPONDED | stage::FAILED | stage::CANCELLED
+            )
+        });
+        if terminal {
+            if !json {
+                let last = timeline.last().unwrap();
+                println!("total: {:.1} ms submit -> {}", prev - t0, last.stage);
+            }
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
 }
 
 fn cmd_tasks(args: &[String]) -> Result<(), String> {
@@ -666,6 +912,7 @@ fn cmd_report(args: &[String]) -> Result<(), String> {
         .opt("trace", "", "job-lifecycle trace sink (adds the latency breakdown)")
         .opt("journal", "", "write-ahead job journal (adds the reliability view)")
         .opt("search-log", "", "per-generation search history (adds the search-health view)")
+        .opt("alert-log", "", "SLO alert-transition log (adds the alert timeline)")
         .opt("html", "", "write the self-contained HTML dashboard to this path")
         .opt("max-speedup-drop", "0.10", "regression tolerance, fraction of baseline speedup")
         .flag("allow-missing", "baseline keys absent from the current database do not regress")
@@ -689,11 +936,13 @@ fn cmd_report(args: &[String]) -> Result<(), String> {
     let trace = opt_path("trace");
     let journal = opt_path("journal");
     let search = opt_path("search-log");
+    let alerts = opt_path("alert-log");
     let mut artifacts = report::Artifacts::load(
         Some(&db_path),
         trace.as_deref(),
         journal.as_deref(),
         search.as_deref(),
+        alerts.as_deref(),
     )?;
     let n = artifacts.rows.len();
     artifacts.rows.retain(|r| filter.matches(r));
@@ -771,6 +1020,22 @@ fn cmd_report(args: &[String]) -> Result<(), String> {
                 SearchRunCurve::final_of(&run.coverage_curve) * 100.0,
                 SearchRunCurve::final_of(&run.acceptance_curve) * 100.0,
                 SearchRunCurve::final_of(&run.best_speedup_curve),
+            );
+        }
+    }
+    if alerts.is_some() {
+        println!("\nalert timeline ({} transitions):", artifacts.alerts.len());
+        let t0 = artifacts.alerts.first().map(|t| t.ts_ms).unwrap_or(0.0);
+        for t in &artifacts.alerts {
+            println!(
+                "  +{:>9.1} ms  {:<10} {:<24} ({} {} {}, value {:.3})",
+                t.ts_ms - t0,
+                t.state,
+                t.rule,
+                t.metric,
+                t.op,
+                t.threshold,
+                t.value,
             );
         }
     }

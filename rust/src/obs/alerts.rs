@@ -1,0 +1,503 @@
+//! Declarative SLO rules with a debounced alert state machine.
+//!
+//! A rule states the *healthy* condition (`queue_wait_p99_ms < 500`);
+//! the rule **breaches** while that condition is false. Each rule walks
+//! an ok → pending → firing → resolved state machine: a breach first
+//! parks the rule in `pending`, and only a breach sustained for the
+//! rule's `for`-duration promotes it to `firing` (debounce); the first
+//! healthy evaluation of a firing rule emits `resolved`. Only the
+//! `firing`/`resolved` edges are externally visible — appended to the
+//! JSONL alert log, mirrored into the trace sink and published to
+//! `watch` streams — so per rule they strictly alternate, the invariant
+//! `scripts/check_alerts.py` enforces in CI.
+//!
+//! Rules load from a zero-dep text file (one rule per line):
+//!
+//! ```text
+//! # name: metric op threshold [for duration]
+//! queue-slo: queue_wait_p99_ms < 500 for 2s
+//! cache_hit_rate > 0.2
+//! lost_jobs == 0
+//! ```
+//!
+//! The engine itself is pure — [`AlertEngine::eval`] takes a metric
+//! lookup closure and an explicit clock — so the debounce behaviour is
+//! property-testable with a fake clock (`tests/obs_props.rs`).
+
+use crate::dist::load_jsonl_tolerant;
+use crate::util::cli::parse_duration_ms;
+use crate::util::json::Json;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Comparison operator of a rule's healthy condition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    /// `<`
+    Lt,
+    /// `<=`
+    Le,
+    /// `>`
+    Gt,
+    /// `>=`
+    Ge,
+    /// `==`
+    Eq,
+    /// `!=`
+    Ne,
+}
+
+impl CmpOp {
+    /// Parse the operator token; `None` for anything else.
+    pub fn parse(tok: &str) -> Option<CmpOp> {
+        match tok {
+            "<" => Some(CmpOp::Lt),
+            "<=" => Some(CmpOp::Le),
+            ">" => Some(CmpOp::Gt),
+            ">=" => Some(CmpOp::Ge),
+            "==" => Some(CmpOp::Eq),
+            "!=" => Some(CmpOp::Ne),
+            _ => None,
+        }
+    }
+
+    /// The operator's source token.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CmpOp::Lt => "<",
+            CmpOp::Le => "<=",
+            CmpOp::Gt => ">",
+            CmpOp::Ge => ">=",
+            CmpOp::Eq => "==",
+            CmpOp::Ne => "!=",
+        }
+    }
+
+    /// Is `value op threshold` true (the rule healthy)?
+    pub fn eval(&self, value: f64, threshold: f64) -> bool {
+        match self {
+            CmpOp::Lt => value < threshold,
+            CmpOp::Le => value <= threshold,
+            CmpOp::Gt => value > threshold,
+            CmpOp::Ge => value >= threshold,
+            CmpOp::Eq => value == threshold,
+            CmpOp::Ne => value != threshold,
+        }
+    }
+}
+
+/// One SLO rule: healthy while `metric op threshold` holds; fires after
+/// breaching continuously for `for_ms`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertRule {
+    /// Rule name (defaults to the metric name).
+    pub name: String,
+    /// Metric the rule watches (see `obs::window::lookup_metric`).
+    pub metric: String,
+    /// Healthy-condition operator.
+    pub op: CmpOp,
+    /// Healthy-condition threshold.
+    pub threshold: f64,
+    /// Debounce: breach must persist this long before firing (ms).
+    pub for_ms: f64,
+}
+
+impl AlertRule {
+    /// Render back to the rules-file line form.
+    pub fn to_line(&self) -> String {
+        let op = self.op.name();
+        let mut s = format!("{}: {} {op} {}", self.name, self.metric, self.threshold);
+        if self.for_ms > 0.0 {
+            s.push_str(&format!(" for {}ms", self.for_ms));
+        }
+        s
+    }
+}
+
+/// An ordered set of alert rules.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RuleSet {
+    /// The rules, in file order.
+    pub rules: Vec<AlertRule>,
+}
+
+impl RuleSet {
+    /// The built-in SLO set used when no rules file is given: queue wait
+    /// bounded, cache pulling its weight, no jobs lost to replay, and
+    /// the search still accepting candidates. Rules whose metric is not
+    /// observable yet (e.g. `cache_hit_rate` before any lookup) simply
+    /// stay frozen, so the defaults are safe on an idle daemon.
+    pub fn defaults() -> RuleSet {
+        let text = "\
+queue-wait: queue_wait_p99_ms < 500 for 2s
+cache-hit-rate: cache_hit_rate > 0.2 for 10s
+lost-jobs: lost_jobs == 0
+search-acceptance: search_acceptance > 0.01 for 10s
+";
+        RuleSet::parse(text).expect("built-in default rules parse")
+    }
+
+    /// Parse a rules file body. Blank lines and `#` comments are
+    /// skipped; any malformed line is an error naming the line number.
+    pub fn parse(text: &str) -> Result<RuleSet, String> {
+        let mut rules = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let rule = Self::parse_rule(line)
+                .map_err(|e| format!("alert rules line {}: {e}", lineno + 1))?;
+            rules.push(rule);
+        }
+        Ok(RuleSet { rules })
+    }
+
+    /// Load rules from `path`.
+    pub fn load(path: &Path) -> Result<RuleSet, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("alert rules {}: {e}", path.display()))?;
+        RuleSet::parse(&text)
+    }
+
+    fn parse_rule(line: &str) -> Result<AlertRule, String> {
+        // Optional leading `name:`.
+        let (name, rest) = match line.split_once(':') {
+            Some((n, r)) if !n.trim().contains(char::is_whitespace) => {
+                (Some(n.trim().to_string()), r.trim())
+            }
+            _ => (None, line),
+        };
+        let toks: Vec<&str> = rest.split_whitespace().collect();
+        match toks.as_slice() {
+            [metric, op, threshold] => Self::build(name, metric, op, threshold, None),
+            [metric, op, threshold, kw, dur] if *kw == "for" => {
+                Self::build(name, metric, op, threshold, Some(dur))
+            }
+            _ => Err(format!(
+                "expected `[name:] metric op threshold [for duration]`, got {line:?}"
+            )),
+        }
+    }
+
+    fn build(
+        name: Option<String>,
+        metric: &str,
+        op: &str,
+        threshold: &str,
+        dur: Option<&str>,
+    ) -> Result<AlertRule, String> {
+        let op = CmpOp::parse(op).ok_or_else(|| format!("bad operator {op:?}"))?;
+        let threshold = threshold
+            .parse::<f64>()
+            .map_err(|_| format!("bad threshold {threshold:?}"))?;
+        let for_ms = match dur {
+            Some(d) => parse_duration_ms(d)?,
+            None => 0.0,
+        };
+        Ok(AlertRule {
+            name: name.unwrap_or_else(|| metric.to_string()),
+            metric: metric.to_string(),
+            op,
+            threshold,
+            for_ms,
+        })
+    }
+}
+
+/// Internal per-rule state (pending is the debounce window).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum RuleState {
+    Ok,
+    Pending { since: f64 },
+    Firing,
+}
+
+/// One externally visible alert edge (`firing` or `resolved`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertTransition {
+    /// Rule name.
+    pub rule: String,
+    /// `"firing"` or `"resolved"`.
+    pub state: String,
+    /// Metric the rule watches.
+    pub metric: String,
+    /// Healthy-condition operator token.
+    pub op: String,
+    /// Healthy-condition threshold.
+    pub threshold: f64,
+    /// The metric value that drove the edge.
+    pub value: f64,
+    /// The rule's debounce duration (ms).
+    pub for_ms: f64,
+    /// Wall-clock Unix ms of the edge.
+    pub ts_ms: f64,
+}
+
+impl AlertTransition {
+    /// Serialize to the on-disk / on-wire JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("rule", self.rule.as_str())
+            .set("state", self.state.as_str())
+            .set("metric", self.metric.as_str())
+            .set("op", self.op.as_str())
+            .set("threshold", self.threshold)
+            .set("value", self.value)
+            .set("for_ms", self.for_ms)
+            .set("ts_ms", self.ts_ms);
+        o
+    }
+
+    /// Parse one on-disk JSON object; `None` on schema mismatch.
+    pub fn from_json(v: &Json) -> Option<AlertTransition> {
+        Some(AlertTransition {
+            rule: v.get("rule")?.as_str()?.to_string(),
+            state: v.get("state")?.as_str()?.to_string(),
+            metric: v.get("metric")?.as_str()?.to_string(),
+            op: v.get("op")?.as_str()?.to_string(),
+            threshold: v.get("threshold")?.as_f64()?,
+            value: v.get("value")?.as_f64()?,
+            for_ms: v.get("for_ms")?.as_f64()?,
+            ts_ms: v.get("ts_ms")?.as_f64()?,
+        })
+    }
+}
+
+/// The debounced state machine over a rule set. Pure: evaluation takes
+/// a metric-lookup closure and an explicit `now_ms`, so tests drive it
+/// with a fake clock.
+#[derive(Debug)]
+pub struct AlertEngine {
+    rules: Vec<AlertRule>,
+    states: Vec<RuleState>,
+}
+
+impl AlertEngine {
+    /// Engine with every rule starting in `ok`.
+    pub fn new(set: RuleSet) -> AlertEngine {
+        let states = vec![RuleState::Ok; set.rules.len()];
+        AlertEngine {
+            rules: set.rules,
+            states,
+        }
+    }
+
+    /// The engine's rules.
+    pub fn rules(&self) -> &[AlertRule] {
+        &self.rules
+    }
+
+    /// Rules currently firing.
+    pub fn firing(&self) -> usize {
+        self.states.iter().filter(|s| matches!(s, RuleState::Firing)).count()
+    }
+
+    /// Evaluate every rule against `lookup` at time `now_ms`, returning
+    /// the `firing`/`resolved` edges this tick produced. A rule whose
+    /// metric is unobservable (`lookup` returns `None`) keeps its state
+    /// frozen — a measurement gap is not a breach.
+    pub fn eval(
+        &mut self,
+        lookup: impl Fn(&str) -> Option<f64>,
+        now_ms: f64,
+    ) -> Vec<AlertTransition> {
+        let mut out = Vec::new();
+        for (rule, state) in self.rules.iter().zip(self.states.iter_mut()) {
+            let Some(value) = lookup(&rule.metric) else {
+                continue;
+            };
+            let healthy = rule.op.eval(value, rule.threshold);
+            let edge = |state: &str| AlertTransition {
+                rule: rule.name.clone(),
+                state: state.to_string(),
+                metric: rule.metric.clone(),
+                op: rule.op.name().to_string(),
+                threshold: rule.threshold,
+                value,
+                for_ms: rule.for_ms,
+                ts_ms: now_ms,
+            };
+            *state = match (*state, healthy) {
+                (RuleState::Ok, true) => RuleState::Ok,
+                (RuleState::Ok, false) if rule.for_ms <= 0.0 => {
+                    out.push(edge("firing"));
+                    RuleState::Firing
+                }
+                (RuleState::Ok, false) => RuleState::Pending { since: now_ms },
+                (RuleState::Pending { .. }, true) => RuleState::Ok,
+                (RuleState::Pending { since }, false) if now_ms - since >= rule.for_ms => {
+                    out.push(edge("firing"));
+                    RuleState::Firing
+                }
+                (s @ RuleState::Pending { .. }, false) => s,
+                (RuleState::Firing, true) => {
+                    out.push(edge("resolved"));
+                    RuleState::Ok
+                }
+                (RuleState::Firing, false) => RuleState::Firing,
+            };
+        }
+        out
+    }
+}
+
+/// Append-only JSONL alert log (whole-line writes under a mutex, the
+/// same torn-tail-tolerant discipline as every JSONL store here).
+pub struct AlertLog {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl AlertLog {
+    /// Open (creating if needed) the log at `path` for appending.
+    pub fn open(path: &Path) -> std::io::Result<AlertLog> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(AlertLog {
+            path: path.to_path_buf(),
+            file: Mutex::new(file),
+        })
+    }
+
+    /// The log's file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one transition (best-effort: I/O errors are logged, never
+    /// propagated into the ticker).
+    pub fn append(&self, t: &AlertTransition) {
+        let mut line = t.to_json().to_string_compact();
+        line.push('\n');
+        let mut file = self.file.lock().unwrap();
+        if let Err(e) = file.write_all(line.as_bytes()) {
+            crate::log_warn!("alert log {}: {e}", self.path.display());
+        }
+    }
+
+    /// Load every transition from a log file. A missing file is an
+    /// empty history; a torn final line is dropped.
+    pub fn load(path: &Path) -> Vec<AlertTransition> {
+        if !path.exists() {
+            return Vec::new();
+        }
+        match load_jsonl_tolerant(path, AlertTransition::from_json) {
+            Ok((events, _)) => events,
+            Err(e) => {
+                crate::log_warn!("alert log {}: {e}", path.display());
+                Vec::new()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn rule(line: &str) -> AlertRule {
+        RuleSet::parse(line).unwrap().rules.remove(0)
+    }
+
+    #[test]
+    fn rules_file_grammar() {
+        let set = RuleSet::parse(
+            "# comment\n\nqueue-slo: queue_wait_p99_ms < 500 for 2s\ncache_hit_rate > 0.2\nlost_jobs == 0 # trailing comment\n",
+        )
+        .unwrap();
+        assert_eq!(set.rules.len(), 3);
+        assert_eq!(set.rules[0].name, "queue-slo");
+        assert_eq!(set.rules[0].for_ms, 2_000.0);
+        assert_eq!(set.rules[1].name, "cache_hit_rate", "name defaults to metric");
+        assert_eq!(set.rules[1].op, CmpOp::Gt);
+        assert_eq!(set.rules[2].for_ms, 0.0);
+
+        for bad in ["metric <", "metric ~ 3", "m < x", "m < 1 for soon"] {
+            assert!(RuleSet::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+        assert!(!RuleSet::defaults().rules.is_empty());
+    }
+
+    #[test]
+    fn debounce_gates_firing() {
+        let mut eng = AlertEngine::new(RuleSet::parse("q < 10 for 100ms").unwrap());
+        let breach = |_: &str| Some(50.0);
+        let healthy = |_: &str| Some(1.0);
+        assert!(eng.eval(breach, 0.0).is_empty(), "breach enters pending");
+        assert!(eng.eval(breach, 50.0).is_empty(), "still inside debounce");
+        // Recovery inside the debounce window resets without any edge.
+        assert!(eng.eval(healthy, 60.0).is_empty());
+        assert!(eng.eval(breach, 70.0).is_empty());
+        let fired = eng.eval(breach, 200.0);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].state, "firing");
+        assert_eq!(eng.firing(), 1);
+        assert!(eng.eval(breach, 250.0).is_empty(), "firing is edge-triggered");
+        let resolved = eng.eval(healthy, 300.0);
+        assert_eq!(resolved.len(), 1);
+        assert_eq!(resolved[0].state, "resolved");
+        assert_eq!(eng.firing(), 0);
+    }
+
+    #[test]
+    fn zero_duration_fires_immediately_and_gaps_freeze() {
+        let mut eng = AlertEngine::new(RuleSet::parse("lost_jobs == 0").unwrap());
+        let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
+        assert!(
+            eng.eval(|m| metrics.get(m).copied(), 0.0).is_empty(),
+            "unobservable metric freezes the rule"
+        );
+        metrics.insert("lost_jobs".into(), 2.0);
+        let fired = eng.eval(|m| metrics.get(m).copied(), 1.0);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].state, "firing");
+        assert_eq!(fired[0].value, 2.0);
+        // A gap while firing stays firing (no spurious resolve).
+        metrics.clear();
+        assert!(eng.eval(|m| metrics.get(m).copied(), 2.0).is_empty());
+        assert_eq!(eng.firing(), 1);
+    }
+
+    #[test]
+    fn transitions_roundtrip_and_log() {
+        let t = AlertTransition {
+            rule: "queue-slo".into(),
+            state: "firing".into(),
+            metric: "queue_wait_p99_ms".into(),
+            op: "<".into(),
+            threshold: 500.0,
+            value: 900.0,
+            for_ms: 2_000.0,
+            ts_ms: 1_234.5,
+        };
+        assert_eq!(AlertTransition::from_json(&t.to_json()), Some(t.clone()));
+
+        let mut path = std::env::temp_dir();
+        path.push(format!("kf_alert_log_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let log = AlertLog::open(&path).unwrap();
+            log.append(&t);
+            let mut r = t.clone();
+            r.state = "resolved".into();
+            log.append(&r);
+        }
+        let loaded = AlertLog::load(&path);
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].state, "firing");
+        assert_eq!(loaded[1].state, "resolved");
+        assert!(AlertLog::load(Path::new("/nonexistent/alerts.jsonl")).is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rule_to_line_roundtrips() {
+        for line in ["q: queue_wait_p99_ms < 500 for 2000ms", "lost_jobs == 0"] {
+            let r = rule(line);
+            assert_eq!(rule(&r.to_line()), r);
+        }
+    }
+}

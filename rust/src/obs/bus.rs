@@ -1,0 +1,66 @@
+//! In-process fan-out bus for live `watch` frames.
+//!
+//! The daemon publishes job-lifecycle trace events and alert
+//! transitions as JSON frames; each open `watch` connection subscribes
+//! and drains its own mpsc channel. Publishing is fire-and-forget:
+//! a subscriber whose receiver is gone (client disconnected) is pruned
+//! on the next publish, and with no subscribers a publish is a no-op —
+//! the bus never blocks the job path.
+
+use crate::util::json::Json;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+/// Multi-subscriber broadcast of JSON frames.
+#[derive(Debug, Default)]
+pub struct EventBus {
+    subs: Mutex<Vec<Sender<Json>>>,
+}
+
+impl EventBus {
+    /// A bus with no subscribers.
+    pub fn new() -> EventBus {
+        EventBus::default()
+    }
+
+    /// Attach a new subscriber; every frame published after this call
+    /// is delivered to the returned receiver until it is dropped.
+    pub fn subscribe(&self) -> Receiver<Json> {
+        let (tx, rx) = channel();
+        self.subs.lock().unwrap().push(tx);
+        rx
+    }
+
+    /// Broadcast one frame to every live subscriber, pruning dead ones.
+    pub fn publish(&self, frame: &Json) {
+        let mut subs = self.subs.lock().unwrap();
+        subs.retain(|tx| tx.send(frame.clone()).is_ok());
+    }
+
+    /// Live subscribers as of the last publish.
+    pub fn subscriber_count(&self) -> usize {
+        self.subs.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fan_out_and_prune() {
+        let bus = EventBus::new();
+        let mut frame = Json::obj();
+        frame.set("kind", "test").set("n", 1usize);
+        bus.publish(&frame); // no subscribers: no-op
+        let a = bus.subscribe();
+        let b = bus.subscribe();
+        bus.publish(&frame);
+        assert_eq!(a.try_recv().unwrap().get("n").unwrap().as_usize(), Some(1));
+        assert_eq!(b.try_recv().unwrap().get("n").unwrap().as_usize(), Some(1));
+        drop(a);
+        bus.publish(&frame);
+        assert_eq!(bus.subscriber_count(), 1, "dead subscriber pruned");
+        assert_eq!(b.try_recv().unwrap().get("n").unwrap().as_usize(), Some(1));
+    }
+}

@@ -1,4 +1,5 @@
-//! Observability: metrics registry + job-lifecycle trace sink.
+//! Observability: metrics registry, trace sink, and the live layer on
+//! top of them (rolling windows, SLO alerts, watch-frame bus).
 //!
 //! The service layer (and the search/eval hot paths underneath it) report
 //! into two zero-dependency primitives:
@@ -18,14 +19,29 @@
 //!   dropped). `kernelfoundry trace <job-id>` reconstructs a job's
 //!   timeline from this file.
 //!
+//! Three live-observability modules derive from those primitives:
+//!
+//! - [`window`] — rolling-window stats from snapshot deltas: counter
+//!   rates and windowed p50/p90/p99 via histogram bucket deltas.
+//! - [`alerts`] — declarative SLO rules with an ok → pending → firing →
+//!   resolved debounced state machine and a JSONL alert log.
+//! - [`bus`] — in-process fan-out of live frames (trace events, alert
+//!   transitions) to open `watch` RPC streams.
+//!
 //! DESIGN.md §8 documents the metric naming scheme, the trace-event
-//! schema and the exposition format.
+//! schema and the exposition format; §10 covers the live layer.
 
+pub mod alerts;
+pub mod bus;
 pub mod registry;
 pub mod trace;
+pub mod window;
 
+pub use alerts::{AlertEngine, AlertLog, AlertRule, AlertTransition, CmpOp, RuleSet};
+pub use bus::EventBus;
 pub use registry::{
     bucket_bounds, global, labeled, Counter, Gauge, Histogram, HistogramSnapshot, Registry,
     Snapshot, HIST_BUCKETS,
 };
-pub use trace::{now_ms, stage, TraceEvent, TraceSink};
+pub use trace::{now_ms, stage, TraceEvent, TraceSink, FLEET_JOB_ID};
+pub use window::{DeltaTracker, WindowDelta, WindowedQuantiles};

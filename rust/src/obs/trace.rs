@@ -8,13 +8,18 @@
 //! timeline with per-stage durations.
 
 use crate::dist::load_jsonl_tolerant;
+use crate::obs::bus::EventBus;
 use crate::obs::registry::{global, labeled};
 use crate::util::json::Json;
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Reserved job id for fleet-health events (alert mirrors): real job
+/// ids start at 1, so id 0 never collides with a job timeline.
+pub const FLEET_JOB_ID: u64 = 0;
 
 /// The canonical lifecycle stage names, in timeline order.
 pub mod stage {
@@ -109,6 +114,9 @@ pub struct TraceSink {
     path: PathBuf,
     sink: Mutex<SinkFile>,
     ids: Mutex<std::collections::BTreeMap<u64, String>>,
+    /// Optional live fan-out: when attached, every job stage event is
+    /// also published as a `{"kind":"trace",...}` frame for `watch`.
+    bus: OnceLock<Arc<EventBus>>,
 }
 
 impl TraceSink {
@@ -119,7 +127,15 @@ impl TraceSink {
             path: path.to_path_buf(),
             sink: Mutex::new(SinkFile { file, last_ts: 0.0 }),
             ids: Mutex::new(std::collections::BTreeMap::new()),
+            bus: OnceLock::new(),
         })
+    }
+
+    /// Attach a live event bus: from now on every job stage event also
+    /// fans out as a `trace` frame. At most one bus per sink; later
+    /// attaches are ignored.
+    pub fn attach_bus(&self, bus: Arc<EventBus>) {
+        let _ = self.bus.set(bus);
     }
 
     /// The sink's file path.
@@ -145,9 +161,38 @@ impl TraceSink {
             .unwrap_or_else(|| format!("{job_id:08x}-replayed"))
     }
 
-    /// Append one stage event for `job_id` (timestamped now).
+    /// Append one stage event for `job_id` (timestamped now) and fan it
+    /// out to an attached bus as a `trace` frame.
     pub fn stage(&self, stage: &str, job_id: u64, device: Option<&str>) {
         let trace_id = self.trace_id(job_id);
+        let ev = self.emit(stage, job_id, trace_id, device);
+        if let Some(bus) = self.bus.get() {
+            let mut frame = ev.to_json();
+            frame.set("kind", "trace");
+            bus.publish(&frame);
+        }
+    }
+
+    /// Mirror an alert transition into the sink so the trace file keeps
+    /// a fleet-health timeline next to the job timelines. The line is a
+    /// regular [`TraceEvent`] (tolerant readers need every line to
+    /// parse): stage `alert_firing`/`alert_resolved`, the reserved
+    /// [`FLEET_JOB_ID`], and the rule name carried in the trace id as
+    /// `alert:<rule>`. Not published to the bus — the alert ticker
+    /// publishes its own richer `alert` frame.
+    pub fn mirror_alert(&self, state: &str, rule: &str) {
+        self.emit(&format!("alert_{state}"), FLEET_JOB_ID, format!("alert:{rule}"), None);
+    }
+
+    /// Write one event line under the sink mutex (monotone timestamps,
+    /// whole-line append) and bump the trace counters.
+    fn emit(
+        &self,
+        stage: &str,
+        job_id: u64,
+        trace_id: String,
+        device: Option<&str>,
+    ) -> TraceEvent {
         let mut guard = self.sink.lock().unwrap();
         let ts_ms = now_ms().max(guard.last_ts);
         guard.last_ts = ts_ms;
@@ -166,6 +211,7 @@ impl TraceSink {
         drop(guard);
         global().counter("kf_trace_events_total").inc();
         global().counter(&labeled("kf_trace_stage_total", "stage", stage)).inc();
+        ev
     }
 
     /// Load every event from a sink file. A missing file is an empty
@@ -238,6 +284,29 @@ mod tests {
         assert_eq!(tl[3].stage, stage::COMMITTED);
         assert!(tl.windows(2).all(|w| w[0].ts_ms <= w[1].ts_ms));
         assert_eq!(tl[2].device.as_deref(), Some("b580"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bus_frames_and_alert_mirror() {
+        let path = tmp("bus");
+        let _ = std::fs::remove_file(&path);
+        let sink = TraceSink::open(&path).unwrap();
+        let bus = Arc::new(EventBus::new());
+        sink.attach_bus(bus.clone());
+        let rx = bus.subscribe();
+        sink.register(3);
+        sink.stage(stage::SUBMIT, 3, None);
+        let frame = rx.try_recv().unwrap();
+        assert_eq!(frame.get("kind").unwrap().as_str(), Some("trace"));
+        assert_eq!(frame.get("t").unwrap().as_str(), Some("submit"));
+        sink.mirror_alert("firing", "queue-slo");
+        assert!(rx.try_recv().is_err(), "alert mirrors don't publish trace frames");
+        let events = TraceSink::load(&path);
+        assert_eq!(events.len(), 2, "mirror line parses as a TraceEvent");
+        assert_eq!(events[1].stage, "alert_firing");
+        assert_eq!(events[1].job_id, FLEET_JOB_ID);
+        assert_eq!(events[1].trace_id, "alert:queue-slo");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,359 @@
+//! Rolling-window derived stats from registry snapshot deltas.
+//!
+//! The registry's counters and histograms are cumulative: they only ever
+//! grow, which is the right shape for durable metrics but the wrong one
+//! for a live dashboard ("what is the queue wait *right now*?"). This
+//! module turns two successive [`Snapshot`]s into windowed views:
+//!
+//! * counter **rates** (delta / elapsed seconds);
+//! * windowed **p50/p90/p99** from histogram *bucket deltas* — the
+//!   bucket-wise difference of two cumulative histograms is itself a
+//!   valid [`HistogramSnapshot`] covering only the window, so the
+//!   existing quantile walk is reused unchanged;
+//! * the latest gauge values (gauges are already instantaneous).
+//!
+//! [`DeltaTracker`] holds the previous snapshot and produces one
+//! [`WindowDelta`] per tick; the daemon's alert ticker and every `watch`
+//! stream each own one tracker. Deriving deltas from the commutative
+//! snapshot machinery keeps the window views order-independent across
+//! merged registries — the property `tests/obs_props.rs` pins.
+
+use crate::obs::registry::{HistogramSnapshot, Snapshot};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Windowed quantile summary of one histogram over one delta window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowedQuantiles {
+    /// Observations that landed inside the window.
+    pub count: u64,
+    /// Windowed median (bucket upper bound), ms.
+    pub p50: f64,
+    /// Windowed 90th percentile, ms.
+    pub p90: f64,
+    /// Windowed 99th percentile, ms.
+    pub p99: f64,
+}
+
+impl WindowedQuantiles {
+    /// Summarize a delta histogram (all zeros when the window is empty).
+    pub fn of(delta: &HistogramSnapshot) -> WindowedQuantiles {
+        WindowedQuantiles {
+            count: delta.count(),
+            p50: delta.quantile(0.5),
+            p90: delta.quantile(0.9),
+            p99: delta.quantile(0.99),
+        }
+    }
+
+    /// The `{count, p50, p90, p99}` wire object.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", self.count as usize)
+            .set("p50", self.p50)
+            .set("p90", self.p90)
+            .set("p99", self.p99);
+        o
+    }
+}
+
+/// Bucket-wise difference `next - prev` of two cumulative histogram
+/// snapshots, saturating at zero so a reset or re-merged source can
+/// never produce negative counts. The result is a valid snapshot
+/// covering only the window, so [`HistogramSnapshot::quantile`] applies
+/// unchanged.
+pub fn histogram_delta(prev: &HistogramSnapshot, next: &HistogramSnapshot) -> HistogramSnapshot {
+    let buckets = next
+        .buckets
+        .iter()
+        .enumerate()
+        .map(|(i, n)| n.saturating_sub(prev.buckets.get(i).copied().unwrap_or(0)))
+        .collect();
+    HistogramSnapshot {
+        buckets,
+        sum: (next.sum - prev.sum).max(0.0),
+    }
+}
+
+/// One rolling-window observation: everything that changed between two
+/// snapshots, plus the instantaneous gauge values of the later one.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WindowDelta {
+    /// Timestamp of the later snapshot (Unix ms).
+    pub ts_ms: f64,
+    /// Window length in ms (0 on the first tick of a tracker).
+    pub dt_ms: f64,
+    /// Counter increments inside the window (only counters that moved).
+    pub counter_deltas: BTreeMap<String, u64>,
+    /// Counter rates per second (0 when `dt_ms` is 0).
+    pub rates: BTreeMap<String, f64>,
+    /// Latest gauge values.
+    pub gauges: BTreeMap<String, f64>,
+    /// Windowed quantiles per histogram with activity in the window.
+    pub windows: BTreeMap<String, WindowedQuantiles>,
+}
+
+impl WindowDelta {
+    /// Compute the delta between two timestamped snapshots.
+    pub fn between(prev: &Snapshot, next: &Snapshot, prev_ts: f64, next_ts: f64) -> WindowDelta {
+        let dt_ms = (next_ts - prev_ts).max(0.0);
+        let dt_s = dt_ms / 1000.0;
+        let mut counter_deltas = BTreeMap::new();
+        let mut rates = BTreeMap::new();
+        for (name, value) in &next.counters {
+            let before = prev.counters.get(name).copied().unwrap_or(0);
+            let delta = value.saturating_sub(before);
+            if delta > 0 {
+                counter_deltas.insert(name.clone(), delta);
+                rates.insert(name.clone(), if dt_s > 0.0 { delta as f64 / dt_s } else { 0.0 });
+            }
+        }
+        let empty = HistogramSnapshot {
+            buckets: Vec::new(),
+            sum: 0.0,
+        };
+        let mut windows = BTreeMap::new();
+        for (name, hist) in &next.histograms {
+            let before = prev.histograms.get(name).unwrap_or(&empty);
+            let delta = histogram_delta(before, hist);
+            if delta.count() > 0 {
+                windows.insert(name.clone(), WindowedQuantiles::of(&delta));
+            }
+        }
+        WindowDelta {
+            ts_ms: next_ts,
+            dt_ms,
+            counter_deltas,
+            rates,
+            gauges: next.gauges.clone(),
+            windows,
+        }
+    }
+
+    /// Render as a `watch` stream frame: `{"kind":"metrics", ts_ms,
+    /// dt_ms, rates:{}, deltas:{}, gauges:{}, windows:{}, derived:{}}`.
+    pub fn to_frame(&self, derived: &BTreeMap<String, f64>) -> Json {
+        let map = |m: &BTreeMap<String, f64>| {
+            let mut o = Json::obj();
+            for (k, v) in m {
+                o.set(k, *v);
+            }
+            o
+        };
+        let mut deltas = Json::obj();
+        for (k, v) in &self.counter_deltas {
+            deltas.set(k, *v as usize);
+        }
+        let mut windows = Json::obj();
+        for (k, w) in &self.windows {
+            windows.set(k, w.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("kind", "metrics")
+            .set("ts_ms", self.ts_ms)
+            .set("dt_ms", self.dt_ms)
+            .set("rates", map(&self.rates))
+            .set("deltas", deltas)
+            .set("gauges", map(&self.gauges))
+            .set("windows", windows)
+            .set("derived", map(derived));
+        o
+    }
+}
+
+/// Stateful delta producer: remembers the previous snapshot and turns
+/// each new one into a [`WindowDelta`]. The first tick compares against
+/// an empty snapshot with `dt_ms = 0` (cumulative totals as deltas,
+/// rates suppressed), so a fresh watcher sees data immediately.
+#[derive(Debug, Default)]
+pub struct DeltaTracker {
+    prev: Option<(f64, Snapshot)>,
+}
+
+impl DeltaTracker {
+    /// Tracker with no history.
+    pub fn new() -> DeltaTracker {
+        DeltaTracker::default()
+    }
+
+    /// Fold in the next snapshot, producing the window since the last
+    /// tick.
+    pub fn tick(&mut self, next: Snapshot, now_ms: f64) -> WindowDelta {
+        let delta = match &self.prev {
+            None => WindowDelta::between(&Snapshot::default(), &next, now_ms, now_ms),
+            Some((prev_ts, prev)) => WindowDelta::between(prev, &next, *prev_ts, now_ms),
+        };
+        self.prev = Some((now_ms, next));
+        delta
+    }
+}
+
+/// Derived SLO metrics computed from a window delta plus the cumulative
+/// snapshot behind it — the names the default alert rules reference.
+/// A metric whose inputs are absent (e.g. `cache_hit_rate` before any
+/// lookup) is omitted rather than invented, so alert rules on it stay
+/// frozen instead of flapping on 0/0.
+pub fn derived_metrics(delta: &WindowDelta, cumulative: &Snapshot) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    let counter = |name: &str| cumulative.counters.get(name).copied().unwrap_or(0);
+    let hits = counter("kf_cache_hits_total");
+    let misses = counter("kf_cache_misses_total");
+    if hits + misses > 0 {
+        out.insert("cache_hit_rate".to_string(), hits as f64 / (hits + misses) as f64);
+    }
+    // Queue wait: windowed p99 when the window saw samples, else the
+    // cumulative p99 (still meaningful early in a run).
+    if let Some(w) = delta.windows.get("kf_stage_queued_ms") {
+        out.insert("queue_wait_p99_ms".to_string(), w.p99);
+    } else if let Some(h) = cumulative.histograms.get("kf_stage_queued_ms") {
+        if h.count() > 0 {
+            out.insert("queue_wait_p99_ms".to_string(), h.quantile(0.99));
+        }
+    }
+    for (derived, gauge) in [
+        ("queue_depth", "kf_queue_depth"),
+        ("lost_jobs", "kf_replay_lost_jobs"),
+        ("search_acceptance", "kf_search_acceptance_rate"),
+    ] {
+        if let Some(v) = cumulative.gauges.get(gauge) {
+            out.insert(derived.to_string(), *v);
+        }
+    }
+    out
+}
+
+/// Resolve one alert-rule metric name against the derived map, the
+/// cumulative snapshot and the current window, in that order:
+///
+/// 1. a derived metric (`queue_wait_p99_ms`, `cache_hit_rate`, ...);
+/// 2. a gauge by its registry name;
+/// 3. a counter by its registry name (cumulative value);
+/// 4. `<histogram>_p50|p90|p99` — windowed quantile (absent when the
+///    window saw no samples);
+/// 5. `<counter>_rate` — windowed per-second rate.
+///
+/// `None` means "not observable right now"; the alert engine freezes
+/// the rule's state rather than treating the gap as a breach.
+pub fn lookup_metric(
+    name: &str,
+    derived: &BTreeMap<String, f64>,
+    delta: &WindowDelta,
+    cumulative: &Snapshot,
+) -> Option<f64> {
+    if let Some(v) = derived.get(name) {
+        return Some(*v);
+    }
+    if let Some(v) = cumulative.gauges.get(name) {
+        return Some(*v);
+    }
+    if let Some(v) = cumulative.counters.get(name) {
+        return Some(*v as f64);
+    }
+    for (suffix, pick) in [("_p50", 0usize), ("_p90", 1), ("_p99", 2)] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if let Some(w) = delta.windows.get(base) {
+                return Some([w.p50, w.p90, w.p99][pick]);
+            }
+        }
+    }
+    if let Some(base) = name.strip_suffix("_rate") {
+        if cumulative.counters.contains_key(base) {
+            return Some(delta.rates.get(base).copied().unwrap_or(0.0));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+
+    #[test]
+    fn delta_isolates_the_window() {
+        let r = Registry::new();
+        r.counter("c").add(5);
+        r.observe_ms("h", 1.0);
+        let mut tracker = DeltaTracker::new();
+        let first = tracker.tick(r.snapshot(), 1_000.0);
+        assert_eq!(first.dt_ms, 0.0);
+        assert_eq!(first.counter_deltas["c"], 5);
+        assert_eq!(first.rates["c"], 0.0, "no rate without elapsed time");
+
+        r.counter("c").add(10);
+        r.observe_ms("h", 400.0);
+        r.gauge("g").set(3.0);
+        let second = tracker.tick(r.snapshot(), 3_000.0);
+        assert_eq!(second.dt_ms, 2_000.0);
+        assert_eq!(second.counter_deltas["c"], 10);
+        assert!((second.rates["c"] - 5.0).abs() < 1e-9, "10 in 2s = 5/s");
+        assert_eq!(second.gauges["g"], 3.0);
+        let w = &second.windows["h"];
+        assert_eq!(w.count, 1, "only the window's observation");
+        assert!(w.p50 >= 400.0, "windowed median tracks the new sample, got {}", w.p50);
+
+        // An idle window drops out entirely.
+        let third = tracker.tick(r.snapshot(), 4_000.0);
+        assert!(third.counter_deltas.is_empty());
+        assert!(third.windows.is_empty());
+    }
+
+    #[test]
+    fn histogram_delta_is_the_second_half() {
+        let h = crate::obs::Histogram::default();
+        for v in [1.0, 2.0] {
+            h.observe(v);
+        }
+        let early = h.snapshot();
+        for v in [100.0, 200.0, 300.0] {
+            h.observe(v);
+        }
+        let late = h.snapshot();
+        let d = histogram_delta(&early, &late);
+        assert_eq!(d.count(), 3);
+        assert!((d.sum - 600.0).abs() < 1e-9);
+        // Quantiles of the delta ignore the early observations.
+        assert!(d.quantile(0.5) >= 100.0);
+    }
+
+    #[test]
+    fn derived_and_lookup_cover_the_rule_vocabulary() {
+        let r = Registry::new();
+        r.counter("kf_cache_hits_total").add(1);
+        r.counter("kf_cache_misses_total").add(3);
+        r.gauge("kf_queue_depth").set(2.0);
+        r.gauge("kf_replay_lost_jobs").set(0.0);
+        r.observe_ms("kf_stage_queued_ms", 12.0);
+        let mut tracker = DeltaTracker::new();
+        let delta = tracker.tick(r.snapshot(), 1_000.0);
+        let snap = r.snapshot();
+        let derived = derived_metrics(&delta, &snap);
+        assert!((derived["cache_hit_rate"] - 0.25).abs() < 1e-9);
+        assert!(derived["queue_wait_p99_ms"] >= 12.0);
+        assert_eq!(derived["queue_depth"], 2.0);
+        assert_eq!(derived["lost_jobs"], 0.0);
+        assert!(!derived.contains_key("search_acceptance"), "gauge never set");
+
+        let look = |name: &str| lookup_metric(name, &derived, &delta, &snap);
+        assert_eq!(look("queue_depth"), Some(2.0));
+        assert_eq!(look("kf_cache_misses_total"), Some(3.0));
+        assert!(look("kf_stage_queued_ms_p99").unwrap() >= 12.0);
+        assert_eq!(look("kf_cache_hits_total_rate"), Some(0.0));
+        assert_eq!(look("no_such_metric"), None);
+    }
+
+    #[test]
+    fn frame_shape_is_stable() {
+        let r = Registry::new();
+        r.counter("c").add(2);
+        let mut tracker = DeltaTracker::new();
+        tracker.tick(r.snapshot(), 0.0);
+        r.counter("c").add(2);
+        let delta = tracker.tick(r.snapshot(), 1_000.0);
+        let frame = delta.to_frame(&derived_metrics(&delta, &r.snapshot()));
+        assert_eq!(frame.get("kind").unwrap().as_str(), Some("metrics"));
+        assert_eq!(frame.get_path("deltas.c").unwrap().as_usize(), Some(2));
+        assert_eq!(frame.get_path("rates.c").unwrap().as_f64(), Some(2.0));
+        assert!(frame.get("windows").is_some() && frame.get("derived").is_some());
+    }
+}

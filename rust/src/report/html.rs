@@ -198,6 +198,34 @@ fn search_run_row(run: &SearchRunCurve) -> String {
     )
 }
 
+fn alert_timeline(artifacts: &Artifacts) -> String {
+    if artifacts.alerts.is_empty() {
+        return "<p class=\"empty\">no alert transitions (daemon --alert-log)</p>".to_string();
+    }
+    let t0 = artifacts.alerts[0].ts_ms;
+    let mut rows = String::new();
+    for t in &artifacts.alerts {
+        let _ = write!(
+            rows,
+            "<tr><td class=\"num\">{:.1}</td><td class=\"run\">{}</td><td>{}</td>\
+             <td class=\"stage\">{} {} {}</td><td class=\"num\">{:.3}</td></tr>",
+            t.ts_ms - t0,
+            esc(&t.rule),
+            esc(&t.state),
+            esc(&t.metric),
+            esc(&t.op),
+            t.threshold,
+            t.value,
+        );
+    }
+    format!(
+        "<p>SLO alert edges from the daemon's alert engine: `firing` when a rule's \
+         condition is breached past its debounce window, `resolved` when it heals.</p>\
+         <table><tr><th>+ms</th><th>rule</th><th>state</th><th>condition</th>\
+         <th>value</th></tr>{rows}</table>"
+    )
+}
+
 fn search_health(view: &SearchHealthView) -> String {
     if view.runs.is_empty() {
         return "<p class=\"empty\">no search history supplied (--search-log)</p>".to_string();
@@ -242,16 +270,18 @@ pub fn render(artifacts: &Artifacts, have_journal: bool) -> String {
     let _ = write!(
         out,
         "<p class=\"meta\">sources: {} database rows · {} trace events · \
-         {} journal records · {} search-history rows</p>\n",
+         {} journal records · {} search-history rows · {} alert transitions</p>\n",
         artifacts.rows.len(),
         artifacts.events.len(),
         artifacts.journal.len(),
         artifacts.search.len(),
+        artifacts.alerts.len(),
     );
     section(&mut out, "Job lifecycle coverage", &stage_coverage(artifacts));
     section(&mut out, "Speedup trajectories", &trajectories(&trajectory));
     section(&mut out, "Latency breakdown", &latency(&lat));
     section(&mut out, "Reliability", &reliability(&rel, have_journal));
+    section(&mut out, "Alert timeline", &alert_timeline(artifacts));
     section(&mut out, "Search health", &search_health(&search));
     out.push_str("</body></html>\n");
     out
@@ -274,6 +304,7 @@ mod tests {
             "Speedup trajectories",
             "Latency breakdown",
             "Reliability",
+            "Alert timeline",
             "Search health",
         ] {
             assert!(html.contains(title), "{title} section missing");

@@ -1,9 +1,10 @@
 //! The search observatory: cross-run analytics over the append-only
 //! JSONL stores (ROADMAP "cross-run analytics").
 //!
-//! The repo persists four JSONL sources — results
+//! The repo persists five JSONL sources — results
 //! [`crate::dist::Database`] rows, [`crate::obs::TraceSink`] lifecycle
-//! events, [`crate::service::Journal`] records, and the per-generation
+//! events, [`crate::service::Journal`] records, the SLO alert log the
+//! daemon's [`crate::obs::AlertEngine`] appends, and the per-generation
 //! search history this module's [`SearchLog`] adds — and this subsystem
 //! turns them into typed, order-independent views (DESIGN.md §9):
 //!

@@ -12,6 +12,7 @@
 
 use super::history::{SearchLog, SearchStatsRow};
 use crate::dist::{Database, DbRow};
+use crate::obs::alerts::{AlertLog, AlertTransition};
 use crate::obs::trace::{stage, TraceEvent, TraceSink};
 use crate::service::journal::{Journal, JournalRecord};
 use crate::tasks::catalog;
@@ -31,6 +32,8 @@ pub struct Artifacts {
     pub journal: Vec<JournalRecord>,
     /// Per-generation search-history rows (`--search-log`).
     pub search: Vec<SearchStatsRow>,
+    /// SLO alert transitions (`--alert-log`).
+    pub alerts: Vec<AlertTransition>,
 }
 
 impl Artifacts {
@@ -43,6 +46,7 @@ impl Artifacts {
         trace: Option<&Path>,
         journal: Option<&Path>,
         search: Option<&Path>,
+        alerts: Option<&Path>,
     ) -> Result<Artifacts, String> {
         let mut a = Artifacts::default();
         if let Some(path) = db {
@@ -60,6 +64,9 @@ impl Artifacts {
         }
         if let Some(path) = search {
             a.search = SearchLog::load(path);
+        }
+        if let Some(path) = alerts {
+            a.alerts = AlertLog::load(path);
         }
         Ok(a)
     }

@@ -11,13 +11,16 @@
 
 use super::proto::{self, Request};
 use super::KernelService;
+use crate::obs::window::{derived_metrics, DeltaTracker};
 use crate::util::error::{Context, Error};
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
 use std::thread;
+use std::time::{Duration, Instant};
 
 struct ServerState {
     shutdown: AtomicBool,
@@ -109,6 +112,13 @@ fn handle_connection(stream: TcpStream, service: Arc<KernelService>, state: Arc<
                     crate::obs::global().counter("kf_rpc_bad_requests_total").inc();
                     proto::error_response(&e)
                 }
+                Ok(Request::Watch(interval_ms)) => {
+                    // Streaming verb: this connection becomes a frame
+                    // stream until the client hangs up.
+                    crate::obs::global().counter("kf_rpc_watch_streams_total").inc();
+                    stream_watch(&mut writer, &service, &state, interval_ms);
+                    return;
+                }
                 Ok(req) => {
                     stop = matches!(req, Request::Shutdown);
                     service.handle(&req)
@@ -123,6 +133,67 @@ fn handle_connection(stream: TcpStream, service: Arc<KernelService>, state: Arc<
         if stop {
             trigger_shutdown(&state);
             break;
+        }
+    }
+}
+
+/// Write one newline-terminated frame; false when the client is gone.
+fn send_frame(writer: &mut TcpStream, frame: &Json) -> bool {
+    let mut wire = frame.to_string_compact();
+    wire.push('\n');
+    writer.write_all(wire.as_bytes()).is_ok()
+}
+
+/// Serve one `watch` stream: a `hello` frame, an immediate `metrics`
+/// frame (cumulative totals, so the watcher has data before the first
+/// interval elapses), then periodic metric-delta frames interleaved
+/// with live `trace`/`alert` frames from the service bus, until the
+/// client disconnects or the server shuts down.
+fn stream_watch(
+    writer: &mut TcpStream,
+    service: &Arc<KernelService>,
+    state: &ServerState,
+    interval_ms: u64,
+) {
+    let interval = Duration::from_millis(interval_ms.clamp(20, 60_000));
+    // Subscribe before the first snapshot so no frame can fall between.
+    let rx = service.watch_bus().subscribe();
+    let rules: Vec<Json> = service.alert_rule_names().into_iter().map(Json::from).collect();
+    let mut hello = Json::obj();
+    hello
+        .set("ok", true)
+        .set("kind", "hello")
+        .set("interval_ms", interval.as_millis() as usize)
+        .set("alert_rules", Json::Arr(rules));
+    let mut tracker = DeltaTracker::new();
+    let mut metrics_frame = || {
+        let snap = service.merged_snapshot();
+        let delta = tracker.tick(snap.clone(), crate::obs::now_ms());
+        let derived = derived_metrics(&delta, &snap);
+        delta.to_frame(&derived)
+    };
+    if !send_frame(writer, &hello) || !send_frame(writer, &metrics_frame()) {
+        return;
+    }
+    let mut next_tick = Instant::now() + interval;
+    loop {
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let wait = next_tick.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(wait) {
+            Ok(frame) => {
+                if !send_frame(writer, &frame) {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if !send_frame(writer, &metrics_frame()) {
+                    return;
+                }
+                next_tick = Instant::now() + interval;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
         }
     }
 }
@@ -165,6 +236,32 @@ impl Client {
     /// Send a typed request.
     pub fn request(&mut self, req: &Request) -> Result<Json, Error> {
         self.request_json(&req.to_json())
+    }
+
+    /// Send a request without reading a response — for streaming verbs
+    /// (`watch`), where the server answers with frames instead.
+    pub fn send(&mut self, req: &Request) -> Result<(), Error> {
+        let mut wire = req.to_json().to_string_compact();
+        wire.push('\n');
+        self.writer.write_all(wire.as_bytes()).context("sending request")
+    }
+
+    /// Read the next frame from a stream; `Ok(None)` on clean EOF
+    /// (server shut down or closed the stream).
+    pub fn next_frame(&mut self) -> Result<Option<Json>, Error> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self.reader.read_line(&mut line).context("reading frame")?;
+            if n == 0 {
+                return Ok(None);
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            return json::parse(trimmed).context("parsing frame").map(Some);
+        }
     }
 }
 
@@ -211,6 +308,29 @@ mod tests {
         assert!(proto::response_ok(&resp));
         server.wait(); // returns because the accept loop exited
         assert!(server.is_shutting_down());
+        service.stop();
+    }
+
+    #[test]
+    fn watch_streams_hello_and_periodic_metrics() {
+        let (service, mut server) = serve();
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        client.send(&Request::Watch(25)).unwrap();
+        let hello = client.next_frame().unwrap().unwrap();
+        assert_eq!(hello.get("kind").unwrap().as_str(), Some("hello"));
+        assert!(proto::response_ok(&hello));
+        let first = client.next_frame().unwrap().unwrap();
+        assert_eq!(first.get("kind").unwrap().as_str(), Some("metrics"));
+        // A second periodic frame arrives with no bus activity at all.
+        let second = client.next_frame().unwrap().unwrap();
+        assert_eq!(second.get("kind").unwrap().as_str(), Some("metrics"));
+        drop(client);
+        // The server keeps serving ordinary requests after the watcher
+        // hangs up.
+        let mut other = Client::connect(&server.addr().to_string()).unwrap();
+        assert!(proto::response_ok(&other.request(&Request::Stats).unwrap()));
+        server.shutdown();
+        server.wait();
         service.stop();
     }
 

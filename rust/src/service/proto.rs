@@ -12,11 +12,17 @@
 //! {"verb":"cancel","job_id":1}
 //! {"verb":"stats"}
 //! {"verb":"metrics"}
+//! {"verb":"metrics","scope":"service"}
+//! {"verb":"watch","interval_ms":1000}
 //! {"verb":"shutdown"}
 //! ```
 //!
 //! Every response carries `"ok": true|false`; failures add an `"error"`
-//! string. See `DESIGN.md` §6 for full request/response examples.
+//! string. `watch` is the one streaming verb: instead of a single
+//! response line, the server emits newline-JSON frames (metric deltas,
+//! trace events, alert transitions) until the client disconnects — see
+//! `DESIGN.md` §10. All other verbs get exactly one response line; see
+//! `DESIGN.md` §6 for full request/response examples.
 
 use super::job::JobSpec;
 use crate::util::json::Json;
@@ -38,10 +44,19 @@ pub enum Request {
     Stats,
     /// Full metrics registry in Prometheus text-exposition format
     /// (returned as the `prometheus` string field of the response).
-    Metrics,
+    /// The optional scope restricts the exposition to the daemon's own
+    /// registry (`"service"`) or the process-wide one (`"global"`);
+    /// `None` merges both, the historical behaviour.
+    Metrics(Option<String>),
+    /// Stream live frames (metric deltas every `interval_ms`, trace
+    /// events, alert transitions) until the client disconnects.
+    Watch(u64),
     /// Stop the daemon (drains queued work, then exits).
     Shutdown,
 }
+
+/// Default `watch` metrics-frame cadence (ms).
+pub const DEFAULT_WATCH_INTERVAL_MS: u64 = 1000;
 
 impl Request {
     /// Parse a request object.
@@ -62,10 +77,26 @@ impl Request {
             "result" => Ok(Request::Result(job_id()?)),
             "cancel" => Ok(Request::Cancel(job_id()?)),
             "stats" => Ok(Request::Stats),
-            "metrics" => Ok(Request::Metrics),
+            "metrics" => {
+                let scope = v.get("scope").and_then(|x| x.as_str()).map(str::to_string);
+                match scope.as_deref() {
+                    None | Some("service") | Some("global") => Ok(Request::Metrics(scope)),
+                    Some(other) => Err(format!("bad metrics scope '{other}' (service | global)")),
+                }
+            }
+            "watch" => {
+                let interval_ms = match v.get("interval_ms") {
+                    None => DEFAULT_WATCH_INTERVAL_MS,
+                    Some(x) => x
+                        .as_usize()
+                        .map(|x| x as u64)
+                        .ok_or("watch 'interval_ms' must be a non-negative number")?,
+                };
+                Ok(Request::Watch(interval_ms))
+            }
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!(
-                "unknown verb '{other}' (submit | status | result | cancel | stats | metrics | shutdown)"
+                "unknown verb '{other}' (submit | status | result | cancel | stats | metrics | watch | shutdown)"
             )),
         }
     }
@@ -92,9 +123,17 @@ impl Request {
                 o.set("verb", "stats");
                 o
             }
-            Request::Metrics => {
+            Request::Metrics(scope) => {
                 let mut o = Json::obj();
                 o.set("verb", "metrics");
+                if let Some(s) = scope {
+                    o.set("scope", s.as_str());
+                }
+                o
+            }
+            Request::Watch(interval_ms) => {
+                let mut o = Json::obj();
+                o.set("verb", "watch").set("interval_ms", *interval_ms as usize);
                 o
             }
             Request::Shutdown => {
@@ -131,7 +170,9 @@ mod tests {
             Request::Result(4),
             Request::Cancel(5),
             Request::Stats,
-            Request::Metrics,
+            Request::Metrics(None),
+            Request::Metrics(Some("service".to_string())),
+            Request::Watch(250),
             Request::Shutdown,
         ];
         for req in reqs {
@@ -148,6 +189,9 @@ mod tests {
             (r#"{"verb":"warp"}"#, "unknown verb"),
             // The unknown-verb error enumerates the full verb set.
             (r#"{"verb":"warp"}"#, "metrics"),
+            (r#"{"verb":"warp"}"#, "watch"),
+            (r#"{"verb":"metrics","scope":"galaxy"}"#, "scope"),
+            (r#"{"verb":"watch","interval_ms":"fast"}"#, "interval_ms"),
             (r#"{"verb":"status"}"#, "job_id"),
             (r#"{"verb":"cancel","job_id":"three"}"#, "job_id"),
             (r#"{"verb":"submit"}"#, "task"),

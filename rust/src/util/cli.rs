@@ -121,6 +121,26 @@ pub struct Parsed {
     pub positional: Vec<String>,
 }
 
+/// Parse a human duration into milliseconds: `"250"` / `"250ms"` are
+/// milliseconds, `"2s"`/`"1.5s"` seconds, `"1m"` minutes. Used by the
+/// alert rules `for` clause and the `watch`/daemon interval flags.
+pub fn parse_duration_ms(s: &str) -> Result<f64, String> {
+    let s = s.trim();
+    let (num, scale) = if let Some(n) = s.strip_suffix("ms") {
+        (n, 1.0)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000.0)
+    } else if let Some(n) = s.strip_suffix('m') {
+        (n, 60_000.0)
+    } else {
+        (s, 1.0)
+    };
+    match num.trim().parse::<f64>() {
+        Ok(v) if v.is_finite() && v >= 0.0 => Ok(v * scale),
+        _ => Err(format!("bad duration {s:?} (want e.g. 250ms, 2s, 1m)")),
+    }
+}
+
 impl Parsed {
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
@@ -179,6 +199,17 @@ mod tests {
     #[test]
     fn unknown_option_errors() {
         assert!(cmd().parse(&s(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn durations_parse_in_every_unit() {
+        assert_eq!(parse_duration_ms("250"), Ok(250.0));
+        assert_eq!(parse_duration_ms("250ms"), Ok(250.0));
+        assert_eq!(parse_duration_ms("2s"), Ok(2_000.0));
+        assert_eq!(parse_duration_ms("1.5s"), Ok(1_500.0));
+        assert_eq!(parse_duration_ms("1m"), Ok(60_000.0));
+        assert!(parse_duration_ms("soon").is_err());
+        assert!(parse_duration_ms("-5s").is_err());
     }
 
     #[test]

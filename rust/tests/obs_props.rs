@@ -1,9 +1,13 @@
-//! Property tests for the observability subsystem (ISSUE 7 satellite):
-//! histogram bucket-count conservation and order-independent snapshot
-//! merging, over randomized observation streams.
+//! Property tests for the observability subsystem: histogram
+//! bucket-count conservation, order-independent snapshot merging,
+//! rolling-window delta invariants (`obs::window`) and the debounced
+//! alert state machine (`obs::alerts`), over randomized streams.
 
-use kernelfoundry::obs::{bucket_bounds, Histogram, Registry, Snapshot, HIST_BUCKETS};
-use kernelfoundry::util::prop::{check, F64In, VecOf};
+use kernelfoundry::obs::window::{histogram_delta, WindowDelta, WindowedQuantiles};
+use kernelfoundry::obs::{
+    bucket_bounds, AlertEngine, Histogram, Registry, RuleSet, Snapshot, HIST_BUCKETS,
+};
+use kernelfoundry::util::prop::{check, F64In, PairOf, UsizeIn, VecOf};
 
 /// Observation values spanning every bucket: negatives (clamped to 0),
 /// sub-microsecond, mid-range, and far past the largest finite bound.
@@ -91,5 +95,96 @@ fn quantiles_track_the_bucket_bounds() {
         let bounds = bucket_bounds();
         let last = bounds[bounds.len() - 1];
         bounds.contains(&q) && (q >= v.min(last) || (q - last).abs() < 1e-12)
+    });
+}
+
+#[test]
+fn windowed_quantiles_stay_inside_the_cumulative_envelope() {
+    check(0x0b5_4, &PairOf(obs_gen(), obs_gen()), |(first, second)| {
+        let h = Histogram::default();
+        for v in first {
+            h.observe(*v);
+        }
+        let prev = h.snapshot();
+        for v in second {
+            h.observe(*v);
+        }
+        let next = h.snapshot();
+        let wq = WindowedQuantiles::of(&histogram_delta(&prev, &next));
+        if wq.count != second.len() as u64 || wq.p50 > wq.p90 || wq.p90 > wq.p99 {
+            return false;
+        }
+        // The window's buckets are a subset of the cumulative ones, so
+        // every windowed quantile is bounded by the cumulative maximum.
+        second.is_empty() || wq.p99 <= next.quantile(1.0)
+    });
+}
+
+#[test]
+fn window_rates_are_nonnegative_and_merge_order_independent() {
+    check(0x0b5_5, &obs_gen(), |values| {
+        // Three registries, as three daemons (or the per-service and
+        // global registries) would record the same stream.
+        let parts: Vec<Snapshot> = values
+            .chunks(values.len() / 3 + 1)
+            .map(|chunk| {
+                let r = Registry::new();
+                for v in chunk {
+                    r.counter("kf_jobs_submitted_total").add(v.abs() as u64 % 5 + 1);
+                    r.observe_ms("kf_stage_queued_ms", *v);
+                }
+                r.snapshot()
+            })
+            .collect();
+        let merge_in = |order: &[usize]| {
+            let mut acc = Snapshot::default();
+            for &i in order {
+                if i < parts.len() {
+                    acc.merge(&parts[i]);
+                }
+            }
+            acc
+        };
+        // prev = the first part alone; next = everything, merged in two
+        // different orders. The window must not care about the order.
+        let prev = merge_in(&[0]);
+        let fwd = WindowDelta::between(&prev, &merge_in(&[0, 1, 2]), 0.0, 2_000.0);
+        let rev = WindowDelta::between(&prev, &merge_in(&[2, 1, 0]), 0.0, 2_000.0);
+        let sane = fwd.rates.values().all(|r| *r >= 0.0 && r.is_finite())
+            && fwd.counter_deltas.values().all(|d| *d > 0);
+        fwd == rev && sane
+    });
+}
+
+#[test]
+fn alert_edges_alternate_and_respect_the_debounce() {
+    // Random breach/heal sequences at a 100 ms tick against a rule that
+    // needs a 250 ms sustained breach. Firing may only appear after the
+    // breach has been held for the full debounce window; `firing` and
+    // `resolved` strictly alternate starting with `firing`; `resolved`
+    // only ever lands on a healthy tick.
+    check(0x0b5_6, &VecOf(UsizeIn(0, 1), 64), |bits| {
+        let set = RuleSet::parse("r: m < 10 for 250ms").unwrap();
+        let mut engine = AlertEngine::new(set);
+        let step = 100.0;
+        let mut states = Vec::new();
+        let mut run = 0usize;
+        for (i, bit) in bits.iter().enumerate() {
+            let breach = *bit == 1;
+            run = if breach { run + 1 } else { 0 };
+            let value = if breach { 50.0 } else { 0.0 };
+            for t in engine.eval(|_| Some(value), i as f64 * step) {
+                match t.state.as_str() {
+                    "firing" if (run.max(1) - 1) as f64 * step < 250.0 => return false,
+                    "resolved" if breach => return false,
+                    _ => {}
+                }
+                states.push(t.state);
+            }
+        }
+        states
+            .iter()
+            .enumerate()
+            .all(|(k, s)| s == if k % 2 == 0 { "firing" } else { "resolved" })
     });
 }

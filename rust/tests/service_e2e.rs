@@ -378,7 +378,7 @@ fn metrics_verb_reports_lifecycle_histograms() {
     assert_eq!(poll_to_completion(&mut client, id), "done");
     fetch_result(&mut client, id);
 
-    let resp = client.request(&Request::Metrics).expect("metrics rpc");
+    let resp = client.request(&Request::Metrics(None)).expect("metrics rpc");
     assert!(proto::response_ok(&resp), "{resp}");
     let text = resp.get("prometheus").unwrap().as_str().unwrap().to_string();
 

@@ -1,0 +1,174 @@
+//! End-to-end test for the live-observability stack (ISSUE 9): a real
+//! daemon with a tight SLO rule, driven over loopback TCP, must stream
+//! — on ONE `watch` connection — metric-delta frames, a job's lifecycle
+//! trace events, and an alert `firing` → `resolved` pair.
+//!
+//! The breach is forced deterministically through `cache_hit_rate`: the
+//! first job is a cache miss (rate 0, breaching `> 0.2` with no
+//! debounce), and an identical resubmission is a cache hit (rate 0.5,
+//! healed). No timing races: the counters only move when the test
+//! submits.
+//!
+//! CI points `KF_E2E_TRACE_DIR` / `KF_E2E_ALERT_DIR` at directories it
+//! inspects after the suite (`scripts/check_traces.py`,
+//! `scripts/check_alerts.py`); without them the artifacts land in the
+//! system temp dir and are cleaned up.
+
+use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::obs::alerts::AlertLog;
+use kernelfoundry::obs::stage;
+use kernelfoundry::service::{proto, Client, JobSpec, KernelService, Server, ServiceConfig};
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Artifact location: under `$env` when set (kept for CI), else the
+/// system temp dir (cleaned up by the test).
+fn artifact_path(env: &str, name: &str) -> (PathBuf, bool) {
+    match std::env::var(env) {
+        Ok(dir) => {
+            let dir = PathBuf::from(dir);
+            let _ = std::fs::create_dir_all(&dir);
+            (dir.join(name), true)
+        }
+        Err(_) => (
+            std::env::temp_dir().join(format!("kf_watch_{}_{name}", std::process::id())),
+            false,
+        ),
+    }
+}
+
+/// Everything observed on the watch stream so far.
+#[derive(Default)]
+struct FrameLog {
+    metrics: usize,
+    stages: BTreeSet<String>,
+    alerts: Vec<(String, String)>,
+    firing: bool,
+    resolved: bool,
+}
+
+/// Drain frames until `done(log)`; metrics frames keep arriving every
+/// interval, so the deadline check between reads always gets a turn.
+fn read_until(watcher: &mut Client, log: &mut FrameLog, done: impl Fn(&FrameLog) -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !done(log) {
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for frames: {} metrics, stages {:?}, alerts {:?}",
+            log.metrics,
+            log.stages,
+            log.alerts
+        );
+        let frame = watcher.next_frame().expect("read frame").expect("stream stays open");
+        match frame.get("kind").and_then(|k| k.as_str()) {
+            Some("metrics") => log.metrics += 1,
+            Some("trace") => {
+                if let Some(t) = frame.get("t").and_then(|v| v.as_str()) {
+                    log.stages.insert(t.to_string());
+                }
+            }
+            Some("alert") => {
+                let get = |k: &str| frame.get(k).and_then(|v| v.as_str()).unwrap_or("?");
+                let state = get("state").to_string();
+                log.firing |= state == "firing";
+                log.resolved |= state == "resolved";
+                let rule = get("rule").to_string();
+                log.alerts.push((rule, state));
+            }
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn watch_stream_carries_metrics_traces_and_an_alert_pair() {
+    let (trace_path, keep_trace) = artifact_path("KF_E2E_TRACE_DIR", "kf_e2e_watch.trace.jsonl");
+    let (alert_path, keep_alerts) = artifact_path("KF_E2E_ALERT_DIR", "kf_e2e_watch.alerts.jsonl");
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(&alert_path);
+    let rules_path =
+        std::env::temp_dir().join(format!("kf_watch_rules_{}.txt", std::process::id()));
+    std::fs::write(&rules_path, "cache: cache_hit_rate > 0.2\n").expect("write rules");
+
+    let service = KernelService::start(ServiceConfig {
+        devices: vec![DeviceProfile::b580()],
+        compile_workers: 1,
+        exec_workers: 2,
+        queue_capacity: 16,
+        trace_path: Some(trace_path.clone()),
+        alert_rules_path: Some(rules_path.clone()),
+        alert_log_path: Some(alert_path.clone()),
+        alert_interval: Duration::from_millis(20),
+        ..ServiceConfig::default()
+    })
+    .expect("service starts");
+    let mut server = Server::start(Arc::clone(&service), "127.0.0.1:0").expect("server binds");
+
+    // The ONE watching connection, opened before any job exists so it
+    // observes the whole story.
+    let mut watcher = Client::connect(&server.addr().to_string()).expect("watcher connects");
+    watcher.send(&proto::Request::Watch(50)).expect("watch verb");
+    let hello = watcher.next_frame().expect("read hello").expect("hello frame");
+    assert!(proto::response_ok(&hello), "{hello}");
+    assert_eq!(hello.get("kind").unwrap().as_str(), Some("hello"));
+    let rules: Vec<String> = hello
+        .get("alert_rules")
+        .and_then(|r| r.as_arr())
+        .map(|arr| arr.iter().filter_map(|v| v.as_str()).map(String::from).collect())
+        .unwrap_or_default();
+    assert_eq!(rules, ["cache"], "hello advertises the loaded rule set");
+
+    // A separate driving connection submits the jobs.
+    let mut driver = Client::connect(&server.addr().to_string()).expect("driver connects");
+    let mut spec = JobSpec::catalog("20_LeakyReLU", "b580");
+    spec.iters = 2;
+    spec.population = 2;
+    let resp = driver.request(&proto::Request::Submit(spec.clone())).expect("submit");
+    assert!(proto::response_ok(&resp), "{resp}");
+    let id = resp.get("job_id").unwrap().as_usize().unwrap() as u64;
+    service.wait(id, Duration::from_secs(60)).expect("job finishes");
+
+    // The miss leaves cache_hit_rate at 0: the rule breaches and (no
+    // debounce) the next alert tick fires. The breach is sticky until
+    // the resubmission below, so draining to the firing frame is safe.
+    let mut seen = FrameLog::default();
+    read_until(&mut watcher, &mut seen, |s| s.firing);
+
+    // Identical resubmission: a cache hit lifts the rate to 0.5 > 0.2.
+    let resp = driver.request(&proto::Request::Submit(spec)).expect("resubmit");
+    assert!(proto::response_ok(&resp), "{resp}");
+    assert_eq!(resp.get("cached").unwrap().as_bool(), Some(true), "{resp}");
+    read_until(&mut watcher, &mut seen, |s| s.resolved);
+
+    // One connection saw all three frame kinds.
+    assert!(seen.metrics > 0, "no metric-delta frames");
+    for want in [stage::SUBMIT, stage::DISPATCHED, stage::COMMITTED] {
+        assert!(seen.stages.contains(want), "stage {want} missing: {:?}", seen.stages);
+    }
+    let edges: Vec<&str> = seen.alerts.iter().map(|(_, s)| s.as_str()).collect();
+    assert_eq!(edges, ["firing", "resolved"], "exactly one breach cycle: {:?}", seen.alerts);
+    assert!(seen.alerts.iter().all(|(r, _)| r == "cache"));
+
+    // The same pair landed in the durable alert log, in order, with
+    // monotone timestamps.
+    let logged = AlertLog::load(&alert_path);
+    assert_eq!(logged.len(), 2, "{logged:?}");
+    assert_eq!(logged[0].state, "firing");
+    assert_eq!(logged[1].state, "resolved");
+    assert!(logged[0].ts_ms <= logged[1].ts_ms);
+    assert_eq!(logged[0].rule, "cache");
+
+    drop(watcher);
+    server.shutdown();
+    server.wait();
+    service.stop();
+    let _ = std::fs::remove_file(&rules_path);
+    if !keep_trace {
+        let _ = std::fs::remove_file(&trace_path);
+    }
+    if !keep_alerts {
+        let _ = std::fs::remove_file(&alert_path);
+    }
+}

@@ -10,9 +10,13 @@ CI log always shows *how far* each metric moved, not just pass/fail.
 Bootstrap mode: the first committed baseline carries ``"measured": false``
 (this repo's build environment has no Rust toolchain, so the seed baseline
 cannot carry honest numbers). An unmeasured baseline disables the
-comparison — the gate only validates the current file's shape and prints
-the table with a dash for the baseline column — and CI stays green until
-a measured baseline is promoted with ``make bench-baseline``.
+comparison — the gate prints the table with a dash for the baseline
+column — and CI stays green until a measured baseline is promoted with
+``make bench-baseline``.
+
+A metric key absent from the current run (or from the baseline) is never
+fatal: it gets a per-key ``missing``/``n/a`` row in the table, and the
+gate exits nonzero only for genuinely regressed keys.
 
 Usage:
     python3 scripts/bench_gate.py --baseline <committed.json> --current BENCH_service.json
@@ -36,21 +40,44 @@ def load(path):
         sys.exit(f"bench gate: cannot read {path}: {e}")
 
 
+def numeric(value):
+    """True for real numbers (bool is an int subclass — exclude it)."""
+    return isinstance(value, (int, float)) and not isinstance(value, bool)
+
+
+def gated_keys(baseline):
+    """GATED_METRICS plus any extra numeric rate key the baseline carries.
+
+    A baseline that grows a new `*_per_sec` metric gets it reported in
+    the table automatically instead of being silently ignored.
+    """
+    keys = list(GATED_METRICS)
+    for key in sorted(baseline):
+        if key not in keys and key.endswith("_per_sec") and numeric(baseline[key]):
+            keys.append(key)
+    return keys
+
+
 def delta_rows(baseline, current, measured):
     """One (metric, baseline, current, delta%, status) row per metric.
 
     Higher is better for every gated metric, so a negative delta is a
     slowdown; `status` is FAIL only when the slowdown factor exceeds
-    MAX_REGRESSION against a measured baseline.
+    MAX_REGRESSION against a measured baseline. A key absent (or
+    non-positive) on either side gets a visible `missing`/`n/a` row —
+    never a hard failure: the gate fails only on regressed keys.
     """
     rows = []
-    for metric in GATED_METRICS:
-        cur = current[metric]
+    for metric in gated_keys(baseline):
+        cur = current.get(metric)
         base = baseline.get(metric) if measured else None
-        if isinstance(base, (int, float)) and base > 0:
+        base_txt = f"{base:.2f}" if numeric(base) else "-"
+        if not (numeric(cur) and cur > 0):
+            rows.append((metric, base_txt, "-", "-", "missing"))
+        elif numeric(base) and base > 0:
             delta_pct = (cur - base) / base * 100.0
             status = "FAIL" if base / cur > MAX_REGRESSION else "ok"
-            rows.append((metric, f"{base:.2f}", f"{cur:.2f}",
+            rows.append((metric, base_txt, f"{cur:.2f}",
                          f"{delta_pct:+.1f}%", status))
         else:
             rows.append((metric, "-", f"{cur:.2f}", "-", "n/a"))
@@ -76,18 +103,18 @@ def main():
     baseline = load(args.baseline)
     current = load(args.current)
 
-    for metric in GATED_METRICS:
-        value = current.get(metric)
-        if not isinstance(value, (int, float)) or value <= 0:
-            sys.exit(f"bench gate: current {metric} missing or non-positive: {value!r}")
-
     measured = bool(baseline.get("measured", False))
     rows = delta_rows(baseline, current, measured)
     print_table(rows)
 
+    missing = [row[0] for row in rows if row[4] == "missing"]
+    if missing:
+        print("bench gate: reported but not fatal — missing in current run: "
+              + ", ".join(missing))
+
     if not measured:
         print("bench gate: baseline is a bootstrap placeholder (measured=false);")
-        print("bench gate: shape check passed, comparison skipped.")
+        print("bench gate: comparison skipped.")
         print("bench gate: promote a measured baseline with `make bench-baseline`.")
         return
 

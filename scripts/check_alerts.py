@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""CI invariants over SLO alert logs (DESIGN.md §10).
+
+Scans the `*.alerts.jsonl` logs the e2e suite leaves behind when
+`KF_E2E_ALERT_DIR` is set and fails if any log violates an alert
+state-machine invariant:
+
+  * a `resolved` transition with no prior `firing` for the same rule —
+    i.e. the engine claimed to heal a breach it never reported;
+  * duplicate transitions — per rule, `firing` and `resolved` must
+    strictly alternate (the engine emits edges, not levels, so two
+    consecutive `firing` lines for one rule means a lost edge);
+  * an unknown `state` (anything other than firing/resolved — the log
+    records transitions only, never ok/pending levels);
+  * non-monotone timestamps within one log file.
+
+Torn final lines (crash-cut logs) are tolerated the same way the Rust
+loader tolerates them.
+
+Usage: check_alerts.py <alert-dir>
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+def scan(path):
+    """Return the list of transition dicts in one alert log, in order."""
+    out = []
+    with open(path, encoding="utf-8") as fh:
+        lines = fh.read().splitlines()
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                continue  # torn tail from a crash-cut append
+            raise SystemExit(f"{path}:{i + 1}: malformed mid-file alert line")
+    return out
+
+
+def check_log(path, transitions):
+    """Return a list of invariant violations for one alert log."""
+    problems = []
+    last_state = {}  # rule -> last seen state
+    last_ts = None
+    for i, t in enumerate(transitions):
+        rule, state, ts = t.get("rule"), t.get("state"), t.get("ts_ms")
+        where = f"{path}:{i + 1}"
+        if state not in ("firing", "resolved"):
+            problems.append(f"{where}: rule {rule!r} has unknown state "
+                            f"{state!r} (expected firing|resolved)")
+            continue
+        prev = last_state.get(rule)
+        if state == "resolved" and prev is None:
+            problems.append(f"{where}: rule {rule!r} resolved without a "
+                            "prior firing")
+        elif prev == state:
+            problems.append(f"{where}: rule {rule!r} has duplicate "
+                            f"'{state}' transitions (edges must alternate)")
+        last_state[rule] = state
+        if not isinstance(ts, (int, float)):
+            problems.append(f"{where}: rule {rule!r} has non-numeric "
+                            f"ts_ms {ts!r}")
+        else:
+            if last_ts is not None and ts < last_ts:
+                problems.append(f"{where}: timestamps went backwards "
+                                f"({ts} < {last_ts})")
+            last_ts = ts
+    return problems
+
+
+def main():
+    if len(sys.argv) != 2:
+        raise SystemExit(__doc__)
+    alert_dir = sys.argv[1]
+    files = sorted(glob.glob(os.path.join(alert_dir, "*.alerts.jsonl")))
+    if not files:
+        raise SystemExit(f"no *.alerts.jsonl logs under {alert_dir}; "
+                         "was KF_E2E_ALERT_DIR exported for the e2e run?")
+    bad = []
+    total = 0
+    for path in files:
+        transitions = scan(path)
+        total += len(transitions)
+        bad.extend(check_log(path, transitions))
+    if bad:
+        raise SystemExit("\n".join(bad))
+    print(f"OK: {total} transition(s) across {len(files)} log(s); every "
+          "resolved followed a firing, edges alternate, timestamps are "
+          "monotone")
+
+
+if __name__ == "__main__":
+    main()

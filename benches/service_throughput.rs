@@ -6,7 +6,7 @@
 //! perf trajectory (`make bench-service`).
 
 use kernelfoundry::hwsim::DeviceProfile;
-use kernelfoundry::service::{DeviceTarget, JobSpec, KernelService, ServiceConfig};
+use kernelfoundry::service::{DeviceTarget, GuardConfig, JobSpec, KernelService, ServiceConfig};
 use kernelfoundry::tasks::catalog;
 use kernelfoundry::util::json::Json;
 use std::time::{Duration, Instant};
@@ -73,6 +73,28 @@ fn main() {
         "warm wave must be served entirely from the cache"
     );
 
+    // Guarded wave: a fresh service with the fault-tolerance guards on
+    // (deadline timers, retry budget, circuit breakers) but no fault
+    // plan — measures what the retry path costs when nothing fails.
+    let guarded = KernelService::start(ServiceConfig {
+        devices: vec![DeviceProfile::lnl(), DeviceProfile::b580()],
+        compile_workers: 1,
+        exec_workers: 2,
+        queue_capacity: 64,
+        guard: GuardConfig {
+            max_retries: 3,
+            unit_deadline: Some(Duration::from_secs(10)),
+            trip_threshold: 3,
+            ..GuardConfig::default()
+        },
+        ..ServiceConfig::default()
+    })
+    .expect("guarded service starts");
+    let (guarded_s, guarded_cached) = run_wave(&guarded, "guarded");
+    assert_eq!(guarded_cached, 0, "guarded wave runs cold on its own cache");
+    guarded.stop();
+    let retry_overhead_pct = (guarded_s - cold_s) / cold_s * 100.0;
+
     let stats = service.stats();
     let hit_rate = stats
         .get_path("cache.hit_rate")
@@ -80,7 +102,7 @@ fn main() {
         .unwrap_or(0.0);
 
     println!("{:>8} {:>10} {:>12} {:>12}", "wave", "time [s]", "jobs/s", "units/s");
-    for (name, secs) in [("cold", cold_s), ("warm", warm_s)] {
+    for (name, secs) in [("cold", cold_s), ("warm", warm_s), ("guarded", guarded_s)] {
         println!(
             "{:>8} {:>10.3} {:>12.1} {:>12.1}",
             name,
@@ -90,6 +112,7 @@ fn main() {
         );
     }
     println!("\ncache hit rate: {hit_rate:.3}");
+    println!("guard overhead on the happy path: {retry_overhead_pct:+.1}%");
     println!("fleet: {}", stats.get("fleet").unwrap().to_string_compact());
 
     let mut out = Json::obj();
@@ -102,6 +125,9 @@ fn main() {
         .set("cold_jobs_per_sec", JOBS as f64 / cold_s)
         .set("warm_seconds", warm_s)
         .set("warm_jobs_per_sec", JOBS as f64 / warm_s)
+        .set("guarded_seconds", guarded_s)
+        .set("guarded_jobs_per_sec", JOBS as f64 / guarded_s)
+        .set("retry_overhead_pct", retry_overhead_pct)
         .set("cache", stats.get("cache").unwrap().clone())
         .set("fleet", stats.get("fleet").unwrap().clone());
     std::fs::write("BENCH_service.json", out.to_string_pretty() + "\n")

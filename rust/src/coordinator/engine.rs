@@ -15,6 +15,7 @@ use crate::transitions::{Outcome, Transition, TransitionTracker};
 use crate::util::rng::Rng;
 use crate::util::textdiff;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// The full §3.1 loop bound to one task.
@@ -52,6 +53,9 @@ pub struct EvolutionEngine {
     /// Run label stamped on search-history rows (the fleet's cache key,
     /// or a CLI run label).
     run_label: String,
+    /// Cooperative cancellation flag (`--unit-deadline-ms` in the
+    /// service): checked between generations by `run_distributed`.
+    cancel: Option<Arc<AtomicBool>>,
 }
 
 impl EvolutionEngine {
@@ -118,6 +122,7 @@ impl EvolutionEngine {
             initial_genome: None,
             search_log: None,
             run_label: String::new(),
+            cancel: None,
             pipeline,
             task,
             config,
@@ -445,9 +450,24 @@ impl EvolutionEngine {
     /// `service` subsystem's fleet lanes drive (§3.6 / Fig. 4).
     pub fn run_distributed(&mut self, pool: &WorkerPool) -> RunReport {
         for _ in 0..self.config.evolution.max_generations {
+            if self
+                .cancel
+                .as_ref()
+                .is_some_and(|c| c.load(Ordering::Relaxed))
+            {
+                break; // deadline exceeded: report what we have so far
+            }
             self.step_distributed(pool);
         }
         self.report("kernelfoundry")
+    }
+
+    /// Attach a cooperative cancellation flag: `run_distributed` stops
+    /// before the next generation once the flag is set (the caller
+    /// decides whether the truncated report counts — the service's
+    /// deadline path discards it and retries or quarantines the unit).
+    pub fn attach_cancel(&mut self, flag: Arc<AtomicBool>) {
+        self.cancel = Some(flag);
     }
 
     pub fn report(&self, method: &str) -> RunReport {

@@ -424,6 +424,37 @@ mod tests {
     }
 
     #[test]
+    fn tolerant_load_handles_degenerate_tails() {
+        let path = tmp_path("tails");
+        let good = row("t1", "m", 0.9, 1.8).to_json().to_string_compact();
+
+        // One-byte torn tail: the crash wrote exactly the opening brace.
+        std::fs::write(&path, format!("{good}\n{{")).unwrap();
+        let db = Database::new();
+        let (n, dropped) = db.load_tolerant(&path).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(dropped, 1, "exactly the lone brace is dropped");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), format!("{good}\n"));
+
+        // A file that is nothing but one torn byte: zero rows, repaired
+        // to empty, not an error.
+        std::fs::write(&path, "{").unwrap();
+        let db = Database::new();
+        let (n, dropped) = db.load_tolerant(&path).unwrap();
+        assert_eq!((n, dropped), (0, 1));
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "");
+
+        // A trailing blank line is a clean append boundary, not a torn
+        // tail: nothing is dropped and the file is left untouched.
+        std::fs::write(&path, format!("{good}\n\n")).unwrap();
+        let db = Database::new();
+        let (n, dropped) = db.load_tolerant(&path).unwrap();
+        assert_eq!((n, dropped), (1, 0));
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), format!("{good}\n\n"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn from_record_captures_the_contracted_fields() {
         let mut genome = crate::ir::KernelGenome::direct_translation("task_x");
         genome.id = 42;

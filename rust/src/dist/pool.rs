@@ -32,7 +32,7 @@ use crate::eval::{
 use crate::hwsim::baseline_cost;
 use crate::ir::{render_sycl, KernelGenome};
 use crate::tasks::TaskSpec;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -70,6 +70,8 @@ pub struct WorkerPool {
     /// Live pipeline counters (readable while a batch is in flight from
     /// another thread, and after it completes).
     pub metrics: PoolMetrics,
+    /// Cooperative cancellation flag (see [`WorkerPool::set_cancel`]).
+    cancel: Option<Arc<AtomicBool>>,
 }
 
 /// A unit of work entering the compile stage: the genome plus its index
@@ -87,12 +89,28 @@ impl WorkerPool {
         WorkerPool {
             cfg,
             metrics: PoolMetrics::default(),
+            cancel: None,
         }
     }
 
     /// The pool's cluster configuration.
     pub fn config(&self) -> &ClusterConfig {
         &self.cfg
+    }
+
+    /// Attach a cooperative cancellation flag. Once the flag is set,
+    /// [`evaluate_batch`](WorkerPool::evaluate_batch) stops feeding new
+    /// candidates and returns only the records already produced — fewer
+    /// than one per submitted genome. Callers that attach a flag must
+    /// treat a short batch as a cancelled batch, not an error.
+    pub fn set_cancel(&mut self, flag: Arc<AtomicBool>) {
+        self.cancel = Some(flag);
+    }
+
+    fn cancelled(&self) -> bool {
+        self.cancel
+            .as_ref()
+            .is_some_and(|c| c.load(Ordering::Relaxed))
     }
 
     /// Evaluate a batch of candidate genomes through the worker topology,
@@ -212,8 +230,13 @@ impl WorkerPool {
             // ---- feed + collect on this thread ---------------------------
             // Feeding happens against a bounded queue, so a slow pipeline
             // applies backpressure here; collection drains the unbounded
-            // results channel until every worker has hung up.
+            // results channel until every worker has hung up. A set cancel
+            // flag stops the feed between candidates — in-flight work
+            // drains, unfed genomes simply never get a record.
             for job in genomes.into_iter().enumerate() {
+                if self.cancelled() {
+                    break;
+                }
                 submit_tx
                     .send(job)
                     .expect("compile workers exited before the batch was fed");
@@ -224,10 +247,15 @@ impl WorkerPool {
             }
         });
 
-        results
-            .into_iter()
-            .map(|r| r.expect("a worker dropped a candidate without producing a record"))
-            .collect()
+        if self.cancel.is_some() {
+            // Cancellable pools may legitimately return a partial batch.
+            results.into_iter().flatten().collect()
+        } else {
+            results
+                .into_iter()
+                .map(|r| r.expect("a worker dropped a candidate without producing a record"))
+                .collect()
+        }
     }
 }
 
@@ -325,6 +353,21 @@ mod tests {
         for (x, y) in a.iter().zip(b.iter()) {
             assert_eq!(x.outcome, y.outcome, "genome {}", x.genome.id);
         }
+    }
+
+    #[test]
+    fn cancelled_pool_returns_a_partial_batch_without_panicking() {
+        let task = catalog::find_task("20_LeakyReLU").unwrap();
+        let mut pool = WorkerPool::new(ClusterConfig::default());
+        let flag = Arc::new(AtomicBool::new(true)); // cancelled before the feed
+        pool.set_cancel(Arc::clone(&flag));
+        let records = pool.evaluate_batch(&task, batch(&task.id, 8, 0));
+        assert!(records.is_empty(), "nothing fed after cancellation");
+
+        // Clearing the flag restores full batches on the same pool.
+        flag.store(false, Ordering::Relaxed);
+        let records = pool.evaluate_batch(&task, batch(&task.id, 8, 0));
+        assert_eq!(records.len(), 8);
     }
 
     #[test]

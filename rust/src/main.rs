@@ -318,7 +318,13 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
         .opt("search-log", "", "JSONL per-generation search history for `kernelfoundry report` ('' = off)")
         .opt("alert-rules", "", "SLO rules file for the alert engine ('' = built-in defaults)")
         .opt("alert-log", "", "JSONL the alert engine appends firing/resolved transitions to")
-        .opt("alert-interval", "", "alert evaluation cadence, e.g. 250ms | 2s (default 1s)");
+        .opt("alert-interval", "", "alert evaluation cadence, e.g. 250ms | 2s (default 1s)")
+        .opt("fault-plan", "", "deterministic fault-injection plan file (chaos testing; '' = off)")
+        .opt("max-retries", "", "transient-failure retries per unit before quarantine (default 2)")
+        .opt("unit-deadline-ms", "", "wall-clock deadline per unit attempt, e.g. 2000 | 2s ('' = none)")
+        .opt("lane-trip-threshold", "", "consecutive transient failures that open a lane's breaker (default 3)")
+        .opt("retry-backoff-ms", "", "base retry backoff, e.g. 100 | 250ms (default 100ms)")
+        .opt("lane-cooldown-ms", "", "open-lane cooldown before the half-open probe, e.g. 1000 | 2s (default 1s)");
     let p = with_log_flags(cmd).parse(args)?;
     apply_log_flags(&p);
     let mut devices = Vec::new();
@@ -328,6 +334,38 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
         devices.push(device);
     }
     let defaults = ClusterConfig::default();
+    let mut guard = service::GuardConfig::default();
+    if let Some(v) = p.get("max-retries").filter(|s| !s.is_empty()) {
+        guard.max_retries = v
+            .parse()
+            .map_err(|_| format!("--max-retries: invalid count '{v}'"))?;
+    }
+    if let Some(s) = p.get("unit-deadline-ms").filter(|s| !s.is_empty()) {
+        guard.unit_deadline = Some(std::time::Duration::from_millis(
+            parse_duration_ms(s).map_err(|e| format!("--unit-deadline-ms: {e}"))? as u64,
+        ));
+    }
+    if let Some(v) = p.get("lane-trip-threshold").filter(|s| !s.is_empty()) {
+        guard.trip_threshold = v
+            .parse()
+            .map_err(|_| format!("--lane-trip-threshold: invalid count '{v}'"))?;
+    }
+    if let Some(s) = p.get("retry-backoff-ms").filter(|s| !s.is_empty()) {
+        guard.retry_backoff = std::time::Duration::from_millis(
+            parse_duration_ms(s).map_err(|e| format!("--retry-backoff-ms: {e}"))? as u64,
+        );
+    }
+    if let Some(s) = p.get("lane-cooldown-ms").filter(|s| !s.is_empty()) {
+        guard.lane_cooldown = std::time::Duration::from_millis(
+            parse_duration_ms(s).map_err(|e| format!("--lane-cooldown-ms: {e}"))? as u64,
+        );
+    }
+    let fault_plan = match p.get("fault-plan").filter(|s| !s.is_empty()) {
+        Some(path) => Some(
+            service::FaultPlan::load(Path::new(&path)).map_err(|e| format!("--fault-plan: {e}"))?,
+        ),
+        None => None,
+    };
     let cfg = ServiceConfig {
         devices,
         compile_workers: p.get_usize("compile-workers").unwrap_or(defaults.compile_workers),
@@ -348,6 +386,8 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
             ),
             None => std::time::Duration::from_millis(service::DEFAULT_ALERT_INTERVAL_MS),
         },
+        guard,
+        fault_plan,
     };
     if cfg.journal_path.is_some() && kernelfoundry::service::failpoint::any_armed() {
         eprintln!(
@@ -355,6 +395,7 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
             kernelfoundry::service::failpoint::ENV_VAR
         );
     }
+    let cfg_fault_rules = cfg.fault_plan.as_ref().map(|plan| plan.len()).unwrap_or(0);
     let service = KernelService::start(cfg)?;
     let mut server = Server::start(Arc::clone(&service), p.get("addr").unwrap())
         .map_err(|e| format!("binding {}: {e}", p.get("addr").unwrap()))?;
@@ -369,6 +410,12 @@ fn cmd_daemon(args: &[String]) -> Result<(), String> {
     }
     if let Some(slog) = p.get("search-log").filter(|s| !s.is_empty()) {
         println!("search log: {slog} (inspect with `kernelfoundry report --search-log {slog}`)");
+    }
+    if let Some(plan) = p.get("fault-plan").filter(|s| !s.is_empty()) {
+        println!(
+            "fault plan: {plan} ({} rule(s)) — chaos injection armed (test harness only)",
+            cfg_fault_rules
+        );
     }
     let rules = service.alert_rule_names();
     if !rules.is_empty() {
@@ -508,7 +555,7 @@ fn cmd_submit(args: &[String]) -> Result<(), String> {
     let timeout = std::time::Duration::from_secs(p.get_u64("timeout").unwrap_or(600));
     let started = std::time::Instant::now();
     let mut state = state;
-    while !matches!(state.as_str(), "done" | "failed" | "cancelled") {
+    while !matches!(state.as_str(), "done" | "partial" | "failed" | "cancelled") {
         if started.elapsed() > timeout {
             return Err(format!(
                 "timed out after {timeout:?} waiting for job {id} (state: {state})"

@@ -125,16 +125,19 @@ pub struct RuleSet {
 
 impl RuleSet {
     /// The built-in SLO set used when no rules file is given: queue wait
-    /// bounded, cache pulling its weight, no jobs lost to replay, and
-    /// the search still accepting candidates. Rules whose metric is not
-    /// observable yet (e.g. `cache_hit_rate` before any lookup) simply
-    /// stay frozen, so the defaults are safe on an idle daemon.
+    /// bounded, cache pulling its weight, no jobs lost to replay, the
+    /// search still accepting candidates, every lane breaker closed and
+    /// the retry rate bounded. Rules whose metric is not observable yet
+    /// (e.g. `cache_hit_rate` before any lookup) simply stay frozen, so
+    /// the defaults are safe on an idle daemon.
     pub fn defaults() -> RuleSet {
         let text = "\
 queue-wait: queue_wait_p99_ms < 500 for 2s
 cache-hit-rate: cache_hit_rate > 0.2 for 10s
 lost-jobs: lost_jobs == 0
 search-acceptance: search_acceptance > 0.01 for 10s
+lane-open: lanes_open == 0
+retry-rate: kf_retry_total_rate < 2 for 5s
 ";
         RuleSet::parse(text).expect("built-in default rules parse")
     }

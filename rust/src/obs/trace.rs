@@ -37,6 +37,15 @@ pub mod stage {
     pub const COMMITTED: &str = "committed";
     /// The finished result was handed to a client.
     pub const RESPONDED: &str = "responded";
+    /// A transient unit failure was journalled and the unit re-enqueued
+    /// with backoff (the unit is alive; `queued` follows).
+    pub const RETRIED: &str = "retried";
+    /// A queued unit was moved off a quarantined lane onto a healthy
+    /// peer (the `device` field names the lane it *left*).
+    pub const REROUTED: &str = "rerouted";
+    /// A unit exhausted its retry budget on one lane and was committed
+    /// as a deterministic failure verdict (terminal, like `failed`).
+    pub const QUARANTINED: &str = "quarantined";
     /// Terminal failure of a unit.
     pub const FAILED: &str = "failed";
     /// Unit(s) cancelled while queued.
@@ -44,7 +53,18 @@ pub mod stage {
 
     /// Every stage above, in timeline order.
     pub const ALL: &[&str] = &[
-        SUBMIT, QUEUED, DISPATCHED, COMPILED, EXECUTED, COMMITTED, RESPONDED, FAILED, CANCELLED,
+        SUBMIT,
+        QUEUED,
+        DISPATCHED,
+        COMPILED,
+        EXECUTED,
+        COMMITTED,
+        RESPONDED,
+        RETRIED,
+        REROUTED,
+        QUARANTINED,
+        FAILED,
+        CANCELLED,
     ];
 }
 
@@ -182,6 +202,15 @@ impl TraceSink {
     /// publishes its own richer `alert` frame.
     pub fn mirror_alert(&self, state: &str, rule: &str) {
         self.emit(&format!("alert_{state}"), FLEET_JOB_ID, format!("alert:{rule}"), None);
+    }
+
+    /// Mirror a lane circuit-breaker transition into the sink, exactly
+    /// like [`TraceSink::mirror_alert`]: stage `lane_<state>` (e.g.
+    /// `lane_open`, `lane_half_open`, `lane_closed`), the reserved
+    /// [`FLEET_JOB_ID`], the lane carried both as `lane:<device>` in the
+    /// trace id and in the `device` field.
+    pub fn mirror_lane(&self, state: &str, device: &str) {
+        self.emit(&format!("lane_{state}"), FLEET_JOB_ID, format!("lane:{device}"), Some(device));
     }
 
     /// Write one event line under the sink mutex (monotone timestamps,

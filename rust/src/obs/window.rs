@@ -214,6 +214,7 @@ pub fn derived_metrics(delta: &WindowDelta, cumulative: &Snapshot) -> BTreeMap<S
         ("queue_depth", "kf_queue_depth"),
         ("lost_jobs", "kf_replay_lost_jobs"),
         ("search_acceptance", "kf_search_acceptance_rate"),
+        ("lanes_open", "kf_lanes_open"),
     ] {
         if let Some(v) = cumulative.gauges.get(gauge) {
             out.insert(derived.to_string(), *v);

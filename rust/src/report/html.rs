@@ -155,6 +155,9 @@ fn reliability(view: &ReliabilityView, have_journal: bool) -> String {
         ("units dispatched", view.dispatches),
         ("units committed", view.commits),
         ("units failed", view.fails),
+        ("unit retries", view.retries),
+        ("units rerouted", view.reroutes),
+        ("units quarantined", view.quarantines),
         ("units cancelled", view.cancelled_units),
         ("crash-replay re-dispatches", view.replayed_dispatches),
         ("lost (in-flight) units", view.lost_units),

@@ -341,6 +341,13 @@ pub struct ReliabilityView {
     pub commits: usize,
     /// `fail` records.
     pub fails: usize,
+    /// `retry` records (transient failures re-enqueued with backoff).
+    pub retries: usize,
+    /// `reroute` records (units moved off a quarantined lane).
+    pub reroutes: usize,
+    /// `quarantine` records (units committed as deterministic failures
+    /// after exhausting a retry budget).
+    pub quarantines: usize,
     /// Units cancelled (summed over `cancel` records' device lists).
     pub cancelled_units: usize,
     /// Extra `dispatch` records for a unit already dispatched once —
@@ -364,8 +371,9 @@ impl ReliabilityView {
     pub fn build(records: &[JournalRecord]) -> ReliabilityView {
         let mut v = ReliabilityView::default();
         let mut owner: Option<&str> = None;
-        // (job, device) -> (dispatches, reached a terminal record).
-        let mut units: BTreeMap<(u64, &str), (usize, bool)> = BTreeMap::new();
+        // (job, device) -> (dispatches, reached a terminal record,
+        // re-dispatch announced by a retry/reroute record).
+        let mut units: BTreeMap<(u64, &str), (usize, bool, bool)> = BTreeMap::new();
         for rec in records {
             match rec {
                 JournalRecord::Lease { owner: o, .. } => {
@@ -392,11 +400,15 @@ impl ReliabilityView {
                 JournalRecord::Dispatch { job_id, device } => {
                     v.dispatches += 1;
                     let unit = units.entry((*job_id, device.as_str())).or_default();
-                    if unit.0 > 0 && !unit.1 {
+                    // A re-dispatch with no announcing retry/reroute
+                    // record is a crash replay; announced ones are the
+                    // retry machinery working as designed.
+                    if unit.0 > 0 && !unit.1 && !unit.2 {
                         v.replayed_dispatches += 1;
                     }
                     unit.0 += 1;
                     unit.1 = false; // a re-dispatch reopens the unit
+                    unit.2 = false;
                 }
                 JournalRecord::Commit { job_id, device, .. } => {
                     v.commits += 1;
@@ -404,6 +416,29 @@ impl ReliabilityView {
                 }
                 JournalRecord::Fail { job_id, device, .. } => {
                     v.fails += 1;
+                    units.entry((*job_id, device.as_str())).or_default().1 = true;
+                }
+                JournalRecord::Retry { job_id, device, .. } => {
+                    // The failed attempt stays counted as a dispatch;
+                    // the retry reopens the unit (a re-dispatch or a
+                    // quarantine must follow).
+                    v.retries += 1;
+                    let unit = units.entry((*job_id, device.as_str())).or_default();
+                    unit.1 = false;
+                    unit.2 = true;
+                }
+                JournalRecord::Reroute { job_id, from, to } => {
+                    // Move the unit's lineage to its new lane so the
+                    // eventual commit there closes it.
+                    v.reroutes += 1;
+                    let moved = units.remove(&(*job_id, from.as_str())).unwrap_or_default();
+                    let unit = units.entry((*job_id, to.as_str())).or_default();
+                    unit.0 += moved.0;
+                    unit.1 = false;
+                    unit.2 = true;
+                }
+                JournalRecord::Quarantine { job_id, device, .. } => {
+                    v.quarantines += 1;
                     units.entry((*job_id, device.as_str())).or_default().1 = true;
                 }
                 JournalRecord::Cancel { job_id, devices } => {
@@ -414,7 +449,7 @@ impl ReliabilityView {
                 }
             }
         }
-        v.lost_units = units.values().filter(|(d, done)| *d > 0 && !done).count();
+        v.lost_units = units.values().filter(|(d, done, _)| *d > 0 && !done).count();
         v
     }
 
@@ -616,6 +651,78 @@ mod tests {
         assert_eq!(v.replayed_dispatches, 1);
         assert_eq!(v.fails, 1);
         assert_eq!(v.lost_units, 1, "job 2 never reached a terminal record");
+    }
+
+    #[test]
+    fn reliability_folds_retry_reroute_and_quarantine_lineage() {
+        let dispatch = |job: u64, device: &str| JournalRecord::Dispatch {
+            job_id: job,
+            device: device.to_string(),
+        };
+        let result = |device: &str| crate::service::DeviceResult {
+            device: device.to_string(),
+            task_id: "20_LeakyReLU".to_string(),
+            correct: true,
+            fitness: 0.9,
+            speedup: 1.5,
+            time_ms: 0.4,
+            baseline_ms: 0.6,
+            coords: [0, 0, 0],
+            genome_id: 1,
+            produced_by: "m".to_string(),
+            source: String::new(),
+            evaluations: 4,
+            compile_errors: 0,
+            incorrect: 0,
+            cached: false,
+            wall_ms: 5.0,
+        };
+        let records = vec![
+            // Job 1: fails transiently, retries, commits on re-dispatch.
+            dispatch(1, "b580"),
+            JournalRecord::Retry {
+                job_id: 1,
+                device: "b580".to_string(),
+                attempt: 1,
+                error: "flaky".to_string(),
+            },
+            dispatch(1, "b580"),
+            JournalRecord::Commit {
+                job_id: 1,
+                device: "b580".to_string(),
+                result: result("b580"),
+            },
+            // Job 2: exhausts its budget and is quarantined (terminal).
+            dispatch(2, "b580"),
+            JournalRecord::Quarantine {
+                job_id: 2,
+                device: "b580".to_string(),
+                error: "dead".to_string(),
+                attempts: 3,
+            },
+            // Job 3: rerouted off b580 before dispatch, commits on lnl.
+            JournalRecord::Reroute {
+                job_id: 3,
+                from: "b580".to_string(),
+                to: "lnl".to_string(),
+            },
+            dispatch(3, "lnl"),
+            JournalRecord::Commit {
+                job_id: 3,
+                device: "lnl".to_string(),
+                result: result("lnl"),
+            },
+        ];
+        let v = ReliabilityView::build(&records);
+        assert_eq!(v.retries, 1);
+        assert_eq!(v.quarantines, 1);
+        assert_eq!(v.reroutes, 1);
+        assert_eq!(v.commits, 2);
+        assert_eq!(
+            v.replayed_dispatches, 0,
+            "a retry re-dispatch is deliberate, not a crash replay"
+        );
+        assert_eq!(v.lost_units, 0, "every fault path reached a terminal record");
     }
 
     #[test]

@@ -8,6 +8,14 @@
 //! submit-poll-fetch conversation. A `shutdown` request stops the
 //! accept loop (after acknowledging); the daemon then drains and joins
 //! the fleet via [`KernelService::stop`].
+//!
+//! The request path is hardened against misbehaving peers: each
+//! connection carries an idle read timeout ([`READ_IDLE_TIMEOUT`]) and
+//! a cap on the length of a single request line ([`MAX_LINE_BYTES`]),
+//! so a client that connects and goes silent cannot pin a handler
+//! thread forever and a client that streams an unterminated line
+//! cannot balloon the server's memory. [`Server::start_with_limits`]
+//! exposes both knobs for tests.
 
 use super::proto::{self, Request};
 use super::KernelService;
@@ -22,6 +30,16 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
+/// Default per-connection idle read timeout: a connected client that
+/// sends nothing for this long is dropped (its handler thread exits).
+pub const READ_IDLE_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Default cap on one request line (1 MiB). A line that reaches this
+/// many bytes without a terminating newline draws one error response
+/// and the connection is closed — the stream cannot be resynchronized
+/// mid-line.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
 struct ServerState {
     shutdown: AtomicBool,
     addr: SocketAddr,
@@ -35,8 +53,22 @@ pub struct Server {
 
 impl Server {
     /// Bind `addr` (use port 0 for an ephemeral port) and start the
-    /// accept loop on a background thread.
+    /// accept loop on a background thread, with the default connection
+    /// limits ([`READ_IDLE_TIMEOUT`], [`MAX_LINE_BYTES`]).
     pub fn start(service: Arc<KernelService>, addr: &str) -> std::io::Result<Server> {
+        Server::start_with_limits(service, addr, Some(READ_IDLE_TIMEOUT), MAX_LINE_BYTES)
+    }
+
+    /// [`Server::start`] with explicit connection limits: `read_timeout`
+    /// is the per-connection idle read timeout (`None` = wait forever,
+    /// the pre-hardening behavior) and `max_line` caps one request line
+    /// in bytes. Tests use tiny values to pin the guard behavior.
+    pub fn start_with_limits(
+        service: Arc<KernelService>,
+        addr: &str,
+        read_timeout: Option<Duration>,
+        max_line: usize,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let state = Arc::new(ServerState {
             shutdown: AtomicBool::new(false),
@@ -51,7 +83,9 @@ impl Server {
                 let Ok(stream) = stream else { continue };
                 let service = Arc::clone(&service);
                 let conn_state = Arc::clone(&accept_state);
-                thread::spawn(move || handle_connection(stream, service, conn_state));
+                thread::spawn(move || {
+                    handle_connection(stream, service, conn_state, read_timeout, max_line)
+                });
             }
         });
         Ok(Server {
@@ -91,13 +125,96 @@ fn trigger_shutdown(state: &ServerState) {
     let _ = TcpStream::connect(state.addr);
 }
 
-fn handle_connection(stream: TcpStream, service: Arc<KernelService>, state: Arc<ServerState>) {
+/// Outcome of reading one request line under the connection limits.
+enum LineRead {
+    /// A complete line, newline stripped.
+    Line(String),
+    /// Clean EOF, a read error, or the idle timeout: close silently.
+    Closed,
+    /// The line hit the byte cap before its newline arrived.
+    TooLong,
+}
+
+/// Read one `\n`-terminated line without ever buffering more than
+/// `max_line` bytes of it. `BufReader::read_line` would grow its
+/// `String` without bound; this reads through `fill_buf`/`consume` so
+/// an attacker streaming an endless line costs one internal buffer,
+/// not the whole heap.
+fn read_bounded_line(reader: &mut BufReader<TcpStream>, max_line: usize) -> LineRead {
+    let mut buf = Vec::new();
+    loop {
+        let (used, newline, overflowed) = {
+            let available = match reader.fill_buf() {
+                Ok(chunk) => chunk,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) {
+                        crate::obs::global().counter("kf_rpc_read_timeouts_total").inc();
+                    }
+                    return LineRead::Closed;
+                }
+            };
+            if available.is_empty() {
+                return LineRead::Closed;
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    let over = buf.len() + pos > max_line;
+                    if !over {
+                        buf.extend_from_slice(&available[..pos]);
+                    }
+                    (pos + 1, true, over)
+                }
+                None => {
+                    let over = buf.len() + available.len() > max_line;
+                    if !over {
+                        buf.extend_from_slice(available);
+                    }
+                    (available.len(), false, over)
+                }
+            }
+        };
+        reader.consume(used);
+        if overflowed {
+            return LineRead::TooLong;
+        }
+        if newline {
+            return LineRead::Line(String::from_utf8_lossy(&buf).into_owned());
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    service: Arc<KernelService>,
+    state: Arc<ServerState>,
+    read_timeout: Option<Duration>,
+    max_line: usize,
+) {
     crate::obs::global().counter("kf_rpc_connections_total").inc();
+    let _ = stream.set_read_timeout(read_timeout);
     let Ok(read_half) = stream.try_clone() else { return };
     let mut writer = stream;
-    let reader = BufReader::new(read_half);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+    let mut reader = BufReader::new(read_half);
+    loop {
+        let line = match read_bounded_line(&mut reader, max_line) {
+            LineRead::Closed => break,
+            LineRead::TooLong => {
+                // One diagnostic, then hang up: past the cap the stream
+                // has no line boundary left to resynchronize on.
+                crate::obs::global().counter("kf_rpc_oversized_lines_total").inc();
+                let resp =
+                    proto::error_response(&format!("request line exceeds {max_line} bytes"));
+                let mut wire = resp.to_string_compact();
+                wire.push('\n');
+                let _ = writer.write_all(wire.as_bytes());
+                break;
+            }
+            LineRead::Line(line) => line,
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -329,6 +446,81 @@ mod tests {
         // hangs up.
         let mut other = Client::connect(&server.addr().to_string()).unwrap();
         assert!(proto::response_ok(&other.request(&Request::Stats).unwrap()));
+        server.shutdown();
+        server.wait();
+        service.stop();
+    }
+
+    #[test]
+    fn oversized_request_line_is_rejected_and_server_survives() {
+        let service = KernelService::start(ServiceConfig {
+            devices: vec![DeviceProfile::b580()],
+            compile_workers: 1,
+            exec_workers: 2,
+            queue_capacity: 8,
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        let mut server =
+            Server::start_with_limits(Arc::clone(&service), "127.0.0.1:0", None, 256).unwrap();
+
+        // Stream a 600-byte line against a 256-byte cap: the server
+        // answers with one error and closes this connection.
+        let mut raw = TcpStream::connect(server.addr()).unwrap();
+        let mut big = vec![b'x'; 600];
+        big.push(b'\n');
+        raw.write_all(&big).unwrap();
+        let mut reader = BufReader::new(raw.try_clone().unwrap());
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert!(resp.contains("exceeds 256 bytes"), "{resp}");
+        let mut rest = String::new();
+        assert_eq!(
+            reader.read_line(&mut rest).unwrap(),
+            0,
+            "connection must be closed after an oversized line"
+        );
+
+        // The listener itself is unharmed: a fresh client still works.
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        assert!(proto::response_ok(&client.request(&Request::Stats).unwrap()));
+        server.shutdown();
+        server.wait();
+        service.stop();
+    }
+
+    #[test]
+    fn idle_connection_is_dropped_after_the_read_timeout() {
+        let service = KernelService::start(ServiceConfig {
+            devices: vec![DeviceProfile::b580()],
+            compile_workers: 1,
+            exec_workers: 2,
+            queue_capacity: 8,
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        let mut server = Server::start_with_limits(
+            Arc::clone(&service),
+            "127.0.0.1:0",
+            Some(Duration::from_millis(50)),
+            MAX_LINE_BYTES,
+        )
+        .unwrap();
+
+        // Connect and send nothing: the handler must hang up on us
+        // instead of pinning its thread forever.
+        let idle = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(idle);
+        let mut line = String::new();
+        assert_eq!(
+            reader.read_line(&mut line).unwrap(),
+            0,
+            "idle connection must be closed by the server"
+        );
+
+        // An active client beats the timeout easily.
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        assert!(proto::response_ok(&client.request(&Request::Stats).unwrap()));
         server.shutdown();
         server.wait();
         service.stop();

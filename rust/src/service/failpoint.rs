@@ -37,6 +37,12 @@ pub const POINTS: &[&str] = &[
     // Marker and row are both durable but the in-memory job table never
     // heard about it (pure replay-idempotence window).
     "commit.after_row",
+    // The journal `retry` record is durable but the unit was never
+    // re-enqueued (replay must requeue it with its budget intact).
+    "retry.after_journal",
+    // The journal `quarantine` record is durable but the in-memory job
+    // table never saw the terminal failure.
+    "quarantine.after_journal",
 ];
 
 fn armed() -> &'static HashSet<String> {

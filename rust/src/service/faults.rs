@@ -1,0 +1,397 @@
+//! Deterministic, seedable fault injection for the fleet — the chaos
+//! half of the fault-tolerance layer (DESIGN.md §11).
+//!
+//! [`failpoint`](super::failpoint) kills the whole process at a named
+//! code point; that is the right tool for crash-recovery tests but
+//! cannot exercise *recoverable* failure — a lane whose compiler
+//! flakes, an executor that hangs past its deadline, a device that is
+//! simply gone. A [`FaultPlan`] injects exactly those: it is loaded
+//! from a small text file (`daemon --fault-plan`), consulted by every
+//! lane at its compile and execute steps, and is a pure function of
+//! `(rule, device, task, job seed, attempt)` — so a committed plan
+//! reproduces the same fault schedule on every run, which is what makes
+//! the retry / deadline / circuit-breaker / quarantine machinery
+//! testable offline.
+//!
+//! # Plan grammar
+//!
+//! One directive per line; blank lines and `#` comments are skipped.
+//!
+//! ```text
+//! seed <u64>                            # optional, for p= rules
+//! <device|*> <compile|exec|*> fail  [times=N] [task=ID] [p=F]
+//! <device|*> <compile|exec|*> hang <dur> [times=N] [task=ID] [p=F]
+//! <device|*> <compile|exec|*> dead  [task=ID] [p=F]
+//! ```
+//!
+//! * `fail` — the step errors transiently. `times=N` (default 1) makes
+//!   the first N attempts of each unit fail, so retry N of a unit
+//!   succeeds: the canonical transient fault.
+//! * `hang` — the step blocks for `<dur>` (`250ms`, `2s`, or bare ms),
+//!   cooperatively: a cancelled deadline aborts the hang early. A hang
+//!   that outlives nobody's deadline resolves and the unit continues —
+//!   hangs model slowness; deadlines decide whether slowness is fatal.
+//! * `dead` — every attempt fails: a permanently dead lane (the retry
+//!   budget then quarantines the unit, and repeated failures trip the
+//!   lane's circuit breaker).
+//! * `task=ID` scopes a rule to one task id; `p=F` makes the rule
+//!   probabilistic with a deterministic per-attempt coin derived from
+//!   the plan seed (same plan ⇒ same coin flips).
+//!
+//! The first matching rule wins.
+
+use crate::util::error::Error;
+use std::path::Path;
+use std::time::Duration;
+
+/// The lane step a fault attaches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultStep {
+    /// Candidate generation + compile checks.
+    Compile,
+    /// Device execution of the evolution run.
+    Exec,
+}
+
+impl FaultStep {
+    /// Grammar name of the step.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultStep::Compile => "compile",
+            FaultStep::Exec => "exec",
+        }
+    }
+}
+
+/// What a matched rule injects at the step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultAction {
+    /// Fail the step transiently with this injected error message.
+    Fail(String),
+    /// Block the step for the duration (cooperatively cancellable).
+    Hang(Duration),
+}
+
+/// The step-match half of a rule: a concrete step or `*`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StepMatch {
+    Any,
+    Only(FaultStep),
+}
+
+/// The injected behavior of one rule.
+#[derive(Debug, Clone, PartialEq)]
+enum FaultKind {
+    /// Fail the first `times` attempts of each unit.
+    Fail { times: u32 },
+    /// Hang the first `times` attempts of each unit for `dur`.
+    Hang { dur: Duration, times: u32 },
+    /// Fail every attempt, forever.
+    Dead,
+}
+
+/// One parsed plan line.
+#[derive(Debug, Clone, PartialEq)]
+struct FaultRule {
+    /// Device name, or `None` for `*`.
+    device: Option<String>,
+    step: StepMatch,
+    kind: FaultKind,
+    /// Optional task-id scope.
+    task: Option<String>,
+    /// Optional probabilistic gate in `[0, 1]`.
+    prob: Option<f64>,
+}
+
+/// A deterministic, seedable fault-injection plan (see module docs for
+/// the grammar).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse a plan from its text form.
+    pub fn parse(text: &str) -> Result<FaultPlan, Error> {
+        let mut plan = FaultPlan::default();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err =
+                |msg: &str| Error::msg(format!("fault plan line {}: {msg}: {raw:?}", idx + 1));
+            let words: Vec<&str> = line.split_whitespace().collect();
+            if words[0] == "seed" {
+                let v = words.get(1).and_then(|w| w.parse::<u64>().ok());
+                plan.seed = v.ok_or_else(|| err("expected `seed <u64>`"))?;
+                continue;
+            }
+            if words.len() < 3 {
+                return Err(err("expected `<device> <step> <action> [k=v ...]`"));
+            }
+            let device = match words[0] {
+                "*" => None,
+                d => Some(d.to_string()),
+            };
+            let step = match words[1] {
+                "*" => StepMatch::Any,
+                "compile" => StepMatch::Only(FaultStep::Compile),
+                "exec" => StepMatch::Only(FaultStep::Exec),
+                _ => return Err(err("step must be `compile`, `exec` or `*`")),
+            };
+            let (mut kind, opts_from) = match words[2] {
+                "fail" => (FaultKind::Fail { times: 1 }, 3),
+                "dead" => (FaultKind::Dead, 3),
+                "hang" => {
+                    let dur = words
+                        .get(3)
+                        .and_then(|w| parse_duration(w))
+                        .ok_or_else(|| err("expected `hang <duration>` (e.g. 250ms, 2s)"))?;
+                    (FaultKind::Hang { dur, times: 1 }, 4)
+                }
+                _ => return Err(err("action must be `fail`, `hang <dur>` or `dead`")),
+            };
+            let mut task = None;
+            let mut prob = None;
+            for opt in &words[opts_from..] {
+                let (key, value) = opt
+                    .split_once('=')
+                    .ok_or_else(|| err("options must be `key=value`"))?;
+                match key {
+                    "times" => {
+                        let n = value.parse::<u32>().map_err(|_| err("times must be a u32"))?;
+                        match &mut kind {
+                            FaultKind::Fail { times } | FaultKind::Hang { times, .. } => *times = n,
+                            FaultKind::Dead => {
+                                return Err(err("`dead` takes no times= (it is forever)"))
+                            }
+                        }
+                    }
+                    "task" => task = Some(value.to_string()),
+                    "p" => {
+                        let p = value.parse::<f64>().map_err(|_| err("p must be a float"))?;
+                        if !(0.0..=1.0).contains(&p) {
+                            return Err(err("p must be in [0, 1]"));
+                        }
+                        prob = Some(p);
+                    }
+                    _ => return Err(err("unknown option (want times=, task=, p=)")),
+                }
+            }
+            plan.rules.push(FaultRule {
+                device,
+                step,
+                kind,
+                task,
+                prob,
+            });
+        }
+        Ok(plan)
+    }
+
+    /// Load and parse a plan file.
+    pub fn load(path: &Path) -> Result<FaultPlan, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::msg(format!("reading fault plan {}: {e}", path.display())))?;
+        FaultPlan::parse(&text)
+    }
+
+    /// Number of rules in the plan.
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// Whether the plan has no rules.
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Consult the plan at one lane step. Returns the action of the
+    /// first matching rule, or `None` for a clean step. Deterministic:
+    /// the answer depends only on the arguments and the plan itself.
+    pub fn check(
+        &self,
+        device: &str,
+        step: FaultStep,
+        task: &str,
+        job_seed: u64,
+        attempt: u32,
+    ) -> Option<FaultAction> {
+        for rule in &self.rules {
+            if let Some(d) = &rule.device {
+                if d != device {
+                    continue;
+                }
+            }
+            match rule.step {
+                StepMatch::Any => {}
+                StepMatch::Only(s) if s == step => {}
+                StepMatch::Only(_) => continue,
+            }
+            if let Some(t) = &rule.task {
+                if t != task {
+                    continue;
+                }
+            }
+            let armed = match &rule.kind {
+                FaultKind::Dead => true,
+                FaultKind::Fail { times } | FaultKind::Hang { times, .. } => attempt < *times,
+            };
+            if !armed {
+                continue;
+            }
+            if let Some(p) = rule.prob {
+                if coin(self.seed, device, task, job_seed, attempt) >= p {
+                    continue;
+                }
+            }
+            return Some(match &rule.kind {
+                FaultKind::Fail { .. } => FaultAction::Fail(format!(
+                    "injected fault: {} step failed on {device} (attempt {attempt})",
+                    step.name()
+                )),
+                FaultKind::Hang { dur, .. } => FaultAction::Hang(*dur),
+                FaultKind::Dead => FaultAction::Fail(format!(
+                    "injected fault: lane {device} is dead ({} step, attempt {attempt})",
+                    step.name()
+                )),
+            });
+        }
+        None
+    }
+}
+
+/// Deterministic per-attempt coin in `[0, 1)` for `p=` rules: FNV-1a
+/// over the full fault coordinate, so the same plan seed replays the
+/// same flips.
+fn coin(seed: u64, device: &str, task: &str, job_seed: u64, attempt: u32) -> f64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for b in bytes {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(&seed.to_le_bytes());
+    eat(device.as_bytes());
+    eat(&[0]);
+    eat(task.as_bytes());
+    eat(&job_seed.to_le_bytes());
+    eat(&attempt.to_le_bytes());
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Parse `250ms`, `2s`, or a bare millisecond count.
+fn parse_duration(word: &str) -> Option<Duration> {
+    if let Some(ms) = word.strip_suffix("ms") {
+        return ms.parse::<u64>().ok().map(Duration::from_millis);
+    }
+    if let Some(s) = word.strip_suffix('s') {
+        return s.parse::<u64>().ok().map(Duration::from_secs);
+    }
+    word.parse::<u64>().ok().map(Duration::from_millis)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_parses_every_action_and_option() {
+        let plan = FaultPlan::parse(
+            "# chaos\nseed 42\n\nb580 compile fail times=2\nlnl exec hang 250ms times=3\n* * dead task=20_LeakyReLU\nb580 exec fail p=0.5\n",
+        )
+        .unwrap();
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.seed, 42);
+        assert!(!plan.is_empty());
+
+        for bad in [
+            "b580 compile explode",
+            "b580 sideways fail",
+            "b580 compile hang",
+            "b580 compile hang soonish",
+            "b580 compile fail times=x",
+            "b580 compile fail p=2.0",
+            "b580 compile dead times=3",
+            "b580 compile fail frobnicate=1",
+            "seed notanumber",
+            "b580 fail",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn counted_fail_clears_after_its_budget() {
+        let plan = FaultPlan::parse("b580 compile fail times=2").unwrap();
+        for attempt in 0..2 {
+            let hit = plan.check("b580", FaultStep::Compile, "t", 1, attempt);
+            assert!(matches!(hit, Some(FaultAction::Fail(_))), "attempt {attempt}");
+        }
+        assert_eq!(plan.check("b580", FaultStep::Compile, "t", 1, 2), None);
+        // Wrong device / wrong step never match.
+        assert_eq!(plan.check("lnl", FaultStep::Compile, "t", 1, 0), None);
+        assert_eq!(plan.check("b580", FaultStep::Exec, "t", 1, 0), None);
+    }
+
+    #[test]
+    fn dead_matches_every_attempt_and_wildcards_match_everything() {
+        let plan = FaultPlan::parse("* * dead").unwrap();
+        for attempt in [0, 1, 17, 4096] {
+            for step in [FaultStep::Compile, FaultStep::Exec] {
+                let hit = plan.check("anything", step, "any_task", 9, attempt);
+                match hit {
+                    Some(FaultAction::Fail(msg)) => assert!(msg.contains("dead"), "{msg}"),
+                    other => panic!("expected dead fail, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hang_carries_its_duration_and_task_scope_filters() {
+        let plan = FaultPlan::parse("lnl exec hang 2s task=20_LeakyReLU").unwrap();
+        let hit = plan.check("lnl", FaultStep::Exec, "20_LeakyReLU", 3, 0);
+        assert_eq!(hit, Some(FaultAction::Hang(Duration::from_secs(2))));
+        assert_eq!(plan.check("lnl", FaultStep::Exec, "other_task", 3, 0), None);
+        assert_eq!(
+            plan.check("lnl", FaultStep::Exec, "20_LeakyReLU", 3, 1),
+            None,
+            "times=1 default"
+        );
+    }
+
+    #[test]
+    fn probabilistic_rules_are_deterministic_and_roughly_calibrated() {
+        let plan = FaultPlan::parse("seed 7\nb580 exec fail p=0.5 times=1000000").unwrap();
+        let flips: Vec<bool> = (0..400)
+            .map(|j| plan.check("b580", FaultStep::Exec, "t", j, 0).is_some())
+            .collect();
+        let again: Vec<bool> = (0..400)
+            .map(|j| plan.check("b580", FaultStep::Exec, "t", j, 0).is_some())
+            .collect();
+        assert_eq!(flips, again, "same plan replays the same coin flips");
+        let hits = flips.iter().filter(|b| **b).count();
+        assert!((100..=300).contains(&hits), "p=0.5 over 400 flips hit {hits}");
+        // A different seed flips a different schedule.
+        let other = FaultPlan::parse("seed 8\nb580 exec fail p=0.5 times=1000000").unwrap();
+        let other_flips: Vec<bool> = (0..400)
+            .map(|j| other.check("b580", FaultStep::Exec, "t", j, 0).is_some())
+            .collect();
+        assert_ne!(flips, other_flips);
+    }
+
+    #[test]
+    fn first_matching_rule_wins() {
+        let plan = FaultPlan::parse("b580 compile fail\n* * dead").unwrap();
+        match plan.check("b580", FaultStep::Compile, "t", 1, 0) {
+            Some(FaultAction::Fail(msg)) => assert!(!msg.contains("dead"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        // The catch-all still covers everything else.
+        assert!(plan.check("lnl", FaultStep::Exec, "t", 1, 5).is_some());
+    }
+}

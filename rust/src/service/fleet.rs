@@ -1,4 +1,4 @@
-//! The heterogeneous fleet scheduler: one lane per device profile.
+//! The heterogeneous fleet scheduler: one supervised lane per device.
 //!
 //! Each lane owns one (simulated) device and runs a worker thread that
 //! pops units routed to its device from the shared [`JobQueue`]. A
@@ -11,14 +11,43 @@
 //! job occupies one device while a fan-out job compares all of them —
 //! the paper's "remote access to diverse hardware" (§3.6).
 //!
-//! Per-lane counters (busy time, units, pipeline totals) feed the
-//! `stats` verb's utilization report.
+//! On top of the execution loop sits the fault-tolerance layer:
+//!
+//! * **Retries with backoff.** A *transient* unit failure (injected
+//!   fault, exceeded deadline, panic) is journalled as a `retry` record
+//!   and re-enqueued with exponential backoff and deterministic jitter
+//!   ([`backoff_delay`]). Deterministic errors (unknown task, bad custom
+//!   config) fail immediately — retrying them would only repeat the
+//!   verdict.
+//! * **Poison quarantine.** A unit that exhausts its retry budget on
+//!   one lane is committed as a deterministic failure verdict (journal
+//!   `quarantine` record, terminal like `fail`), so a poison genome can
+//!   never wedge the fleet.
+//! * **Lane supervision.** Each lane runs a [`CircuitBreaker`]:
+//!   consecutive transient failures trip it open, the open lane sheds
+//!   its *fresh* queued units — routed units reroute to a healthy peer
+//!   (journal `reroute`), fan-out units degrade to the surviving subset
+//!   (the job reports `partial`) — and after a cooldown the lane probes
+//!   half-open with a single unit. Mid-retry units stay pinned to their
+//!   lane so the retry budget, and hence the quarantine verdict, stays
+//!   deterministic.
+//! * **Deadlines.** With a configured unit deadline, a fleet-wide
+//!   supervisor thread sweeps the [`InFlight`] table and cooperatively
+//!   cancels overdue attempts (engine generation loop, worker-pool feed
+//!   and injected hangs all poll the token).
+//!
+//! Per-lane counters (busy time, units, retries, quarantines, pipeline
+//! totals) feed the `stats` verb's utilization report.
 
 use super::cache::{cache_key, ResultCache};
 use super::failpoint;
-use super::job::{DeviceResult, JobState, JobTable, TaskSource};
+use super::faults::{FaultAction, FaultPlan, FaultStep};
+use super::job::{DeviceResult, DeviceTarget, JobState, JobTable, TaskSource};
 use super::journal::{Journal, JournalRecord};
 use super::queue::{JobQueue, QueuedUnit};
+use super::supervisor::{
+    backoff_delay, CancelToken, CircuitBreaker, GuardConfig, InFlight, LaneHealth, LaneState,
+};
 use super::ServiceConfig;
 use crate::config::FoundryConfig;
 use crate::coordinator::EvolutionEngine;
@@ -30,10 +59,18 @@ use crate::obs::{labeled, Registry, TraceSink};
 use crate::report::SearchLog;
 use crate::tasks::{catalog, custom};
 use crate::util::json::Json;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// How often an open lane re-checks its queue for units to shed and its
+/// cooldown for the half-open probe.
+const OPEN_POLL: Duration = Duration::from_millis(20);
+/// How often a half-open lane polls for a probe unit.
+const HALF_OPEN_POLL: Duration = Duration::from_millis(10);
+/// Deadline-supervisor sweep interval.
+const SWEEP: Duration = Duration::from_millis(5);
 
 /// Per-lane counters, accumulated over the lane's lifetime.
 #[derive(Debug, Default)]
@@ -44,30 +81,90 @@ pub struct LaneStats {
     pub units_done: AtomicU64,
     /// Units that failed.
     pub units_failed: AtomicU64,
+    /// Transient failures that were re-enqueued with backoff.
+    pub retries: AtomicU64,
+    /// Units committed as deterministic failures after exhausting their
+    /// retry budget on this lane.
+    pub quarantined: AtomicU64,
+    /// Queued units this lane shed to a healthy peer while open.
+    pub rerouted_away: AtomicU64,
     /// Candidates executed on the lane's device across all units.
     pub executed: AtomicU64,
     /// Candidates early-rejected by the lane's compile workers.
     pub compile_rejected: AtomicU64,
 }
 
-/// One device lane: the profile plus its live counters.
+/// One device lane: the profile plus its live counters and health.
 pub struct LaneInfo {
     /// The lane's device profile.
     pub device: DeviceProfile,
     /// The lane's counters.
     pub stats: Arc<LaneStats>,
+    /// The lane's published circuit-breaker state.
+    pub health: LaneHealth,
 }
 
 /// The fleet: every lane plus the worker threads driving them.
 pub struct Fleet {
     lanes: Vec<LaneInfo>,
     handles: Mutex<Vec<thread::JoinHandle<()>>>,
+    supervisor: Mutex<Option<thread::JoinHandle<()>>>,
+    sup_stop: Arc<AtomicBool>,
     started: Instant,
 }
 
+/// Everything one lane thread needs, bundled so the loop helpers stay
+/// readable.
+struct LaneCtx {
+    device: DeviceProfile,
+    compile_workers: usize,
+    exec_workers: usize,
+    queue_capacity: usize,
+    guard: GuardConfig,
+    faults: Option<Arc<FaultPlan>>,
+    queue: Arc<JobQueue>,
+    jobs: Arc<JobTable>,
+    cache: Arc<ResultCache>,
+    journal: Option<Arc<Journal>>,
+    obs: Arc<Registry>,
+    trace: Option<Arc<TraceSink>>,
+    search_log: Option<Arc<SearchLog>>,
+    stats: Arc<LaneStats>,
+    health: LaneHealth,
+    /// `(device, health)` of every lane, in fleet order, for reroutes.
+    peers: Arc<Vec<(String, LaneHealth)>>,
+    inflight: Arc<InFlight>,
+}
+
+/// A unit attempt's failure, split by whether a retry could change the
+/// outcome.
+struct UnitError {
+    message: String,
+    /// `true` for flaky-hardware failures (injected faults, deadlines,
+    /// panics); `false` for deterministic job errors (unknown task).
+    transient: bool,
+}
+
+impl UnitError {
+    fn transient(message: String) -> UnitError {
+        UnitError {
+            message,
+            transient: true,
+        }
+    }
+
+    fn permanent(message: String) -> UnitError {
+        UnitError {
+            message,
+            transient: false,
+        }
+    }
+}
+
 impl Fleet {
-    /// Spawn one lane thread per configured device. Lanes run until the
-    /// queue shuts down (draining remaining units first).
+    /// Spawn one lane thread per configured device (plus the deadline
+    /// supervisor when `cfg.guard.unit_deadline` is set). Lanes run
+    /// until the queue shuts down (draining remaining units first).
     #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         cfg: &ServiceConfig,
@@ -79,45 +176,83 @@ impl Fleet {
         trace: Option<&Arc<TraceSink>>,
         search_log: Option<&Arc<SearchLog>>,
     ) -> Fleet {
-        let mut lanes = Vec::new();
-        let mut handles = Vec::new();
-        for device in &cfg.devices {
-            let stats = Arc::new(LaneStats::default());
-            lanes.push(LaneInfo {
+        // Pre-register the retry counter at zero so rate-based alert
+        // rules over it resolve even before the first retry.
+        obs.counter("kf_retry_total");
+        let faults = cfg
+            .fault_plan
+            .clone()
+            .filter(|p| !p.is_empty())
+            .map(Arc::new);
+        let inflight = Arc::new(InFlight::new());
+        let lanes: Vec<LaneInfo> = cfg
+            .devices
+            .iter()
+            .map(|device| LaneInfo {
                 device: device.clone(),
-                stats: Arc::clone(&stats),
-            });
-            let device = device.clone();
-            let queue = Arc::clone(queue);
-            let jobs = Arc::clone(jobs);
-            let cache = Arc::clone(cache);
-            let journal = journal.map(Arc::clone);
-            let obs = Arc::clone(obs);
-            let trace = trace.map(Arc::clone);
-            let search_log = search_log.map(Arc::clone);
-            let compile_workers = cfg.compile_workers;
-            let exec_workers = cfg.exec_workers;
-            let queue_capacity = cfg.queue_capacity;
-            handles.push(thread::spawn(move || {
-                lane_main(
-                    device,
-                    compile_workers,
-                    exec_workers,
-                    queue_capacity,
-                    queue,
-                    jobs,
-                    cache,
-                    journal,
-                    obs,
-                    trace,
-                    search_log,
-                    stats,
-                )
-            }));
+                stats: Arc::new(LaneStats::default()),
+                health: LaneHealth::new(),
+            })
+            .collect();
+        let peers: Arc<Vec<(String, LaneHealth)>> = Arc::new(
+            lanes
+                .iter()
+                .map(|l| (l.device.name.to_string(), l.health.clone()))
+                .collect(),
+        );
+        let mut handles = Vec::new();
+        for lane in &lanes {
+            obs.gauge(&labeled("kf_lane_state", "device", lane.device.name))
+                .set(LaneState::Closed.as_u8() as f64);
+            let ctx = LaneCtx {
+                device: lane.device.clone(),
+                compile_workers: cfg.compile_workers,
+                exec_workers: cfg.exec_workers,
+                queue_capacity: cfg.queue_capacity,
+                guard: cfg.guard.clone(),
+                faults: faults.clone(),
+                queue: Arc::clone(queue),
+                jobs: Arc::clone(jobs),
+                cache: Arc::clone(cache),
+                journal: journal.map(Arc::clone),
+                obs: Arc::clone(obs),
+                trace: trace.map(Arc::clone),
+                search_log: search_log.map(Arc::clone),
+                stats: Arc::clone(&lane.stats),
+                health: lane.health.clone(),
+                peers: Arc::clone(&peers),
+                inflight: Arc::clone(&inflight),
+            };
+            handles.push(thread::spawn(move || lane_main(ctx)));
         }
+        let sup_stop = Arc::new(AtomicBool::new(false));
+        let supervisor = cfg.guard.unit_deadline.map(|_| {
+            let inflight = Arc::clone(&inflight);
+            let stop = Arc::clone(&sup_stop);
+            let obs = Arc::clone(obs);
+            thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    thread::sleep(SWEEP);
+                    for (job_id, device) in inflight.expire(Instant::now()) {
+                        crate::log_warn!(
+                            "unit deadline exceeded: job {job_id} on {device} (attempt cancelled)"
+                        );
+                        obs.counter("kf_deadline_exceeded_total").inc();
+                        obs.counter(&labeled(
+                            "kf_lane_deadline_exceeded_total",
+                            "device",
+                            &device,
+                        ))
+                        .inc();
+                    }
+                }
+            })
+        });
         Fleet {
             lanes,
             handles: Mutex::new(handles),
+            supervisor: Mutex::new(supervisor),
+            sup_stop,
             started: Instant::now(),
         }
     }
@@ -142,9 +277,17 @@ impl Fleet {
         self.lanes.is_empty()
     }
 
-    /// Per-device utilization report for the `stats` verb: busy time,
-    /// unit counts and pipeline totals, with `utilization` = busy
-    /// wall-clock over fleet uptime.
+    /// Lanes whose circuit breaker is currently open (quarantined).
+    pub fn open_lanes(&self) -> usize {
+        self.lanes
+            .iter()
+            .filter(|l| l.health.get() == LaneState::Open)
+            .count()
+    }
+
+    /// Per-device utilization report for the `stats` verb: breaker
+    /// state, busy time, unit/retry counts and pipeline totals, with
+    /// `utilization` = busy wall-clock over fleet uptime.
     pub fn stats_json(&self) -> Json {
         let uptime_us = self.started.elapsed().as_micros().max(1) as f64;
         let rows: Vec<Json> = self
@@ -154,10 +297,20 @@ impl Fleet {
                 let busy_us = lane.stats.busy_us.load(Ordering::Relaxed) as f64;
                 let mut o = Json::obj();
                 o.set("device", lane.device.name)
+                    .set("state", lane.health.get().name())
                     .set("units_done", lane.stats.units_done.load(Ordering::Relaxed) as f64)
                     .set(
                         "units_failed",
                         lane.stats.units_failed.load(Ordering::Relaxed) as f64,
+                    )
+                    .set("retries", lane.stats.retries.load(Ordering::Relaxed) as f64)
+                    .set(
+                        "quarantined",
+                        lane.stats.quarantined.load(Ordering::Relaxed) as f64,
+                    )
+                    .set(
+                        "rerouted_away",
+                        lane.stats.rerouted_away.load(Ordering::Relaxed) as f64,
                     )
                     .set("executed", lane.stats.executed.load(Ordering::Relaxed) as f64)
                     .set(
@@ -172,156 +325,235 @@ impl Fleet {
         Json::Arr(rows)
     }
 
-    /// Join every lane thread (call after the queue has shut down).
+    /// Join every lane thread, then stop and join the deadline
+    /// supervisor (call after the queue has shut down).
     pub fn join(&self) {
         for handle in self.handles.lock().unwrap().drain(..) {
+            handle.join().ok();
+        }
+        self.sup_stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.supervisor.lock().unwrap().take() {
             handle.join().ok();
         }
     }
 }
 
-/// One lane's worker loop: pop → run → record, until shutdown.
-#[allow(clippy::too_many_arguments)]
-fn lane_main(
-    device: DeviceProfile,
-    compile_workers: usize,
-    exec_workers: usize,
-    queue_capacity: usize,
-    queue: Arc<JobQueue>,
-    jobs: Arc<JobTable>,
-    cache: Arc<ResultCache>,
-    journal: Option<Arc<Journal>>,
-    obs: Arc<Registry>,
-    trace: Option<Arc<TraceSink>>,
-    search_log: Option<Arc<SearchLog>>,
-    stats: Arc<LaneStats>,
-) {
-    while let Some(unit) = queue.pop_for(device.name) {
-        if let Some(jnl) = &journal {
-            let rec = JournalRecord::Dispatch {
-                job_id: unit.job_id,
-                device: device.name.to_string(),
-            };
-            if let Err(e) = jnl.append(&rec) {
-                crate::log_warn!("journal dispatch failed: {e}");
+impl LaneCtx {
+    fn journal_append(&self, rec: &JournalRecord) {
+        if let Some(jnl) = &self.journal {
+            if let Err(e) = jnl.append(rec) {
+                crate::log_warn!("journal append failed: {e}");
             }
-            failpoint::hit("dispatch.after_journal");
         }
-        if let Some(t) = &trace {
-            t.stage(stage::DISPATCHED, unit.job_id, Some(device.name));
+    }
+
+    fn trace_stage(&self, stage: &str, job_id: u64) {
+        if let Some(t) = &self.trace {
+            t.stage(stage, job_id, Some(self.device.name));
         }
-        // Queue-wait latency: submit → this lane picking the unit up.
-        if let Some(job) = jobs.get(unit.job_id) {
-            obs.observe_ms(
-                "kf_stage_queued_ms",
-                job.submitted_at.elapsed().as_secs_f64() * 1000.0,
+    }
+
+    /// Publish a breaker transition: health mirror for peers, the
+    /// `kf_lane_state` gauge and a `lane_<state>` trace mirror. No-op
+    /// when the state did not change.
+    fn publish_state(&self, state: LaneState) {
+        if self.health.get() == state {
+            return;
+        }
+        self.health.set(state);
+        self.obs
+            .gauge(&labeled("kf_lane_state", "device", self.device.name))
+            .set(state.as_u8() as f64);
+        if let Some(t) = &self.trace {
+            t.mirror_lane(state.name(), self.device.name);
+        }
+        if state == LaneState::Open {
+            crate::log_warn!(
+                "lane {} circuit breaker opened (cooldown {:?})",
+                self.device.name,
+                self.guard.lane_cooldown
             );
         }
-        jobs.set_unit_state(unit.job_id, device.name, JobState::Generating);
-        let t0 = Instant::now();
-        // catch_unwind: a panicking unit must fail *that job*, not kill
-        // the lane — a dead lane would silently remove the device from
-        // the fleet while its queued units hang forever.
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_unit(
-                &unit,
-                &device,
-                compile_workers,
-                exec_workers,
-                queue_capacity,
-                &jobs,
-                &obs,
-                trace.as_ref(),
-                search_log.as_ref(),
-                &stats,
-            )
-        }))
-        .unwrap_or_else(|_| Err("unit execution panicked (lane recovered)".to_string()));
-        stats
-            .busy_us
-            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-        obs.observe_ms("kf_stage_run_ms", t0.elapsed().as_secs_f64() * 1000.0);
-        match outcome {
-            Ok(result) => {
-                if let Some(t) = &trace {
-                    t.stage(stage::EXECUTED, unit.job_id, Some(device.name));
-                }
-                // Slot-commit protocol: the journal Commit marker is
-                // written *before* the cache row. A crash between the
-                // two is repaired idempotently at replay (the marker's
-                // result is re-inserted only if its row is missing), so
-                // no interleaving of crash points can publish a
-                // duplicate or torn verdict row.
-                if let Some(jnl) = &journal {
-                    failpoint::hit("commit.before_marker");
-                    let rec = JournalRecord::Commit {
-                        job_id: unit.job_id,
-                        device: device.name.to_string(),
-                        result: result.clone(),
-                    };
-                    if let Err(e) = jnl.append(&rec) {
-                        crate::log_warn!("journal commit failed: {e}");
+    }
+}
+
+/// One lane's supervised worker loop, driven by the breaker state:
+/// closed lanes block on the queue, open lanes shed queued units and
+/// wait out the cooldown, half-open lanes probe with single units.
+fn lane_main(ctx: LaneCtx) {
+    let mut breaker = CircuitBreaker::new(ctx.guard.trip_threshold, ctx.guard.lane_cooldown);
+    loop {
+        match breaker.state() {
+            LaneState::Closed => match ctx.queue.pop_for(ctx.device.name) {
+                Some(unit) => process_unit(&ctx, &mut breaker, unit),
+                None => return,
+            },
+            LaneState::HalfOpen => match ctx.queue.try_pop_for(ctx.device.name) {
+                Some(unit) => process_unit(&ctx, &mut breaker, unit),
+                None => {
+                    if ctx.queue.is_shutdown() && !ctx.queue.has_units_for(ctx.device.name) {
+                        return;
                     }
-                    failpoint::hit("commit.after_marker");
+                    thread::sleep(HALF_OPEN_POLL);
                 }
-                cache.insert(&cache_key(&unit.spec, device.name), result.clone());
-                failpoint::hit("commit.after_row");
-                if let Some(t) = &trace {
-                    t.stage(stage::COMMITTED, unit.job_id, Some(device.name));
+            },
+            LaneState::Open => {
+                if ctx.queue.is_shutdown() {
+                    // Drain mode: a shutting-down fleet must not strand
+                    // mid-retry units behind a cooldown.
+                    breaker.force_close();
+                    ctx.publish_state(LaneState::Closed);
+                    continue;
                 }
-                obs.counter("kf_units_committed_total").inc();
-                obs.counter(&labeled("kf_lane_units_done_total", "device", device.name))
-                    .inc();
-                stats.units_done.fetch_add(1, Ordering::Relaxed);
-                jobs.complete_unit(unit.job_id, device.name, result);
-            }
-            Err(msg) => {
-                if let Some(t) = &trace {
-                    t.stage(stage::FAILED, unit.job_id, Some(device.name));
+                shed_queued(&ctx);
+                if breaker.try_half_open(Instant::now()) {
+                    ctx.publish_state(LaneState::HalfOpen);
+                    continue;
                 }
-                obs.counter("kf_units_failed_total").inc();
-                obs.counter(&labeled("kf_lane_units_failed_total", "device", device.name))
-                    .inc();
-                if let Some(jnl) = &journal {
-                    let rec = JournalRecord::Fail {
-                        job_id: unit.job_id,
-                        device: device.name.to_string(),
-                        error: msg.clone(),
-                    };
-                    if let Err(e) = jnl.append(&rec) {
-                        crate::log_warn!("journal fail failed: {e}");
-                    }
-                }
-                stats.units_failed.fetch_add(1, Ordering::Relaxed);
-                jobs.fail_unit(unit.job_id, device.name, msg);
+                thread::sleep(OPEN_POLL);
             }
         }
     }
 }
 
-/// Execute one unit: resolve the task, build engine + pool for this
-/// lane's device, run the evolution loop, summarize.
-#[allow(clippy::too_many_arguments)]
-fn run_unit(
-    unit: &QueuedUnit,
-    device: &DeviceProfile,
-    compile_workers: usize,
-    exec_workers: usize,
-    queue_capacity: usize,
-    jobs: &JobTable,
-    obs: &Arc<Registry>,
-    trace: Option<&Arc<TraceSink>>,
-    search_log: Option<&Arc<SearchLog>>,
-    stats: &LaneStats,
-) -> Result<DeviceResult, String> {
-    let task = match &unit.spec.task {
-        TaskSource::Catalog(id) => {
-            catalog::find_task(id).ok_or_else(|| format!("unknown task '{id}'"))?
+/// Dispatch → run → commit/retry/quarantine/fail for one popped unit.
+fn process_unit(ctx: &LaneCtx, breaker: &mut CircuitBreaker, unit: QueuedUnit) {
+    let device = ctx.device.name;
+    ctx.journal_append(&JournalRecord::Dispatch {
+        job_id: unit.job_id,
+        device: device.to_string(),
+    });
+    failpoint::hit("dispatch.after_journal");
+    ctx.trace_stage(stage::DISPATCHED, unit.job_id);
+    // Queue-wait latency: submit → this lane picking the unit up. Only
+    // the first attempt counts — retries would fold backoff waits in.
+    if unit.attempt == 0 {
+        if let Some(job) = ctx.jobs.get(unit.job_id) {
+            ctx.obs.observe_ms(
+                "kf_stage_queued_ms",
+                job.submitted_at.elapsed().as_secs_f64() * 1000.0,
+            );
         }
-        TaskSource::Custom { config, source } => custom::load_strings(config, source)
-            .map_err(|e| format!("custom task: {e}"))?
-            .spec,
+    }
+    ctx.jobs.set_unit_state(unit.job_id, device, JobState::Generating);
+    let t0 = Instant::now();
+    let outcome = run_attempt(ctx, &unit);
+    ctx.stats
+        .busy_us
+        .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+    ctx.obs
+        .observe_ms("kf_stage_run_ms", t0.elapsed().as_secs_f64() * 1000.0);
+    match outcome {
+        Ok(result) => {
+            breaker.on_success();
+            ctx.publish_state(LaneState::Closed);
+            commit_unit(ctx, &unit, result);
+        }
+        Err(err) if err.transient => {
+            if breaker.on_failure(Instant::now()) {
+                ctx.obs.counter("kf_lane_trips_total").inc();
+                ctx.obs
+                    .counter(&labeled("kf_lane_trips_total", "device", device))
+                    .inc();
+            }
+            ctx.publish_state(breaker.state());
+            retry_or_quarantine(ctx, unit, err.message);
+        }
+        Err(err) => {
+            // Deterministic job error (unknown task, bad custom config):
+            // the lane is healthy, the job is not — neither trips nor
+            // resets the breaker, and a retry would repeat the verdict.
+            fail_unit(ctx, &unit, err.message);
+        }
+    }
+}
+
+/// Register the attempt with the deadline table (when configured) and
+/// run it, converting panics into transient failures — a panicking unit
+/// must fail *that job*, not kill the lane.
+fn run_attempt(ctx: &LaneCtx, unit: &QueuedUnit) -> Result<DeviceResult, UnitError> {
+    let token = CancelToken::new();
+    if let Some(d) = ctx.guard.unit_deadline {
+        ctx.inflight
+            .begin(unit.job_id, ctx.device.name, Instant::now() + d, token.clone());
+    }
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_unit(ctx, unit, &token)
+    }))
+    .unwrap_or_else(|_| {
+        Err(UnitError::transient(
+            "unit execution panicked (lane recovered)".to_string(),
+        ))
+    });
+    if ctx.guard.unit_deadline.is_some() {
+        ctx.inflight.end(unit.job_id, ctx.device.name);
+    }
+    outcome
+}
+
+/// The transient error an attempt reports when its cancel token fired.
+fn deadline_error(ctx: &LaneCtx) -> UnitError {
+    let ms = ctx.guard.unit_deadline.map(|d| d.as_millis()).unwrap_or(0);
+    UnitError::transient(format!(
+        "unit deadline {ms}ms exceeded on {}",
+        ctx.device.name
+    ))
+}
+
+/// Consult the fault plan at one step of an attempt. `Fail` becomes a
+/// transient error; `Hang` sleeps cooperatively — the attempt survives
+/// a hang that ends before the deadline (a hang models a stalled
+/// device; the deadline decides fatality).
+fn inject(
+    ctx: &LaneCtx,
+    unit: &QueuedUnit,
+    step: FaultStep,
+    task_id: &str,
+    token: &CancelToken,
+) -> Result<(), UnitError> {
+    let Some(plan) = &ctx.faults else {
+        return Ok(());
     };
+    match plan.check(ctx.device.name, step, task_id, unit.spec.seed, unit.attempt) {
+        None => Ok(()),
+        Some(FaultAction::Fail(msg)) => {
+            ctx.obs.counter("kf_faults_injected_total").inc();
+            Err(UnitError::transient(msg))
+        }
+        Some(FaultAction::Hang(dur)) => {
+            ctx.obs.counter("kf_faults_injected_total").inc();
+            if token.sleep_cooperative(dur) {
+                Ok(())
+            } else {
+                Err(deadline_error(ctx))
+            }
+        }
+    }
+}
+
+/// Execute one unit attempt: resolve the task, build engine + pool for
+/// this lane's device (both wired to the cancel token), run the
+/// evolution loop, summarize.
+fn run_unit(
+    ctx: &LaneCtx,
+    unit: &QueuedUnit,
+    token: &CancelToken,
+) -> Result<DeviceResult, UnitError> {
+    let device = &ctx.device;
+    let task_id = match &unit.spec.task {
+        TaskSource::Catalog(id) => id.clone(),
+        TaskSource::Custom { .. } => "custom".to_string(),
+    };
+    let task = match &unit.spec.task {
+        TaskSource::Catalog(id) => catalog::find_task(id)
+            .ok_or_else(|| UnitError::permanent(format!("unknown task '{id}'")))?,
+        TaskSource::Custom { config, source } => {
+            custom::load_strings(config, source)
+                .map_err(|e| UnitError::permanent(format!("custom task: {e}")))?
+                .spec
+        }
+    };
+    inject(ctx, unit, FaultStep::Compile, &task_id, token)?;
     let mut config = FoundryConfig::paper_defaults();
     config.seed = unit.spec.seed;
     config.device = device.name.to_string();
@@ -330,46 +562,222 @@ fn run_unit(
     config.evolution.population = unit.spec.population;
 
     let mut engine = EvolutionEngine::new(config, task, ExecBackend::HwSim(device.clone()));
+    engine.attach_cancel(token.flag());
     // Search-history rows are labeled with the unit's cache key, so a
     // run's per-generation curves join its persisted result row.
-    if let Some(log) = search_log {
+    if let Some(log) = &ctx.search_log {
         engine.attach_search_log(Arc::clone(log), &cache_key(&unit.spec, device.name));
     }
     // The lane's Fig. 4 cluster, seeded so every verdict matches the
     // engine's inline pipeline (see `EvalPipeline::seed`).
-    let pool = WorkerPool::new(ClusterConfig {
-        compile_workers,
-        exec_workers,
+    let mut pool = WorkerPool::new(ClusterConfig {
+        compile_workers: ctx.compile_workers,
+        exec_workers: ctx.exec_workers,
         device: device.clone(),
-        queue_capacity,
+        queue_capacity: ctx.queue_capacity,
         seed: engine.pipeline.seed(),
     });
+    pool.set_cancel(token.flag());
 
     // Engine + Fig. 4 cluster are built: generation is set up and the
     // compile workers are live — the unit's `compiled` trace point.
-    if let Some(t) = trace {
-        t.stage(stage::COMPILED, unit.job_id, Some(device.name));
-    }
-    jobs.set_unit_state(unit.job_id, device.name, JobState::Evaluating);
+    ctx.trace_stage(stage::COMPILED, unit.job_id);
+    ctx.jobs
+        .set_unit_state(unit.job_id, device.name, JobState::Evaluating);
+    inject(ctx, unit, FaultStep::Exec, &task_id, token)?;
     let t0 = Instant::now();
     let report = engine.run_distributed(&pool);
     let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    obs.observe_ms("kf_unit_evolution_ms", wall_ms);
+    ctx.obs.observe_ms("kf_unit_evolution_ms", wall_ms);
+    if token.is_cancelled() {
+        // The deadline fired mid-run; the loop bailed early, so the
+        // partial report must not be committed as a verdict.
+        return Err(deadline_error(ctx));
+    }
 
-    stats
+    ctx.stats
         .executed
         .fetch_add(pool.metrics.executed.load(Ordering::Relaxed), Ordering::Relaxed);
-    stats.compile_rejected.fetch_add(
+    ctx.stats.compile_rejected.fetch_add(
         pool.metrics.compile_rejected.load(Ordering::Relaxed),
         Ordering::Relaxed,
     );
     Ok(DeviceResult::from_report(device.name, &report, wall_ms))
 }
 
+/// Slot-commit a finished unit: journal Commit marker *before* the
+/// cache row, so a crash between the two is repaired idempotently at
+/// replay (the marker's result is re-inserted only if its row is
+/// missing) and no interleaving of crash points can publish a duplicate
+/// or torn verdict row.
+fn commit_unit(ctx: &LaneCtx, unit: &QueuedUnit, result: DeviceResult) {
+    let device = ctx.device.name;
+    ctx.trace_stage(stage::EXECUTED, unit.job_id);
+    if ctx.journal.is_some() {
+        failpoint::hit("commit.before_marker");
+        ctx.journal_append(&JournalRecord::Commit {
+            job_id: unit.job_id,
+            device: device.to_string(),
+            result: result.clone(),
+        });
+        failpoint::hit("commit.after_marker");
+    }
+    ctx.cache.insert(&cache_key(&unit.spec, device), result.clone());
+    failpoint::hit("commit.after_row");
+    ctx.trace_stage(stage::COMMITTED, unit.job_id);
+    ctx.obs.counter("kf_units_committed_total").inc();
+    ctx.obs
+        .counter(&labeled("kf_lane_units_done_total", "device", device))
+        .inc();
+    ctx.stats.units_done.fetch_add(1, Ordering::Relaxed);
+    ctx.jobs.complete_unit(unit.job_id, device, result);
+}
+
+/// Terminally fail a unit (journal Fail, trace, counters, job table).
+fn fail_unit(ctx: &LaneCtx, unit: &QueuedUnit, error: String) {
+    let device = ctx.device.name;
+    ctx.trace_stage(stage::FAILED, unit.job_id);
+    ctx.obs.counter("kf_units_failed_total").inc();
+    ctx.obs
+        .counter(&labeled("kf_lane_units_failed_total", "device", device))
+        .inc();
+    ctx.journal_append(&JournalRecord::Fail {
+        job_id: unit.job_id,
+        device: device.to_string(),
+        error: error.clone(),
+    });
+    ctx.stats.units_failed.fetch_add(1, Ordering::Relaxed);
+    ctx.jobs.fail_unit(unit.job_id, device, error);
+}
+
+/// After a transient failure: re-enqueue with backoff while the retry
+/// budget lasts, else quarantine the unit as a deterministic failure
+/// verdict. The journal record in each path is durable *before* the
+/// in-memory effect (`retry.after_journal` / `quarantine.after_journal`
+/// crash points), mirroring the slot-commit protocol.
+fn retry_or_quarantine(ctx: &LaneCtx, unit: QueuedUnit, error: String) {
+    let device = ctx.device.name;
+    let attempts = unit.attempt + 1;
+    if attempts > ctx.guard.max_retries {
+        ctx.journal_append(&JournalRecord::Quarantine {
+            job_id: unit.job_id,
+            device: device.to_string(),
+            error: error.clone(),
+            attempts,
+        });
+        failpoint::hit("quarantine.after_journal");
+        ctx.trace_stage(stage::QUARANTINED, unit.job_id);
+        ctx.obs.counter("kf_units_quarantined_total").inc();
+        ctx.obs
+            .counter(&labeled("kf_lane_quarantined_total", "device", device))
+            .inc();
+        ctx.obs.counter("kf_units_failed_total").inc();
+        ctx.obs
+            .counter(&labeled("kf_lane_units_failed_total", "device", device))
+            .inc();
+        ctx.stats.quarantined.fetch_add(1, Ordering::Relaxed);
+        ctx.stats.units_failed.fetch_add(1, Ordering::Relaxed);
+        crate::log_warn!(
+            "unit quarantined: job {} after {attempts} attempts on {device}: {error}",
+            unit.job_id
+        );
+        ctx.jobs.fail_unit(
+            unit.job_id,
+            device,
+            format!("quarantined after {attempts} attempts on {device}: {error}"),
+        );
+        return;
+    }
+    ctx.journal_append(&JournalRecord::Retry {
+        job_id: unit.job_id,
+        device: device.to_string(),
+        attempt: attempts,
+        error: error.clone(),
+    });
+    failpoint::hit("retry.after_journal");
+    ctx.trace_stage(stage::RETRIED, unit.job_id);
+    ctx.obs.counter("kf_retry_total").inc();
+    ctx.obs
+        .counter(&labeled("kf_lane_retries_total", "device", device))
+        .inc();
+    ctx.stats.retries.fetch_add(1, Ordering::Relaxed);
+    let delay = backoff_delay(ctx.guard.retry_backoff, attempts, unit.job_id, device);
+    ctx.obs
+        .observe_ms("kf_retry_backoff_ms", delay.as_secs_f64() * 1000.0);
+    crate::log_warn!(
+        "unit retry: job {} on {device}, attempt {attempts} of {} in {delay:?}: {error}",
+        unit.job_id,
+        ctx.guard.max_retries + 1
+    );
+    ctx.jobs.set_unit_state(unit.job_id, device, JobState::Queued);
+    ctx.trace_stage(stage::QUEUED, unit.job_id);
+    let mut retried = unit;
+    retried.attempt = attempts;
+    retried.not_before = Some(Instant::now() + delay);
+    ctx.queue.requeue(retried);
+}
+
+/// An open lane sheds its *fresh* queued units (attempt 0): routed
+/// units move to the first healthy peer in fleet order (journal
+/// `reroute`); fan-out units degrade — their job reports `partial` for
+/// the surviving subset. Mid-retry units stay pinned so the quarantine
+/// verdict stays deterministic (the half-open probe runs them).
+fn shed_queued(ctx: &LaneCtx) {
+    let device = ctx.device.name;
+    for unit in ctx.queue.drain_fresh_for(device) {
+        let fan_out = matches!(unit.spec.device, DeviceTarget::FanOut);
+        let target = if fan_out {
+            // A fan-out unit exists to measure *this* device — there is
+            // no substitute lane; degrade instead.
+            None
+        } else {
+            ctx.peers
+                .iter()
+                .find(|(name, health)| name.as_str() != device && health.accepts_reroutes())
+                .map(|(name, _)| name.clone())
+        };
+        let rerouted = match &target {
+            Some(to) => {
+                ctx.journal_append(&JournalRecord::Reroute {
+                    job_id: unit.job_id,
+                    from: device.to_string(),
+                    to: to.clone(),
+                });
+                ctx.jobs.reroute_unit(unit.job_id, device, to)
+            }
+            None => false,
+        };
+        if rerouted {
+            let to = target.expect("rerouted implies a target");
+            ctx.trace_stage(stage::REROUTED, unit.job_id);
+            ctx.obs.counter("kf_units_rerouted_total").inc();
+            ctx.obs
+                .counter(&labeled("kf_lane_rerouted_total", "device", device))
+                .inc();
+            ctx.stats.rerouted_away.fetch_add(1, Ordering::Relaxed);
+            crate::log_warn!(
+                "lane {device} open: rerouting job {} unit to {to}",
+                unit.job_id
+            );
+            let mut moved = unit;
+            moved.device = to;
+            ctx.queue.requeue(moved);
+        } else {
+            let why = if fan_out {
+                "fan-out degraded to surviving devices"
+            } else {
+                "no healthy lane to take the unit"
+            };
+            let msg = format!("lane {device} open (circuit breaker): {why}");
+            fail_unit(ctx, &unit, msg);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::service::job::{Job, JobPriority, JobSpec, JobUnit};
+    use crate::service::job::{Job, JobSpec, JobUnit};
 
     type Fixture = (ServiceConfig, Arc<JobQueue>, Arc<JobTable>, Arc<ResultCache>);
 
@@ -389,6 +797,29 @@ mod tests {
         )
     }
 
+    fn insert_routed_job(jobs: &JobTable, queue: &JobQueue, id: u64, spec: &JobSpec, device: &str) {
+        jobs.insert(Job {
+            id,
+            spec: spec.clone(),
+            submitted_at: Instant::now(),
+            units: vec![JobUnit {
+                device: device.to_string(),
+                state: JobState::Queued,
+                result: None,
+                error: None,
+            }],
+        });
+        queue.push(vec![QueuedUnit::fresh(id, device, spec.clone())]).unwrap();
+    }
+
+    fn wait_finished(jobs: &JobTable, id: u64, secs: u64) {
+        let deadline = Instant::now() + Duration::from_secs(secs);
+        while !jobs.get(id).unwrap().state().finished() {
+            assert!(Instant::now() < deadline, "job {id} did not finish in time");
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+
     /// A lane executes a queued unit end-to-end: job table completion,
     /// cache population and stats accounting.
     #[test]
@@ -402,32 +833,8 @@ mod tests {
         let mut spec = JobSpec::catalog("20_LeakyReLU", "b580");
         spec.iters = 2;
         spec.population = 2;
-        jobs.insert(Job {
-            id: 1,
-            spec: spec.clone(),
-            submitted_at: Instant::now(),
-            units: vec![JobUnit {
-                device: "b580".to_string(),
-                state: JobState::Queued,
-                result: None,
-                error: None,
-            }],
-        });
-        queue
-            .push(vec![QueuedUnit {
-                job_id: 1,
-                device: "b580".to_string(),
-                priority: JobPriority::Normal,
-                seq: 0,
-                spec: spec.clone(),
-            }])
-            .unwrap();
-
-        let deadline = Instant::now() + std::time::Duration::from_secs(30);
-        while !jobs.get(1).unwrap().state().finished() {
-            assert!(Instant::now() < deadline, "unit did not finish in time");
-            thread::sleep(std::time::Duration::from_millis(5));
-        }
+        insert_routed_job(&jobs, &queue, 1, &spec, "b580");
+        wait_finished(&jobs, 1, 30);
         let job = jobs.get(1).unwrap();
         assert_eq!(job.state(), JobState::Done);
         let result = job.units[0].result.as_ref().expect("unit result");
@@ -437,6 +844,7 @@ mod tests {
         assert_eq!(cache.len(), 1, "completed unit populated the cache");
         assert_eq!(fleet.lanes[0].stats.units_done.load(Ordering::Relaxed), 1);
         assert!(fleet.lanes[0].stats.busy_us.load(Ordering::Relaxed) > 0);
+        assert_eq!(fleet.open_lanes(), 0);
         assert_eq!(obs.counter_value("kf_units_committed_total"), 1);
         assert_eq!(
             obs.counter_value(&labeled("kf_lane_units_done_total", "device", "b580")),
@@ -448,43 +856,182 @@ mod tests {
         fleet.join();
     }
 
-    /// A run-time failure (task unknown at execution) marks the unit —
-    /// and hence the job — failed instead of wedging the lane.
+    /// A deterministic failure (task unknown at execution) marks the
+    /// unit — and hence the job — failed immediately: no retries, no
+    /// breaker trip, and the lane survives.
     #[test]
     fn lane_survives_a_failing_unit() {
         let (cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
         let obs = Arc::new(Registry::new());
         let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None, &obs, None, None);
         let spec = JobSpec::catalog("no_such_task", "b580");
-        jobs.insert(Job {
-            id: 1,
-            spec: spec.clone(),
-            submitted_at: Instant::now(),
-            units: vec![JobUnit {
-                device: "b580".to_string(),
-                state: JobState::Queued,
-                result: None,
-                error: None,
-            }],
-        });
-        queue
-            .push(vec![QueuedUnit {
-                job_id: 1,
-                device: "b580".to_string(),
-                priority: JobPriority::Normal,
-                seq: 0,
-                spec,
-            }])
-            .unwrap();
-        let deadline = Instant::now() + std::time::Duration::from_secs(10);
-        while !jobs.get(1).unwrap().state().finished() {
-            assert!(Instant::now() < deadline, "unit did not finish in time");
-            thread::sleep(std::time::Duration::from_millis(5));
-        }
+        insert_routed_job(&jobs, &queue, 1, &spec, "b580");
+        wait_finished(&jobs, 1, 10);
         let job = jobs.get(1).unwrap();
         assert_eq!(job.state(), JobState::Failed);
         assert!(job.units[0].error.as_ref().unwrap().contains("unknown task"));
         assert_eq!(fleet.lanes[0].stats.units_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(fleet.lanes[0].stats.retries.load(Ordering::Relaxed), 0);
+        assert_eq!(obs.counter_value("kf_retry_total"), 0);
+        assert_eq!(fleet.open_lanes(), 0);
+        queue.shutdown();
+        fleet.join();
+    }
+
+    /// Injected transient failures retry with backoff and the unit
+    /// still commits exactly one verdict.
+    #[test]
+    fn transient_failures_retry_then_commit_exactly_once() {
+        let (mut cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
+        cfg.guard.retry_backoff = Duration::from_millis(10);
+        cfg.fault_plan =
+            Some(FaultPlan::parse("seed 1\nb580 compile fail times=2").expect("plan"));
+        let obs = Arc::new(Registry::new());
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None, &obs, None, None);
+        let mut spec = JobSpec::catalog("20_LeakyReLU", "b580");
+        spec.iters = 2;
+        spec.population = 2;
+        insert_routed_job(&jobs, &queue, 1, &spec, "b580");
+        wait_finished(&jobs, 1, 30);
+        let job = jobs.get(1).unwrap();
+        assert_eq!(job.state(), JobState::Done, "{:?}", job.units[0].error);
+        assert_eq!(cache.len(), 1, "exactly one verdict row");
+        assert_eq!(fleet.lanes[0].stats.retries.load(Ordering::Relaxed), 2);
+        assert_eq!(fleet.lanes[0].stats.units_done.load(Ordering::Relaxed), 1);
+        assert_eq!(obs.counter_value("kf_retry_total"), 2);
+        assert_eq!(obs.counter_value("kf_faults_injected_total"), 2);
+        assert!(obs.histogram("kf_retry_backoff_ms").snapshot().count() == 2);
+        queue.shutdown();
+        fleet.join();
+    }
+
+    /// A permanently failing unit exhausts its retry budget and is
+    /// quarantined with a deterministic failure verdict.
+    #[test]
+    fn poison_unit_is_quarantined_after_its_budget() {
+        let (mut cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
+        cfg.guard.max_retries = 1;
+        cfg.guard.retry_backoff = Duration::from_millis(10);
+        // High trip threshold: this test isolates the retry budget from
+        // the breaker.
+        cfg.guard.trip_threshold = 10;
+        cfg.fault_plan = Some(FaultPlan::parse("b580 * dead").expect("plan"));
+        let obs = Arc::new(Registry::new());
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None, &obs, None, None);
+        let mut spec = JobSpec::catalog("20_LeakyReLU", "b580");
+        spec.iters = 2;
+        spec.population = 2;
+        insert_routed_job(&jobs, &queue, 1, &spec, "b580");
+        wait_finished(&jobs, 1, 30);
+        let job = jobs.get(1).unwrap();
+        assert_eq!(job.state(), JobState::Failed);
+        let error = job.units[0].error.as_ref().unwrap();
+        assert!(error.contains("quarantined after 2 attempts"), "{error}");
+        assert_eq!(cache.len(), 0, "no verdict row for a quarantined unit");
+        assert_eq!(fleet.lanes[0].stats.quarantined.load(Ordering::Relaxed), 1);
+        assert_eq!(fleet.lanes[0].stats.retries.load(Ordering::Relaxed), 1);
+        assert_eq!(obs.counter_value("kf_units_quarantined_total"), 1);
+        queue.shutdown();
+        fleet.join();
+    }
+
+    /// A tripped lane quarantines itself: fresh routed units reroute to
+    /// a healthy peer and fan-out units degrade to the surviving subset
+    /// (the job reports `partial`).
+    #[test]
+    fn open_lane_reroutes_routed_units_and_degrades_fan_out() {
+        let (mut cfg, queue, jobs, cache) =
+            fleet_fixture(vec![DeviceProfile::b580(), DeviceProfile::lnl()]);
+        cfg.guard.max_retries = 0;
+        cfg.guard.trip_threshold = 1;
+        cfg.guard.retry_backoff = Duration::from_millis(10);
+        // Long cooldown: b580 stays open for the whole test.
+        cfg.guard.lane_cooldown = Duration::from_secs(60);
+        cfg.fault_plan = Some(FaultPlan::parse("b580 * dead").expect("plan"));
+        let obs = Arc::new(Registry::new());
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None, &obs, None, None);
+
+        let mut spec = JobSpec::catalog("20_LeakyReLU", "b580");
+        spec.iters = 2;
+        spec.population = 2;
+        // Job 1 trips the breaker (max_retries 0 → quarantined at once).
+        insert_routed_job(&jobs, &queue, 1, &spec, "b580");
+        wait_finished(&jobs, 1, 30);
+        assert_eq!(jobs.get(1).unwrap().state(), JobState::Failed);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while fleet.open_lanes() != 1 {
+            assert!(Instant::now() < deadline, "lane never opened");
+            thread::sleep(Duration::from_millis(5));
+        }
+
+        // Job 2, routed to the open lane, is rerouted to lnl and done.
+        insert_routed_job(&jobs, &queue, 2, &spec, "b580");
+        wait_finished(&jobs, 2, 30);
+        let job2 = jobs.get(2).unwrap();
+        assert_eq!(job2.state(), JobState::Done, "{:?}", job2.units[0].error);
+        assert_eq!(job2.units[0].device, "lnl");
+        assert_eq!(job2.units[0].result.as_ref().unwrap().device, "lnl");
+
+        // Job 3, fan-out: the b580 unit degrades, the lnl unit runs →
+        // the job lands on `partial` naming the dead lane.
+        let mut fan_spec = spec.clone();
+        fan_spec.device = DeviceTarget::FanOut;
+        jobs.insert(Job {
+            id: 3,
+            spec: fan_spec.clone(),
+            submitted_at: Instant::now(),
+            units: ["b580", "lnl"]
+                .iter()
+                .map(|d| JobUnit {
+                    device: d.to_string(),
+                    state: JobState::Queued,
+                    result: None,
+                    error: None,
+                })
+                .collect(),
+        });
+        queue
+            .push(vec![
+                QueuedUnit::fresh(3, "b580", fan_spec.clone()),
+                QueuedUnit::fresh(3, "lnl", fan_spec.clone()),
+            ])
+            .unwrap();
+        wait_finished(&jobs, 3, 30);
+        let job3 = jobs.get(3).unwrap();
+        assert_eq!(job3.state(), JobState::Partial);
+        let b580_unit = job3.units.iter().find(|u| u.device == "b580").unwrap();
+        assert!(
+            b580_unit.error.as_ref().unwrap().contains("fan-out degraded"),
+            "{:?}",
+            b580_unit.error
+        );
+        assert!(job3.units.iter().any(|u| u.result.is_some()));
+        assert!(fleet.lanes[0].stats.rerouted_away.load(Ordering::Relaxed) >= 1);
+        assert!(obs.counter_value("kf_units_rerouted_total") >= 1);
+        queue.shutdown();
+        fleet.join();
+    }
+
+    /// A hung attempt is cancelled by the deadline supervisor and the
+    /// retry succeeds — hangs cost a deadline, not the fleet.
+    #[test]
+    fn hung_unit_hits_its_deadline_and_retries_clean() {
+        let (mut cfg, queue, jobs, cache) = fleet_fixture(vec![DeviceProfile::b580()]);
+        cfg.guard.unit_deadline = Some(Duration::from_millis(250));
+        cfg.guard.retry_backoff = Duration::from_millis(10);
+        cfg.guard.trip_threshold = 10;
+        cfg.fault_plan = Some(FaultPlan::parse("b580 exec hang 60s times=1").expect("plan"));
+        let obs = Arc::new(Registry::new());
+        let fleet = Fleet::spawn(&cfg, &queue, &jobs, &cache, None, &obs, None, None);
+        let mut spec = JobSpec::catalog("20_LeakyReLU", "b580");
+        spec.iters = 2;
+        spec.population = 2;
+        insert_routed_job(&jobs, &queue, 1, &spec, "b580");
+        wait_finished(&jobs, 1, 30);
+        let job = jobs.get(1).unwrap();
+        assert_eq!(job.state(), JobState::Done, "{:?}", job.units[0].error);
+        assert!(obs.counter_value("kf_deadline_exceeded_total") >= 1);
+        assert_eq!(fleet.lanes[0].stats.retries.load(Ordering::Relaxed), 1);
         queue.shutdown();
         fleet.join();
     }

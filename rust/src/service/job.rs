@@ -72,6 +72,10 @@ pub enum JobState {
     Failed,
     /// Removed from the queue before any lane picked it up.
     Cancelled,
+    /// Aggregate-only state: some units finished, others failed (a
+    /// fan-out job degraded to the surviving lanes). Individual units
+    /// are never `Partial`.
+    Partial,
 }
 
 impl JobState {
@@ -84,12 +88,17 @@ impl JobState {
             JobState::Done => "done",
             JobState::Failed => "failed",
             JobState::Cancelled => "cancelled",
+            JobState::Partial => "partial",
         }
     }
 
-    /// Whether the state is terminal (done / failed / cancelled).
+    /// Whether the state is terminal (done / failed / cancelled /
+    /// partial).
     pub fn finished(&self) -> bool {
-        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+        matches!(
+            self,
+            JobState::Done | JobState::Failed | JobState::Cancelled | JobState::Partial
+        )
     }
 }
 
@@ -407,7 +416,9 @@ pub struct Job {
 
 impl Job {
     /// Aggregate state over the units: active beats queued beats
-    /// terminal; among terminal states failed beats cancelled beats done.
+    /// terminal; among terminal states, failed-with-done is `partial`
+    /// (a degraded fan-out still delivered results), all-failed beats
+    /// cancelled beats done.
     pub fn state(&self) -> JobState {
         let any = |s: JobState| self.units.iter().any(|u| u.state == s);
         if any(JobState::Evaluating) {
@@ -417,7 +428,11 @@ impl Job {
         } else if any(JobState::Queued) {
             JobState::Queued
         } else if any(JobState::Failed) {
-            JobState::Failed
+            if any(JobState::Done) {
+                JobState::Partial
+            } else {
+                JobState::Failed
+            }
         } else if any(JobState::Cancelled) {
             JobState::Cancelled
         } else {
@@ -486,6 +501,8 @@ pub struct JobCounts {
     pub failed: usize,
     /// Jobs that were cancelled.
     pub cancelled: usize,
+    /// Fan-out jobs that degraded: some units done, some failed.
+    pub partial: usize,
 }
 
 impl JobCounts {
@@ -497,7 +514,8 @@ impl JobCounts {
             .set("running", self.running)
             .set("done", self.done)
             .set("failed", self.failed)
-            .set("cancelled", self.cancelled);
+            .set("cancelled", self.cancelled)
+            .set("partial", self.partial);
         o
     }
 }
@@ -599,9 +617,33 @@ impl JobTable {
                 JobState::Done => c.done += 1,
                 JobState::Failed => c.failed += 1,
                 JobState::Cancelled => c.cancelled += 1,
+                JobState::Partial => c.partial += 1,
             }
         }
         c
+    }
+
+    /// Move one live unit of a job from one device to another (the
+    /// circuit breaker rerouting off a quarantined lane). Returns
+    /// whether a unit was moved — false if the unit is already
+    /// terminal, already moved, or the job owns a unit on `to` (fan-out
+    /// units degrade in place instead of rerouting).
+    pub fn reroute_unit(&self, id: u64, from: &str, to: &str) -> bool {
+        let mut jobs = self.jobs.lock().unwrap();
+        let Some(job) = jobs.get_mut(&id) else {
+            return false;
+        };
+        if job.units.iter().any(|u| u.device == to) {
+            return false;
+        }
+        if let Some(unit) = job.units.iter_mut().find(|u| u.device == from) {
+            if !unit.state.finished() {
+                unit.device = to.to_string();
+                unit.state = JobState::Queued;
+                return true;
+            }
+        }
+        false
     }
 }
 
@@ -682,11 +724,38 @@ mod tests {
         let j = job(2, vec![unit("a", JobState::Queued), unit("b", JobState::Done)]);
         assert_eq!(j.state(), JobState::Queued);
         let j = job(3, vec![unit("a", JobState::Done), unit("b", JobState::Failed)]);
-        assert_eq!(j.state(), JobState::Failed);
+        assert_eq!(j.state(), JobState::Partial, "done + failed degrades, not fails");
         let j = job(4, vec![unit("a", JobState::Done), unit("b", JobState::Done)]);
         assert_eq!(j.state(), JobState::Done);
         let j = job(5, vec![unit("a", JobState::Cancelled), unit("b", JobState::Done)]);
         assert_eq!(j.state(), JobState::Cancelled);
+        let j = job(6, vec![unit("a", JobState::Failed), unit("b", JobState::Failed)]);
+        assert_eq!(j.state(), JobState::Failed);
+        let j = job(7, vec![unit("a", JobState::Failed), unit("b", JobState::Evaluating)]);
+        assert_eq!(j.state(), JobState::Evaluating, "active units still beat terminal");
+        assert!(JobState::Partial.finished());
+    }
+
+    #[test]
+    fn reroute_moves_only_live_unoccupied_units() {
+        let t = JobTable::new();
+        t.insert(job(1, vec![unit("a6000", JobState::Queued)]));
+        assert!(t.reroute_unit(1, "a6000", "lnl"));
+        let u = &t.get(1).unwrap().units[0];
+        assert_eq!((u.device.as_str(), u.state), ("lnl", JobState::Queued));
+        // Already moved: the unit is no longer on a6000.
+        assert!(!t.reroute_unit(1, "a6000", "b580"));
+
+        // Fan-out job owning a unit on the target: refuse.
+        t.insert(job(
+            2,
+            vec![unit("a6000", JobState::Queued), unit("lnl", JobState::Queued)],
+        ));
+        assert!(!t.reroute_unit(2, "a6000", "lnl"));
+
+        // Terminal units stay put.
+        t.insert(job(3, vec![unit("a6000", JobState::Failed)]));
+        assert!(!t.reroute_unit(3, "a6000", "lnl"));
     }
 
     #[test]

@@ -20,6 +20,9 @@
 //! | `commit`   | a unit finished, *before* its result-cache row     |
 //! | `fail`     | a unit errored                                     |
 //! | `cancel`   | units removed from the queue (or submit rollback)  |
+//! | `retry`    | a transient unit failure, before re-enqueueing     |
+//! | `reroute`  | a queued unit moved off a quarantined lane         |
+//! | `quarantine` | a unit exhausted its retry budget (terminal)     |
 //!
 //! # The slot-commit protocol
 //!
@@ -146,6 +149,41 @@ pub enum JournalRecord {
         /// Devices of the cancelled units.
         devices: Vec<String>,
     },
+    /// A unit failed transiently and is being re-enqueued (written
+    /// before the unit goes back on the queue, so a crash in the window
+    /// replays the unit as queued — at-least-once, never lost).
+    Retry {
+        /// Job the unit belongs to.
+        job_id: u64,
+        /// The lane's device.
+        device: String,
+        /// Attempt count *after* this failure (1 = first retry pending).
+        attempt: u32,
+        /// The transient error that triggered the retry.
+        error: String,
+    },
+    /// A queued unit was moved off a quarantined (circuit-open) lane to
+    /// a healthy one. Replay re-enqueues the unit on `to`.
+    Reroute {
+        /// Job the unit belongs to.
+        job_id: u64,
+        /// The lane the unit was queued on.
+        from: String,
+        /// The healthy lane it was moved to.
+        to: String,
+    },
+    /// A unit exhausted its retry budget on one lane: a terminal,
+    /// deterministic failure verdict (the poison-genome quarantine).
+    Quarantine {
+        /// Job the unit belongs to.
+        job_id: u64,
+        /// The lane's device.
+        device: String,
+        /// The last error observed.
+        error: String,
+        /// Total attempts consumed (initial try + retries).
+        attempts: u32,
+    },
 }
 
 impl JournalRecord {
@@ -194,6 +232,26 @@ impl JournalRecord {
                 o.set("t", "cancel")
                     .set("job_id", *job_id as usize)
                     .set("devices", devices.clone());
+            }
+            JournalRecord::Retry { job_id, device, attempt, error } => {
+                o.set("t", "retry")
+                    .set("job_id", *job_id as usize)
+                    .set("device", device.as_str())
+                    .set("attempt", *attempt as usize)
+                    .set("error", error.as_str());
+            }
+            JournalRecord::Reroute { job_id, from, to } => {
+                o.set("t", "reroute")
+                    .set("job_id", *job_id as usize)
+                    .set("from", from.as_str())
+                    .set("to", to.as_str());
+            }
+            JournalRecord::Quarantine { job_id, device, error, attempts } => {
+                o.set("t", "quarantine")
+                    .set("job_id", *job_id as usize)
+                    .set("device", device.as_str())
+                    .set("error", error.as_str())
+                    .set("attempts", *attempts as usize);
             }
         }
         o
@@ -249,6 +307,23 @@ impl JournalRecord {
                     .map(|d| d.as_str().map(str::to_string))
                     .collect::<Option<Vec<_>>>()?,
             }),
+            "retry" => Some(JournalRecord::Retry {
+                job_id: job_id?,
+                device: device?,
+                attempt: v.get("attempt")?.as_usize()? as u32,
+                error: v.get("error")?.as_str()?.to_string(),
+            }),
+            "reroute" => Some(JournalRecord::Reroute {
+                job_id: job_id?,
+                from: v.get("from")?.as_str()?.to_string(),
+                to: v.get("to")?.as_str()?.to_string(),
+            }),
+            "quarantine" => Some(JournalRecord::Quarantine {
+                job_id: job_id?,
+                device: device?,
+                error: v.get("error")?.as_str()?.to_string(),
+                attempts: v.get("attempts")?.as_usize()? as u32,
+            }),
             _ => None,
         }
     }
@@ -279,6 +354,10 @@ pub struct ReplayUnit {
     pub device: String,
     /// Folded lifecycle state.
     pub state: ReplayUnitState,
+    /// Highest retry attempt journaled for the unit (0 = never
+    /// retried). Re-enqueued units carry this forward so a crash
+    /// mid-retry cannot reset the retry budget.
+    pub attempts: u32,
 }
 
 /// One replayed job.
@@ -332,6 +411,7 @@ impl ReplayState {
                             } else {
                                 ReplayUnitState::Queued
                             },
+                            attempts: 0,
                         })
                         .collect(),
                 });
@@ -372,6 +452,53 @@ impl ReplayState {
                         ) {
                             unit.state = ReplayUnitState::Cancelled;
                         }
+                    }
+                }
+            }
+            JournalRecord::Retry { job_id, device, attempt, .. } => {
+                if let Some(unit) = self.unit_mut(*job_id, device) {
+                    if matches!(
+                        unit.state,
+                        ReplayUnitState::Queued | ReplayUnitState::Dispatched
+                    ) {
+                        unit.state = ReplayUnitState::Queued;
+                        // max() keeps the fold idempotent: replaying the
+                        // same retry twice cannot inflate the budget.
+                        unit.attempts = unit.attempts.max(*attempt);
+                    }
+                }
+            }
+            JournalRecord::Reroute { job_id, from, to } => {
+                // Move the unit iff it is still live on `from` and `to`
+                // is unoccupied (fan-out jobs own one unit per device
+                // and are never rerouted; the guard makes a duplicate
+                // replay a no-op, keeping the fold idempotent).
+                let occupied = self
+                    .jobs
+                    .get(job_id)
+                    .is_some_and(|j| j.units.iter().any(|u| u.device == *to));
+                if !occupied {
+                    if let Some(unit) = self.unit_mut(*job_id, from) {
+                        if matches!(
+                            unit.state,
+                            ReplayUnitState::Queued | ReplayUnitState::Dispatched
+                        ) {
+                            unit.device = to.clone();
+                            unit.state = ReplayUnitState::Queued;
+                        }
+                    }
+                }
+            }
+            JournalRecord::Quarantine { job_id, device, error, attempts } => {
+                if let Some(unit) = self.unit_mut(*job_id, device) {
+                    if !matches!(
+                        unit.state,
+                        ReplayUnitState::Committed(_) | ReplayUnitState::Cancelled
+                    ) {
+                        unit.state = ReplayUnitState::Failed(format!(
+                            "quarantined after {attempts} attempts: {error}"
+                        ));
+                        unit.attempts = unit.attempts.max(*attempts);
                     }
                 }
             }
@@ -570,11 +697,99 @@ mod tests {
                 error: "boom".to_string(),
             },
             JournalRecord::Cancel { job_id: 3, devices: vec!["b580".to_string()] },
+            JournalRecord::Retry {
+                job_id: 5,
+                device: "b580".to_string(),
+                attempt: 2,
+                error: "injected fault: exec step failed".to_string(),
+            },
+            JournalRecord::Reroute {
+                job_id: 5,
+                from: "a6000".to_string(),
+                to: "lnl".to_string(),
+            },
+            JournalRecord::Quarantine {
+                job_id: 5,
+                device: "b580".to_string(),
+                error: "injected fault: exec step failed".to_string(),
+                attempts: 3,
+            },
         ];
         for rec in records {
             let back = JournalRecord::from_json(&rec.to_json());
             assert_eq!(back.as_ref(), Some(&rec), "round trip for {rec:?}");
         }
+    }
+
+    #[test]
+    fn replay_folds_retry_reroute_and_quarantine() {
+        // Job 1: dispatch → transient failure → retry → (crash here
+        // replays as queued with the budget preserved).
+        // Job 2: retried twice, then quarantined — terminal and sticky.
+        // Job 3: queued on a quarantined lane, rerouted to a healthy one.
+        let recs = vec![
+            submit(1, "b580", false),
+            JournalRecord::Dispatch { job_id: 1, device: "b580".to_string() },
+            JournalRecord::Retry {
+                job_id: 1,
+                device: "b580".to_string(),
+                attempt: 1,
+                error: "transient".to_string(),
+            },
+            submit(2, "b580", false),
+            JournalRecord::Dispatch { job_id: 2, device: "b580".to_string() },
+            JournalRecord::Retry {
+                job_id: 2,
+                device: "b580".to_string(),
+                attempt: 1,
+                error: "transient".to_string(),
+            },
+            JournalRecord::Dispatch { job_id: 2, device: "b580".to_string() },
+            JournalRecord::Quarantine {
+                job_id: 2,
+                device: "b580".to_string(),
+                error: "transient".to_string(),
+                attempts: 2,
+            },
+            submit(3, "a6000", false),
+            JournalRecord::Reroute {
+                job_id: 3,
+                from: "a6000".to_string(),
+                to: "lnl".to_string(),
+            },
+        ];
+        let state = replay(&recs);
+        assert_eq!(state.jobs[&1].units[0].state, ReplayUnitState::Queued);
+        assert_eq!(state.jobs[&1].units[0].attempts, 1, "retry budget survives replay");
+        assert_eq!(
+            state.jobs[&2].units[0].state,
+            ReplayUnitState::Failed("quarantined after 2 attempts: transient".to_string())
+        );
+        assert_eq!(state.jobs[&3].units[0].device, "lnl");
+        assert_eq!(state.jobs[&3].units[0].state, ReplayUnitState::Queued);
+
+        // Idempotence of the new kinds: a second application of the
+        // same retry / reroute / quarantine records changes nothing.
+        let mut state2 = state.clone();
+        for rec in &recs {
+            state2.apply(rec);
+        }
+        // Jobs 2 and 3 fold to the same place; job 1's retry re-queues
+        // the (already queued) unit without inflating attempts.
+        assert_eq!(state2, state);
+
+        // A quarantined unit is sticky against late dispatch/commit.
+        let mut state3 = state.clone();
+        state3.apply(&JournalRecord::Dispatch { job_id: 2, device: "b580".to_string() });
+        state3.apply(&JournalRecord::Commit {
+            job_id: 2,
+            device: "b580".to_string(),
+            result: sample_result("b580"),
+        });
+        assert_eq!(
+            state3.jobs[&2].units[0].state,
+            ReplayUnitState::Failed("quarantined after 2 attempts: transient".to_string())
+        );
     }
 
     #[test]

@@ -29,14 +29,17 @@
 pub mod api;
 pub mod cache;
 pub mod failpoint;
+pub mod faults;
 pub mod fleet;
 pub mod job;
 pub mod journal;
 pub mod proto;
 pub mod queue;
+pub mod supervisor;
 
 pub use api::{Client, Server};
 pub use cache::ResultCache;
+pub use faults::{FaultAction, FaultPlan, FaultStep};
 pub use fleet::Fleet;
 pub use job::{
     DeviceResult, DeviceTarget, Job, JobCounts, JobPriority, JobSpec, JobState, JobTable,
@@ -45,6 +48,7 @@ pub use job::{
 pub use journal::{Journal, JournalRecord};
 pub use proto::Request;
 pub use queue::{JobQueue, QueuedUnit, QueueError};
+pub use supervisor::{CircuitBreaker, GuardConfig, LaneState};
 
 use crate::dist::ClusterConfig;
 use crate::hwsim::DeviceProfile;
@@ -112,6 +116,13 @@ pub struct ServiceConfig {
     pub alert_log_path: Option<PathBuf>,
     /// Cadence of the daemon-side alert ticker.
     pub alert_interval: Duration,
+    /// Fault-tolerance knobs for the fleet lanes: retry budget,
+    /// per-unit deadline, circuit-breaker thresholds and backoff
+    /// parameters (see [`supervisor::GuardConfig`]).
+    pub guard: GuardConfig,
+    /// Deterministic fault-injection plan (`--fault-plan`; `None` =
+    /// no injected faults — production). See [`faults::FaultPlan`].
+    pub fault_plan: Option<FaultPlan>,
 }
 
 /// Default journal owner-lease TTL (seconds).
@@ -136,6 +147,8 @@ impl Default for ServiceConfig {
             alert_rules_path: None,
             alert_log_path: None,
             alert_interval: Duration::from_millis(DEFAULT_ALERT_INTERVAL_MS),
+            guard: GuardConfig::default(),
+            fault_plan: None,
         }
     }
 }
@@ -180,6 +193,7 @@ fn requeue_unit(
     job_id: u64,
     spec: &JobSpec,
     device: String,
+    attempts: u32,
     cfg: &ServiceConfig,
     to_queue: &mut Vec<QueuedUnit>,
     stats: &mut ReplayStats,
@@ -187,13 +201,11 @@ fn requeue_unit(
 ) -> job::JobUnit {
     if cfg.devices.iter().any(|d| d.name == device) {
         stats.requeued_units += 1;
-        to_queue.push(QueuedUnit {
-            job_id,
-            device: device.clone(),
-            priority: spec.priority,
-            seq: 0,
-            spec: spec.clone(),
-        });
+        let mut unit = QueuedUnit::fresh(job_id, &device, spec.clone());
+        // A crash mid-retry must not reset the unit's retry budget:
+        // replay carries the journaled attempt count forward.
+        unit.attempt = attempts;
+        to_queue.push(unit);
         job::JobUnit {
             device,
             state: JobState::Queued,
@@ -381,6 +393,7 @@ impl KernelService {
                 let mut lost = false;
                 for ru in rj.units {
                     let key = cache::cache_key(&rj.spec, &ru.device);
+                    let attempts = ru.attempts;
                     units.push(match ru.state {
                         ReplayUnitState::Committed(result) => {
                             // Exactly-once slot repair: the commit marker
@@ -412,6 +425,7 @@ impl KernelService {
                                 id,
                                 &rj.spec,
                                 ru.device,
+                                attempts,
                                 &cfg,
                                 &mut to_queue,
                                 &mut replay_stats,
@@ -426,6 +440,7 @@ impl KernelService {
                             id,
                             &rj.spec,
                             ru.device,
+                            attempts,
                             &cfg,
                             &mut to_queue,
                             &mut replay_stats,
@@ -602,13 +617,7 @@ impl KernelService {
                         result: None,
                         error: None,
                     });
-                    to_queue.push(QueuedUnit {
-                        job_id: id,
-                        device: device.clone(),
-                        priority: spec.priority,
-                        seq: 0,
-                        spec: spec.clone(),
-                    });
+                    to_queue.push(QueuedUnit::fresh(id, device, spec.clone()));
                 }
             }
         }
@@ -745,6 +754,9 @@ impl KernelService {
         self.obs
             .gauge("kf_replay_lost_jobs")
             .set(self.replay_stats.lost_jobs as f64);
+        self.obs
+            .gauge("kf_lanes_open")
+            .set(self.fleet.open_lanes() as f64);
     }
 
     /// The full metrics registry — per-daemon counters merged with the

@@ -11,6 +11,7 @@
 use super::job::{JobPriority, JobSpec};
 use std::fmt;
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 /// One queued (job × device) execution unit.
 #[derive(Debug, Clone)]
@@ -25,6 +26,32 @@ pub struct QueuedUnit {
     pub seq: u64,
     /// The full job spec (the lane resolves the task and runs it).
     pub spec: JobSpec,
+    /// Attempts already spent on this unit (0 = never dispatched; a
+    /// retry re-enters the queue with the count advanced).
+    pub attempt: u32,
+    /// Earliest pop time — retry backoff lives *in* the queue, so
+    /// delayed units still count against depth and stay cancellable.
+    pub not_before: Option<Instant>,
+}
+
+impl QueuedUnit {
+    /// A fresh, immediately-eligible unit (attempt 0, no delay).
+    pub fn fresh(job_id: u64, device: &str, spec: JobSpec) -> QueuedUnit {
+        QueuedUnit {
+            job_id,
+            device: device.to_string(),
+            priority: spec.priority,
+            seq: 0,
+            spec,
+            attempt: 0,
+            not_before: None,
+        }
+    }
+
+    /// Whether the unit may pop at `now`.
+    fn due(&self, now: Instant) -> bool {
+        self.not_before.map(|t| t <= now).unwrap_or(true)
+    }
 }
 
 /// Why a push was rejected.
@@ -117,40 +144,124 @@ impl JobQueue {
         Ok(())
     }
 
-    /// Block until a unit routed to `device` is available and pop the
-    /// best one (highest priority, then lowest sequence number). Returns
-    /// `None` once the queue has shut down and holds no more work for
-    /// this device — queued units are drained before lanes exit.
+    /// Re-admit a unit that already held queue capacity (a retry after a
+    /// transient failure, or a unit rerouted off a quarantined lane).
+    /// Bypasses the capacity check — re-admission never grows the total
+    /// unit count past what [`JobQueue::push`] admitted — and is allowed
+    /// during shutdown so the drain can finish a unit's retry budget.
+    pub fn requeue(&self, mut unit: QueuedUnit) {
+        let mut state = self.state.lock().unwrap();
+        unit.seq = state.next_seq;
+        state.next_seq += 1;
+        state.units.push(unit);
+        self.available.notify_all();
+    }
+
+    /// The best currently-due unit for `device`: highest priority, then
+    /// lowest sequence number; units whose `not_before` is in the future
+    /// are skipped. Returns the index and, when nothing is due, the
+    /// earliest `not_before` among this device's delayed units.
+    fn best_for(
+        state: &QueueState,
+        device: &str,
+        now: Instant,
+    ) -> (Option<usize>, Option<Instant>) {
+        let mut best: Option<usize> = None;
+        let mut earliest: Option<Instant> = None;
+        for (i, u) in state.units.iter().enumerate() {
+            if u.device != device {
+                continue;
+            }
+            if !u.due(now) {
+                let due = u.not_before.unwrap();
+                earliest = Some(earliest.map_or(due, |e| e.min(due)));
+                continue;
+            }
+            best = match best {
+                None => Some(i),
+                Some(b) => {
+                    let cur = &state.units[b];
+                    if (u.priority, std::cmp::Reverse(u.seq))
+                        > (cur.priority, std::cmp::Reverse(cur.seq))
+                    {
+                        Some(i)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        (best, earliest)
+    }
+
+    /// Block until a unit routed to `device` is due and pop the best one
+    /// (highest priority, then lowest sequence number; backoff-delayed
+    /// units wait out their `not_before`). Returns `None` once the queue
+    /// has shut down and holds no more work for this device — queued
+    /// units (including pending retries) are drained before lanes exit.
     pub fn pop_for(&self, device: &str) -> Option<QueuedUnit> {
         let mut state = self.state.lock().unwrap();
         loop {
-            let mut best: Option<usize> = None;
-            for (i, u) in state.units.iter().enumerate() {
-                if u.device != device {
-                    continue;
-                }
-                best = match best {
-                    None => Some(i),
-                    Some(b) => {
-                        let cur = &state.units[b];
-                        if (u.priority, std::cmp::Reverse(u.seq))
-                            > (cur.priority, std::cmp::Reverse(cur.seq))
-                        {
-                            Some(i)
-                        } else {
-                            Some(b)
-                        }
-                    }
-                };
-            }
+            let now = Instant::now();
+            let (best, earliest) = Self::best_for(&state, device, now);
             if let Some(i) = best {
                 return Some(state.units.remove(i));
             }
-            if state.shutdown {
-                return None;
+            match earliest {
+                Some(due) => {
+                    // Only delayed units remain: sleep until the first
+                    // comes due (a push wakes us earlier). Shutdown does
+                    // not shortcut this — pending retries drain too.
+                    let wait = due.saturating_duration_since(now);
+                    let (s, _) = self.available.wait_timeout(state, wait).unwrap();
+                    state = s;
+                }
+                None => {
+                    if state.shutdown {
+                        return None;
+                    }
+                    state = self.available.wait(state).unwrap();
+                }
             }
-            state = self.available.wait(state).unwrap();
         }
+    }
+
+    /// Non-blocking [`JobQueue::pop_for`]: the best due unit, or `None`
+    /// right away. Half-open lanes probe with this so they can re-check
+    /// their breaker between polls.
+    pub fn try_pop_for(&self, device: &str) -> Option<QueuedUnit> {
+        let mut state = self.state.lock().unwrap();
+        let (best, _) = Self::best_for(&state, device, Instant::now());
+        best.map(|i| state.units.remove(i))
+    }
+
+    /// Whether any unit (due or delayed) is queued for `device`.
+    pub fn has_units_for(&self, device: &str) -> bool {
+        self.state.lock().unwrap().units.iter().any(|u| u.device == device)
+    }
+
+    /// Whether [`JobQueue::shutdown`] was called.
+    pub fn is_shutdown(&self) -> bool {
+        self.state.lock().unwrap().shutdown
+    }
+
+    /// Remove and return every *fresh* (attempt 0) unit routed to
+    /// `device`. An open lane sheds its queued backlog with this —
+    /// fresh units get rerouted or degraded, while units already
+    /// mid-retry on this lane stay queued for the half-open probe (their
+    /// failure history belongs to this lane's quarantine budget).
+    pub fn drain_fresh_for(&self, device: &str) -> Vec<QueuedUnit> {
+        let mut state = self.state.lock().unwrap();
+        let mut shed = Vec::new();
+        state.units.retain(|u| {
+            if u.device == device && u.attempt == 0 {
+                shed.push(u.clone());
+                false
+            } else {
+                true
+            }
+        });
+        shed
     }
 
     /// Remove every still-queued unit of a job; returns the device names
@@ -189,6 +300,8 @@ mod tests {
             priority,
             seq: 0,
             spec: JobSpec::catalog("20_LeakyReLU", device),
+            attempt: 0,
+            not_before: None,
         }
     }
 
@@ -266,5 +379,56 @@ mod tests {
         q.shutdown();
         assert_eq!(q.pop_for("b580").unwrap().job_id, 1);
         assert!(q.pop_for("b580").is_none());
+    }
+
+    #[test]
+    fn delayed_units_wait_out_their_backoff_even_through_shutdown() {
+        let q = JobQueue::new(4);
+        let mut u = unit(1, "b580", JobPriority::Normal);
+        u.attempt = 1;
+        u.not_before = Some(std::time::Instant::now() + std::time::Duration::from_millis(40));
+        q.requeue(u);
+        assert!(q.try_pop_for("b580").is_none(), "not due yet");
+        assert!(q.has_units_for("b580"), "delayed unit still counts as queued");
+        q.shutdown();
+        // pop_for drains the pending retry instead of dropping it.
+        let t = std::time::Instant::now();
+        let popped = q.pop_for("b580").expect("drains the delayed retry");
+        assert_eq!(popped.attempt, 1);
+        assert!(t.elapsed() >= std::time::Duration::from_millis(25), "waited for the backoff");
+        assert!(q.pop_for("b580").is_none(), "then exits");
+    }
+
+    #[test]
+    fn requeue_bypasses_capacity_and_try_pop_respects_priority() {
+        let q = JobQueue::new(1);
+        q.push(vec![unit(1, "b580", JobPriority::Normal)]).unwrap();
+        assert!(q.push(vec![unit(2, "b580", JobPriority::Normal)]).is_err(), "full");
+        let mut retry = unit(3, "b580", JobPriority::High);
+        retry.attempt = 2;
+        q.requeue(retry);
+        assert_eq!(q.len(), 2, "re-admission is exempt from the capacity check");
+        assert_eq!(q.try_pop_for("b580").unwrap().job_id, 3, "priority still wins");
+        assert_eq!(q.try_pop_for("b580").unwrap().job_id, 1);
+        assert!(q.try_pop_for("b580").is_none());
+    }
+
+    #[test]
+    fn drain_fresh_sheds_only_never_attempted_units_of_the_device() {
+        let q = JobQueue::new(8);
+        q.push(vec![unit(1, "b580", JobPriority::Normal)]).unwrap();
+        q.push(vec![unit(2, "lnl", JobPriority::Normal)]).unwrap();
+        let mut retrying = unit(3, "b580", JobPriority::Normal);
+        retrying.attempt = 1;
+        q.requeue(retrying);
+        let shed = q.drain_fresh_for("b580");
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].job_id, 1);
+        assert!(q.has_units_for("lnl"), "other devices untouched");
+        assert_eq!(
+            q.try_pop_for("b580").unwrap().job_id,
+            3,
+            "mid-retry unit stays for the half-open probe"
+        );
     }
 }

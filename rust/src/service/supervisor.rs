@@ -1,0 +1,467 @@
+//! Lane supervision primitives: circuit breaker, cooperative cancel
+//! tokens, deadline tracking and retry backoff (DESIGN.md §11).
+//!
+//! The state machine each lane runs (one [`CircuitBreaker`] per lane):
+//!
+//! ```text
+//!            trip_threshold consecutive
+//!            transient failures
+//!   CLOSED ────────────────────────────▶ OPEN
+//!     ▲  ▲                                │ lane sheds its queued
+//!     │  │ probe                          │ units (reroute fan-in,
+//!     │  │ succeeds                       │ degrade fan-out) and
+//!     │  │                                │ waits out the cooldown
+//!     │  │         cooldown elapsed       ▼
+//!     │  └──────────────────────────── HALF-OPEN
+//!     │                                   │ one probe unit runs
+//!     └──────────── probe fails ──────────┘ (failure re-opens)
+//! ```
+//!
+//! Failures that count toward the trip threshold are *infrastructure*
+//! failures (injected faults, deadlines, panics) — a bad job spec says
+//! nothing about lane health and neither counts nor resets.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Slice length for cooperative sleeps and supervisor scans: short
+/// enough that deadlines and cancellations land promptly, long enough
+/// to cost nothing.
+const TICK: Duration = Duration::from_millis(5);
+
+/// Per-lane fault-tolerance knobs, carried in `ServiceConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GuardConfig {
+    /// Transient-failure retries per unit before it is quarantined
+    /// (total attempts = `max_retries + 1`).
+    pub max_retries: u32,
+    /// Wall-clock deadline per unit attempt; `None` disables the
+    /// deadline supervisor.
+    pub unit_deadline: Option<Duration>,
+    /// Consecutive transient failures that trip a lane's breaker open.
+    pub trip_threshold: u32,
+    /// Base retry backoff; attempt `n` waits `base * 2^(n-1)` ± 25%
+    /// deterministic jitter.
+    pub retry_backoff: Duration,
+    /// How long an open lane waits before probing half-open.
+    pub lane_cooldown: Duration,
+}
+
+impl Default for GuardConfig {
+    fn default() -> GuardConfig {
+        GuardConfig {
+            max_retries: 2,
+            unit_deadline: None,
+            trip_threshold: 3,
+            retry_backoff: Duration::from_millis(100),
+            lane_cooldown: Duration::from_millis(1000),
+        }
+    }
+}
+
+/// Circuit-breaker position of one lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneState {
+    /// Healthy: the lane pulls and runs units normally.
+    Closed,
+    /// Probing: one unit runs; its outcome closes or re-opens the lane.
+    HalfOpen,
+    /// Quarantined: the lane sheds queued units and waits out the
+    /// cooldown.
+    Open,
+}
+
+impl LaneState {
+    /// Stable wire/gauge encoding (`kf_lane_state`): closed=0,
+    /// half-open=1, open=2.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            LaneState::Closed => 0,
+            LaneState::HalfOpen => 1,
+            LaneState::Open => 2,
+        }
+    }
+
+    /// Decode the gauge encoding (unknown values read as closed).
+    pub fn from_u8(v: u8) -> LaneState {
+        match v {
+            1 => LaneState::HalfOpen,
+            2 => LaneState::Open,
+            _ => LaneState::Closed,
+        }
+    }
+
+    /// Human/state-file name.
+    pub fn name(self) -> &'static str {
+        match self {
+            LaneState::Closed => "closed",
+            LaneState::HalfOpen => "half_open",
+            LaneState::Open => "open",
+        }
+    }
+}
+
+/// The shareable mirror of a lane's breaker state: the lane thread
+/// writes it on every transition; stats, metrics and peer lanes
+/// (choosing reroute targets) read it lock-free.
+#[derive(Debug, Clone, Default)]
+pub struct LaneHealth(Arc<AtomicU8>);
+
+impl LaneHealth {
+    /// A new mirror, starting closed.
+    pub fn new() -> LaneHealth {
+        LaneHealth::default()
+    }
+
+    /// Current state.
+    pub fn get(&self) -> LaneState {
+        LaneState::from_u8(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Publish a transition.
+    pub fn set(&self, state: LaneState) {
+        self.0.store(state.as_u8(), Ordering::Relaxed);
+    }
+
+    /// Whether the lane can accept rerouted work (anything not open).
+    pub fn accepts_reroutes(&self) -> bool {
+        self.get() != LaneState::Open
+    }
+}
+
+/// The closed→open→half-open breaker guarding one lane. Owned by the
+/// lane thread; every transition is mirrored into a [`LaneHealth`] by
+/// the caller. Methods take `now` so tests drive a fake clock.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown: Duration,
+    consecutive: u32,
+    state: LaneState,
+    opened_at: Option<Instant>,
+}
+
+impl CircuitBreaker {
+    /// A closed breaker tripping after `threshold` consecutive
+    /// transient failures and cooling down for `cooldown` once open.
+    pub fn new(threshold: u32, cooldown: Duration) -> CircuitBreaker {
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            cooldown,
+            consecutive: 0,
+            state: LaneState::Closed,
+            opened_at: None,
+        }
+    }
+
+    /// Current position.
+    pub fn state(&self) -> LaneState {
+        self.state
+    }
+
+    /// A unit succeeded: the streak resets and a half-open probe
+    /// success closes the lane.
+    pub fn on_success(&mut self) {
+        self.consecutive = 0;
+        self.state = LaneState::Closed;
+        self.opened_at = None;
+    }
+
+    /// A transient (infrastructure) failure. Returns `true` when this
+    /// failure transitions the lane to open — either the streak reached
+    /// the threshold, or a half-open probe failed.
+    pub fn on_failure(&mut self, now: Instant) -> bool {
+        self.consecutive = self.consecutive.saturating_add(1);
+        let trip = match self.state {
+            LaneState::Open => false,
+            LaneState::HalfOpen => true,
+            LaneState::Closed => self.consecutive >= self.threshold,
+        };
+        if trip {
+            self.state = LaneState::Open;
+            self.opened_at = Some(now);
+        }
+        trip
+    }
+
+    /// While open: transition to half-open once the cooldown has
+    /// elapsed. Returns `true` on the transition.
+    pub fn try_half_open(&mut self, now: Instant) -> bool {
+        if self.state != LaneState::Open {
+            return false;
+        }
+        let ready = self
+            .opened_at
+            .map(|t| now.duration_since(t) >= self.cooldown)
+            .unwrap_or(true);
+        if ready {
+            self.state = LaneState::HalfOpen;
+        }
+        ready
+    }
+
+    /// Drain mode (service shutdown): force the breaker closed so the
+    /// lane can finish its remaining queued units — every unit still
+    /// reaches a terminal verdict through the retry/quarantine budget.
+    pub fn force_close(&mut self) {
+        self.consecutive = 0;
+        self.state = LaneState::Closed;
+        self.opened_at = None;
+    }
+}
+
+/// A shareable cooperative-cancellation flag for one unit attempt: the
+/// deadline supervisor sets it; the lane's engine loop, worker pool and
+/// injected hangs poll it.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, uncancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation (idempotent).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether cancellation was requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// The raw flag, for engine/pool hooks that poll an `AtomicBool`.
+    pub fn flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.0)
+    }
+
+    /// Sleep up to `dur`, waking early on cancellation. Returns `true`
+    /// when the full duration elapsed uncancelled, `false` when the
+    /// sleep was cut short — injected hangs use this so a deadline
+    /// never has to wait out the hang.
+    pub fn sleep_cooperative(&self, dur: Duration) -> bool {
+        let deadline = Instant::now() + dur;
+        loop {
+            if self.is_cancelled() {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return true;
+            }
+            std::thread::sleep(TICK.min(deadline - now));
+        }
+    }
+}
+
+/// One registered in-flight unit attempt.
+#[derive(Debug)]
+struct InFlightEntry {
+    token: CancelToken,
+    deadline: Instant,
+    fired: bool,
+}
+
+/// The fleet-wide table of in-flight unit attempts with deadlines. Lane
+/// threads register an attempt before running it and deregister after;
+/// the deadline supervisor thread sweeps the table and cancels overdue
+/// tokens. Units without a deadline are never registered.
+#[derive(Debug, Default)]
+pub struct InFlight {
+    entries: Mutex<Vec<((u64, String), InFlightEntry)>>,
+}
+
+impl InFlight {
+    /// An empty table.
+    pub fn new() -> InFlight {
+        InFlight::default()
+    }
+
+    /// Register an attempt of `(job_id, device)` due at `deadline`.
+    pub fn begin(&self, job_id: u64, device: &str, deadline: Instant, token: CancelToken) {
+        self.entries.lock().unwrap().push((
+            (job_id, device.to_string()),
+            InFlightEntry {
+                token,
+                deadline,
+                fired: false,
+            },
+        ));
+    }
+
+    /// Deregister an attempt (the lane finished it, however it ended).
+    pub fn end(&self, job_id: u64, device: &str) {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(i) = entries
+            .iter()
+            .position(|(k, _)| k.0 == job_id && k.1 == device)
+        {
+            entries.remove(i);
+        }
+    }
+
+    /// Cancel every overdue attempt, returning the `(job, device)`
+    /// pairs whose deadline fired on *this* sweep (each fires once).
+    pub fn expire(&self, now: Instant) -> Vec<(u64, String)> {
+        let mut fired = Vec::new();
+        let mut entries = self.entries.lock().unwrap();
+        for (key, entry) in entries.iter_mut() {
+            if !entry.fired && now >= entry.deadline {
+                entry.fired = true;
+                entry.token.cancel();
+                fired.push(key.clone());
+            }
+        }
+        fired
+    }
+
+    /// Attempts currently registered (for stats/tests).
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Whether no attempt is in flight.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The delay before retry number `attempt` (1-based) of a unit:
+/// exponential in the attempt with deterministic ±25% jitter derived
+/// from `(job_id, device, attempt)`, so lanes desynchronize their
+/// retries without a random source.
+pub fn backoff_delay(base: Duration, attempt: u32, job_id: u64, device: &str) -> Duration {
+    let exp = base.saturating_mul(1u32 << (attempt.saturating_sub(1)).min(6));
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in job_id
+        .to_le_bytes()
+        .iter()
+        .chain(device.as_bytes())
+        .chain(&attempt.to_le_bytes())
+    {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    // Jitter factor in [0.75, 1.25).
+    let jitter = 0.75 + (h >> 11) as f64 / (1u64 << 53) as f64 * 0.5;
+    Duration::from_secs_f64(exp.as_secs_f64() * jitter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breaker_walks_the_full_state_machine() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(2, Duration::from_millis(100));
+        assert_eq!(b.state(), LaneState::Closed);
+
+        assert!(!b.on_failure(t0), "below threshold: still closed");
+        b.on_success();
+        assert!(!b.on_failure(t0), "success reset the streak");
+        assert!(b.on_failure(t0), "second consecutive failure trips");
+        assert_eq!(b.state(), LaneState::Open);
+        assert!(!b.on_failure(t0), "failures while open do not re-trip");
+
+        assert!(!b.try_half_open(t0 + Duration::from_millis(50)), "cooldown pending");
+        assert_eq!(b.state(), LaneState::Open);
+        assert!(b.try_half_open(t0 + Duration::from_millis(150)));
+        assert_eq!(b.state(), LaneState::HalfOpen);
+
+        assert!(b.on_failure(t0), "failed probe re-opens immediately");
+        assert_eq!(b.state(), LaneState::Open);
+        assert!(b.try_half_open(t0 + Duration::from_secs(1)));
+        b.on_success();
+        assert_eq!(b.state(), LaneState::Closed, "successful probe closes");
+
+        b.on_failure(t0);
+        b.force_close();
+        assert_eq!(b.state(), LaneState::Closed, "drain mode force-closes");
+    }
+
+    #[test]
+    fn lane_health_mirrors_and_gates_reroutes() {
+        let h = LaneHealth::new();
+        assert_eq!(h.get(), LaneState::Closed);
+        assert!(h.accepts_reroutes());
+        h.set(LaneState::Open);
+        assert_eq!(h.get(), LaneState::Open);
+        assert!(!h.accepts_reroutes());
+        h.set(LaneState::HalfOpen);
+        assert!(h.accepts_reroutes());
+        assert_eq!(LaneState::from_u8(LaneState::Open.as_u8()), LaneState::Open);
+        assert_eq!(LaneState::Open.name(), "open");
+    }
+
+    #[test]
+    fn cancel_token_cuts_a_cooperative_sleep_short() {
+        let token = CancelToken::new();
+        assert!(token.sleep_cooperative(Duration::from_millis(1)), "uncancelled: full sleep");
+        let peer = token.clone();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            peer.cancel();
+        });
+        let t = Instant::now();
+        assert!(
+            !token.sleep_cooperative(Duration::from_secs(30)),
+            "cancellation aborts the hang"
+        );
+        assert!(t.elapsed() < Duration::from_secs(10), "woke long before the full duration");
+        assert!(token.is_cancelled());
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn inflight_expire_fires_each_deadline_once() {
+        let table = InFlight::new();
+        let now = Instant::now();
+        let a = CancelToken::new();
+        let b = CancelToken::new();
+        table.begin(1, "b580", now + Duration::from_millis(10), a.clone());
+        table.begin(2, "lnl", now + Duration::from_secs(60), b.clone());
+        assert_eq!(table.len(), 2);
+
+        assert!(table.expire(now).is_empty(), "nothing due yet");
+        let fired = table.expire(now + Duration::from_millis(20));
+        assert_eq!(fired, vec![(1, "b580".to_string())]);
+        assert!(a.is_cancelled() && !b.is_cancelled());
+        assert!(
+            table.expire(now + Duration::from_millis(30)).is_empty(),
+            "a deadline fires exactly once"
+        );
+
+        table.end(1, "b580");
+        table.end(2, "lnl");
+        assert!(table.is_empty());
+    }
+
+    #[test]
+    fn backoff_is_exponential_bounded_and_deterministic() {
+        let base = Duration::from_millis(100);
+        let d1 = backoff_delay(base, 1, 7, "b580");
+        let d2 = backoff_delay(base, 2, 7, "b580");
+        let d3 = backoff_delay(base, 3, 7, "b580");
+        // Each step stays inside its ±25% jitter envelope.
+        let envelope = |d: Duration, ms: f64| {
+            let v = d.as_secs_f64() * 1000.0;
+            assert!((ms * 0.75..ms * 1.25).contains(&v), "{v} vs {ms}");
+        };
+        envelope(d1, 100.0);
+        envelope(d2, 200.0);
+        envelope(d3, 400.0);
+        assert_eq!(d1, backoff_delay(base, 1, 7, "b580"), "deterministic");
+        assert_ne!(
+            backoff_delay(base, 1, 7, "b580"),
+            backoff_delay(base, 1, 8, "b580"),
+            "different jobs desynchronize"
+        );
+        // The exponent saturates instead of overflowing.
+        let huge = backoff_delay(base, 60, 7, "b580");
+        assert!(huge <= Duration::from_secs(9), "capped at base * 2^6 * 1.25");
+    }
+}

@@ -1,0 +1,294 @@
+//! Chaos end-to-end: a real daemon under the committed fault plan
+//! (`chaos_plan.txt`) must drive every job to a terminal state — retried
+//! units commit exactly once, hung units hit their deadline and
+//! recover, poison units quarantine, fan-out jobs degrade to `partial`
+//! naming the dead lane, and nothing is ever lost.
+//!
+//! When `KF_E2E_FAULT_DIR` is set (CI), the journal / db / trace files
+//! are left there for `scripts/check_faults.py`, which independently
+//! folds the journal and asserts every dispatched unit reached exactly
+//! one terminal verdict.
+
+use kernelfoundry::dist::Database;
+use kernelfoundry::hwsim::DeviceProfile;
+use kernelfoundry::obs::{stage, TraceSink};
+use kernelfoundry::service::{
+    cache, proto, Client, DeviceTarget, FaultPlan, GuardConfig, JobSpec, KernelService, Request,
+    Server, ServiceConfig,
+};
+use kernelfoundry::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The committed plan this e2e (and the CI chaos step) runs under.
+fn plan_path() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/chaos_plan.txt"))
+}
+
+/// Artifact location: `KF_E2E_FAULT_DIR` when set (CI inspects and
+/// uploads the fault logs after the suite), else the system temp dir.
+fn fault_dir() -> (PathBuf, bool) {
+    match std::env::var("KF_E2E_FAULT_DIR") {
+        Ok(dir) => {
+            let dir = PathBuf::from(dir);
+            let _ = std::fs::create_dir_all(&dir);
+            (dir, true)
+        }
+        Err(_) => (std::env::temp_dir(), false),
+    }
+}
+
+fn spec_for(task: &str, device: &str, seed: u64) -> JobSpec {
+    let mut spec = JobSpec::catalog(task, device);
+    spec.iters = 3;
+    spec.population = 2;
+    spec.seed = seed;
+    spec
+}
+
+fn submit(client: &mut Client, spec: JobSpec) -> u64 {
+    let resp = client.request(&Request::Submit(spec)).expect("submit rpc");
+    assert!(proto::response_ok(&resp), "submit failed: {resp}");
+    resp.get("job_id").and_then(|v| v.as_usize()).expect("job_id") as u64
+}
+
+/// Poll `status` to ANY terminal state (the chaos run produces `done`,
+/// `partial` and `failed` jobs by design) and return it.
+fn poll_terminal(client: &mut Client, id: u64) -> String {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let resp = client.request(&Request::Status(id)).expect("status rpc");
+        assert!(proto::response_ok(&resp), "status failed: {resp}");
+        let state = resp.get("state").and_then(|s| s.as_str()).unwrap().to_string();
+        if matches!(state.as_str(), "done" | "partial" | "failed" | "cancelled") {
+            return state;
+        }
+        assert!(Instant::now() < deadline, "job {id} stuck in state {state}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Fetch the full result object (the `result` verb serves any finished
+/// job, including failed and partial ones, with `results` + `errors`).
+fn fetch_result(client: &mut Client, id: u64) -> Json {
+    let resp = client.request(&Request::Result(id)).expect("result rpc");
+    assert!(proto::response_ok(&resp), "result failed: {resp}");
+    resp
+}
+
+/// Devices that delivered a result object for this job.
+fn result_devices(result: &Json) -> Vec<String> {
+    result
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .map(|rs| {
+            rs.iter()
+                .filter_map(|r| r.get("device").and_then(|d| d.as_str()))
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// The error string recorded for one device's unit (empty if none).
+fn error_for(result: &Json, device: &str) -> String {
+    result
+        .get("errors")
+        .and_then(|e| e.as_arr())
+        .and_then(|errs| {
+            errs.iter()
+                .find(|e| e.get("device").and_then(|d| d.as_str()) == Some(device))
+        })
+        .and_then(|e| e.get("error").and_then(|m| m.as_str()))
+        .unwrap_or("")
+        .to_string()
+}
+
+/// Whether the (single) result object carries a correct kernel — only
+/// correct verdicts are write-through persisted as db rows.
+fn is_correct(result: &Json) -> bool {
+    result
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .and_then(|rs| rs.first())
+        .and_then(|r| r.get("correct"))
+        .and_then(|c| c.as_bool())
+        == Some(true)
+}
+
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| {
+            l.strip_prefix(name)
+                .and_then(|rest| rest.strip_prefix(' '))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or_else(|| panic!("metric {name} missing from exposition:\n{text}"))
+}
+
+fn rows_for_key(db_path: &Path, key: &str) -> usize {
+    let db = Database::new();
+    db.load_tolerant(db_path).expect("db loads");
+    db.rows().iter().filter(|r| r.run == key).count()
+}
+
+/// The whole chaos scenario in one flow (one daemon, five jobs), so the
+/// lane states evolve exactly as the committed plan scripts them.
+#[test]
+fn chaos_plan_drives_every_job_to_a_terminal_state() {
+    let (dir, keep) = fault_dir();
+    let journal = dir.join("kf_e2e_chaos.journal.jsonl");
+    let db = dir.join("kf_e2e_chaos.db.jsonl");
+    let trace = dir.join("kf_e2e_chaos.trace.jsonl");
+    for p in [&journal, &db, &trace] {
+        let _ = std::fs::remove_file(p);
+    }
+
+    let plan = FaultPlan::load(&plan_path()).expect("committed chaos plan parses");
+    assert_eq!(plan.len(), 3, "chaos_plan.txt drifted from the scenario");
+    let service = KernelService::start(ServiceConfig {
+        devices: vec![DeviceProfile::lnl(), DeviceProfile::b580(), DeviceProfile::a6000()],
+        compile_workers: 1,
+        exec_workers: 2,
+        queue_capacity: 16,
+        db_path: Some(db.clone()),
+        journal_path: Some(journal.clone()),
+        trace_path: Some(trace.clone()),
+        guard: GuardConfig {
+            max_retries: 2,
+            unit_deadline: Some(Duration::from_millis(2500)),
+            trip_threshold: 2,
+            retry_backoff: Duration::from_millis(50),
+            lane_cooldown: Duration::from_millis(1500),
+        },
+        fault_plan: Some(plan),
+        ..ServiceConfig::default()
+    })
+    .expect("service starts");
+    let mut server = Server::start(Arc::clone(&service), "127.0.0.1:0").expect("server binds");
+    let mut client = Client::connect(&server.addr().to_string()).expect("client connects");
+
+    // J1 — transient compile fault on b580: one retry, then commits.
+    let j1_spec = spec_for("20_LeakyReLU", "b580", 1);
+    let j1 = submit(&mut client, j1_spec.clone());
+    assert_eq!(poll_terminal(&mut client, j1), "done", "retry must recover the unit");
+    let j1_result = fetch_result(&mut client, j1);
+
+    // J2 — 10s exec hang on lnl vs a 2.5s unit deadline: the deadline
+    // cancels the attempt, the retry runs clean.
+    let j2_spec = spec_for("21_Sigmoid", "lnl", 2);
+    let j2 = submit(&mut client, j2_spec.clone());
+    assert_eq!(poll_terminal(&mut client, j2), "done", "deadline + retry must recover");
+    let j2_result = fetch_result(&mut client, j2);
+
+    // J3 — the dead lane: retries exhaust, the unit quarantines with a
+    // deterministic failure verdict, and the breaker trips open.
+    let j3 = submit(&mut client, spec_for("20_LeakyReLU", "a6000", 3));
+    assert_eq!(poll_terminal(&mut client, j3), "failed");
+    let j3_err = error_for(&fetch_result(&mut client, j3), "a6000");
+    assert!(
+        j3_err.contains("quarantined after 3 attempts"),
+        "poison verdict names the exhausted budget: {j3_err}"
+    );
+
+    // J4 — fan-out across the fleet with a6000 down: the job degrades
+    // to `partial`, the failed unit names the dead lane, the healthy
+    // units still deliver.
+    let mut fan = spec_for("20_LeakyReLU", "b580", 4);
+    fan.device = DeviceTarget::FanOut;
+    let j4 = submit(&mut client, fan);
+    assert_eq!(
+        poll_terminal(&mut client, j4),
+        "partial",
+        "fan-out must degrade to the surviving subset, not fail outright"
+    );
+    let j4_result = fetch_result(&mut client, j4);
+    let mut j4_devices = result_devices(&j4_result);
+    j4_devices.sort_unstable();
+    assert_eq!(j4_devices, vec!["b580", "lnl"], "healthy lanes delivered: {j4_result}");
+    let j4_err = error_for(&j4_result, "a6000");
+    assert!(j4_err.contains("a6000"), "partial verdict names the dead lane: {j4_err}");
+
+    // J5 — a routed job aimed straight at the dead lane: either the
+    // open breaker reroutes it to a healthy peer (done, elsewhere) or a
+    // half-open probe burns its budget (quarantined). Lost is the only
+    // wrong answer.
+    let j5 = submit(&mut client, spec_for("20_LeakyReLU", "a6000", 5));
+    match poll_terminal(&mut client, j5).as_str() {
+        "done" => {
+            let j5_result = fetch_result(&mut client, j5);
+            let devices = result_devices(&j5_result);
+            assert_eq!(devices.len(), 1, "{j5_result}");
+            assert_ne!(
+                devices[0], "a6000",
+                "a done unit must have been rerouted off the dead lane: {j5_result}"
+            );
+        }
+        "failed" => {
+            let j5_err = fetch_result(&mut client, j5).to_string();
+            assert!(
+                j5_err.contains("quarantined") || j5_err.contains("circuit breaker"),
+                "a failed routed unit must carry the quarantine/breaker verdict: {j5_err}"
+            );
+        }
+        other => panic!("job {j5} ended in unexpected state {other}"),
+    }
+
+    // Fleet + journal accounting: the dead lane is visibly open (or
+    // probing), retries and the quarantine are counted, nothing lost.
+    let stats = client.request(&Request::Stats).expect("stats rpc");
+    let fleet = stats.get("fleet").unwrap().as_arr().unwrap();
+    let a6000 = fleet
+        .iter()
+        .find(|l| l.get("device").and_then(|d| d.as_str()) == Some("a6000"))
+        .unwrap();
+    assert!(
+        matches!(a6000.get("state").and_then(|s| s.as_str()), Some("open") | Some("half_open")),
+        "dead lane's breaker is not closed: {stats}"
+    );
+    assert!(a6000.get("quarantined").unwrap().as_f64().unwrap() >= 1.0, "{stats}");
+    assert_eq!(stats.get_path("journal.lost_jobs").unwrap().as_f64(), Some(0.0), "{stats}");
+
+    let resp = client.request(&Request::Metrics(None)).expect("metrics rpc");
+    let text = resp.get("prometheus").unwrap().as_str().unwrap().to_string();
+    assert!(metric_value(&text, "kf_retry_total") >= 5.0, "{text}");
+    assert!(metric_value(&text, "kf_units_quarantined_total") >= 1.0, "{text}");
+    assert!(metric_value(&text, "kf_deadline_exceeded_total") >= 1.0, "{text}");
+    assert!(metric_value(&text, "kf_faults_injected_total") >= 6.0, "{text}");
+
+    server.shutdown();
+    server.wait();
+    service.stop();
+
+    // Exactly one verdict row per recovered *correct* unit (only
+    // correct kernels are write-through persisted), never more — and
+    // none at all for the poison unit.
+    let j1_rows = rows_for_key(&db, &cache::cache_key(&j1_spec, "b580"));
+    assert_eq!(j1_rows, usize::from(is_correct(&j1_result)), "retried unit commits once");
+    let j2_rows = rows_for_key(&db, &cache::cache_key(&j2_spec, "lnl"));
+    assert_eq!(j2_rows, usize::from(is_correct(&j2_result)), "deadline-retried unit commits once");
+    assert_eq!(
+        rows_for_key(&db, &cache::cache_key(&spec_for("20_LeakyReLU", "a6000", 3), "a6000")),
+        0,
+        "a quarantined unit never publishes a row"
+    );
+
+    // The trace sink carries the fault-tolerance lifecycle stages.
+    let j1_stages: Vec<String> =
+        TraceSink::timeline(&trace, j1).iter().map(|e| e.stage.clone()).collect();
+    assert!(j1_stages.contains(&stage::RETRIED.to_string()), "{j1_stages:?}");
+    let j3_stages: Vec<String> =
+        TraceSink::timeline(&trace, j3).iter().map(|e| e.stage.clone()).collect();
+    assert_eq!(
+        j3_stages.iter().filter(|s| *s == stage::QUARANTINED).count(),
+        1,
+        "exactly one quarantine verdict for the poison unit: {j3_stages:?}"
+    );
+
+    if !keep {
+        for p in [&journal, &db, &trace] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}

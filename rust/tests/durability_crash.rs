@@ -32,6 +32,17 @@ fn bin() -> &'static str {
 /// Spawn `kernelfoundry daemon` with the given journal/db/TTL and an
 /// optional armed fail-point; parse the listen address from stdout.
 fn spawn_daemon(journal: &Path, db: &Path, ttl_secs: u64, failpoints: &str) -> Daemon {
+    spawn_daemon_with(journal, db, ttl_secs, failpoints, &[])
+}
+
+/// [`spawn_daemon`] with extra CLI flags (fault plans, retry knobs).
+fn spawn_daemon_with(
+    journal: &Path,
+    db: &Path,
+    ttl_secs: u64,
+    failpoints: &str,
+    extra: &[&str],
+) -> Daemon {
     let mut cmd = Command::new(bin());
     cmd.args([
         "daemon",
@@ -50,6 +61,7 @@ fn spawn_daemon(journal: &Path, db: &Path, ttl_secs: u64, failpoints: &str) -> D
         "--lease-ttl",
         &ttl_secs.to_string(),
     ])
+    .args(extra)
     .env(failpoint::ENV_VAR, failpoints)
     .stdout(Stdio::piped())
     .stderr(Stdio::null());
@@ -269,6 +281,134 @@ fn crash_after_dispatch_requeues_and_commits_once() {
         .count();
     assert_eq!(commits, 1, "the re-run committed exactly once");
     assert_eq!(rows_for_key(&db, &key), 1, "exactly one verdict row for the re-run");
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&db);
+}
+
+/// Crash between the Retry journal record and the actual re-dispatch:
+/// the restart must neither lose the unit nor double-commit it. The
+/// Retry record carries the attempt count forward, so the replayed run
+/// starts at attempt 1 — past the `times=1` injected fault — and
+/// commits exactly one verdict row.
+#[test]
+fn crash_between_retry_journal_and_redispatch_commits_once() {
+    let (journal, db) = temp_paths("retry");
+    let key = cache::cache_key(&crash_spec(), "b580");
+    let plan = std::env::temp_dir()
+        .join(format!("kf_crash_retry_{}.plan.txt", std::process::id()));
+    std::fs::write(&plan, "b580 compile fail times=1\n").unwrap();
+    let extra = [
+        "--fault-plan",
+        plan.to_str().unwrap(),
+        "--max-retries",
+        "2",
+        "--retry-backoff-ms",
+        "5",
+    ];
+
+    // Attempt 0 hits the injected compile fault; the lane journals the
+    // Retry record and the armed fail-point aborts the process before
+    // the unit re-enters the queue.
+    let mut daemon = spawn_daemon_with(&journal, &db, 1, "retry.after_journal", &extra);
+    let mut client = daemon.client();
+    assert_eq!(submit(&mut client, crash_spec()), 1);
+    daemon.wait_for_exit(Duration::from_secs(120));
+
+    let records = Journal::load_records(&journal).expect("journal readable after abort");
+    let retries = records
+        .iter()
+        .filter(|r| matches!(r, JournalRecord::Retry { job_id: 1, .. }))
+        .count();
+    assert_eq!(retries, 1, "exactly one durable retry record: {records:?}");
+    assert!(
+        !records.iter().any(|r| matches!(r, JournalRecord::Commit { .. })),
+        "no commit survived the crash: {records:?}"
+    );
+    assert_eq!(rows_for_key(&db, &key), 0, "crash was before any verdict row");
+
+    // Restart under the same plan: replay requeues the unit at attempt
+    // 1, past the times=1 fault, so the re-run is clean.
+    std::thread::sleep(Duration::from_millis(1500));
+    let mut daemon = spawn_daemon_with(&journal, &db, 1, "", &extra);
+    let mut client = daemon.client();
+    poll_done(&mut client, 1);
+
+    let stats = client.request(&Request::Stats).expect("stats rpc");
+    assert_eq!(stat_u64(&stats, "journal.requeued_units"), 1, "{stats}");
+    assert_eq!(stat_u64(&stats, "journal.lost_jobs"), 0, "{stats}");
+    daemon.shutdown();
+
+    let records = Journal::load_records(&journal).expect("journal readable");
+    let commits = records
+        .iter()
+        .filter(|r| matches!(r, JournalRecord::Commit { job_id: 1, .. }))
+        .count();
+    assert_eq!(commits, 1, "the retried unit committed exactly once");
+    assert_eq!(rows_for_key(&db, &key), 1, "exactly one verdict row for the retried unit");
+    let _ = std::fs::remove_file(&plan);
+    let _ = std::fs::remove_file(&journal);
+    let _ = std::fs::remove_file(&db);
+}
+
+/// Crash between the Quarantine journal record and the job-table
+/// update: replay must land the unit as failed (the deterministic
+/// quarantine verdict) — not re-run it, not lose it.
+#[test]
+fn crash_at_quarantine_journal_replays_the_failure_verdict() {
+    let (journal, db) = temp_paths("quarantine");
+    let key = cache::cache_key(&crash_spec(), "b580");
+    let plan = std::env::temp_dir()
+        .join(format!("kf_crash_quar_{}.plan.txt", std::process::id()));
+    std::fs::write(&plan, "b580 * dead\n").unwrap();
+    let extra = [
+        "--fault-plan",
+        plan.to_str().unwrap(),
+        "--max-retries",
+        "0",
+        "--lane-trip-threshold",
+        "100",
+    ];
+
+    // max-retries 0: the first failure exhausts the budget, the lane
+    // journals the Quarantine record and the fail-point aborts before
+    // the job table sees the verdict.
+    let mut daemon = spawn_daemon_with(&journal, &db, 1, "quarantine.after_journal", &extra);
+    let mut client = daemon.client();
+    assert_eq!(submit(&mut client, crash_spec()), 1);
+    daemon.wait_for_exit(Duration::from_secs(120));
+
+    let records = Journal::load_records(&journal).expect("journal readable after abort");
+    assert!(
+        records.iter().any(|r| matches!(r, JournalRecord::Quarantine { job_id: 1, .. })),
+        "quarantine was journaled before the crash: {records:?}"
+    );
+
+    // Restart unarmed and without the plan: if replay wrongly requeued
+    // the unit it would now run clean and commit — the assertions below
+    // catch exactly that.
+    std::thread::sleep(Duration::from_millis(1500));
+    let mut daemon = spawn_daemon(&journal, &db, 1, "");
+    let mut client = daemon.client();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let resp = client.request(&Request::Status(1)).expect("status rpc");
+        let state = resp.get("state").and_then(|s| s.as_str()).unwrap_or("").to_string();
+        if state == "failed" {
+            break;
+        }
+        assert!(
+            state != "done",
+            "quarantined unit must not be re-run to success: {resp}"
+        );
+        assert!(Instant::now() < deadline, "job 1 stuck in {state}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let stats = client.request(&Request::Stats).expect("stats rpc");
+    assert_eq!(stat_u64(&stats, "journal.requeued_units"), 0, "{stats}");
+    assert_eq!(stat_u64(&stats, "journal.lost_jobs"), 0, "{stats}");
+    daemon.shutdown();
+    assert_eq!(rows_for_key(&db, &key), 0, "a quarantined unit never publishes a row");
+    let _ = std::fs::remove_file(&plan);
     let _ = std::fs::remove_file(&journal);
     let _ = std::fs::remove_file(&db);
 }

@@ -229,7 +229,8 @@ fn fake_result(device: &str, id: u64) -> DeviceResult {
 
 /// Generator of random journal logs: each job is left at a random
 /// lifecycle stage (submitted / dispatched / committed / failed /
-/// cancelled / cached) on a random device.
+/// cancelled / cached / mid-retry / quarantined / rerouted) on a
+/// random device.
 struct JournalLogs;
 impl Gen for JournalLogs {
     type Value = Vec<JournalRecord>;
@@ -242,9 +243,10 @@ impl Gen for JournalLogs {
         for j in 0..n_jobs {
             let job_id = j as u64 + 1;
             let device = if rng.below(2) == 0 { "b580" } else { "lnl" };
+            let other = if device == "b580" { "lnl" } else { "b580" };
             let mut spec = JobSpec::catalog("20_LeakyReLU", device);
             spec.seed = job_id;
-            let stage = rng.below(6);
+            let stage = rng.below(9);
             recs.push(JournalRecord::Submit {
                 job_id,
                 spec,
@@ -253,7 +255,7 @@ impl Gen for JournalLogs {
                     cached: stage == 5,
                 }],
             });
-            if (1..5).contains(&stage) {
+            if (1..5).contains(&stage) || stage == 6 || stage == 7 {
                 recs.push(JournalRecord::Dispatch {
                     job_id,
                     device: device.to_string(),
@@ -274,6 +276,50 @@ impl Gen for JournalLogs {
                     job_id,
                     devices: vec![device.to_string()],
                 }),
+                // Crashed mid-retry: the unit replays as queued with its
+                // attempt budget intact.
+                6 => recs.push(JournalRecord::Retry {
+                    job_id,
+                    device: device.to_string(),
+                    attempt: 1,
+                    error: "transient".to_string(),
+                }),
+                // Retried once, then quarantined: a terminal verdict.
+                7 => {
+                    recs.push(JournalRecord::Retry {
+                        job_id,
+                        device: device.to_string(),
+                        attempt: 1,
+                        error: "transient".to_string(),
+                    });
+                    recs.push(JournalRecord::Dispatch {
+                        job_id,
+                        device: device.to_string(),
+                    });
+                    recs.push(JournalRecord::Quarantine {
+                        job_id,
+                        device: device.to_string(),
+                        error: "transient".to_string(),
+                        attempts: 2,
+                    });
+                }
+                // Rerouted off a tripped lane, then finished elsewhere.
+                8 => {
+                    recs.push(JournalRecord::Reroute {
+                        job_id,
+                        from: device.to_string(),
+                        to: other.to_string(),
+                    });
+                    recs.push(JournalRecord::Dispatch {
+                        job_id,
+                        device: other.to_string(),
+                    });
+                    recs.push(JournalRecord::Commit {
+                        job_id,
+                        device: other.to_string(),
+                        result: fake_result(other, job_id),
+                    });
+                }
                 _ => {}
             }
         }

@@ -1,0 +1,179 @@
+#!/usr/bin/env python3
+"""CI invariants over the chaos run's job journal (DESIGN.md §11).
+
+Scans the `*.journal.jsonl` files the chaos e2e leaves behind when
+`KF_E2E_FAULT_DIR` is set and independently re-folds the unit lineages
+the same way daemon replay does, failing if fault handling violated a
+durability invariant:
+
+  * a unit with dispatch/retry activity never reached a terminal record
+    (commit / fail / quarantine / cancel) and was not rerouted away —
+    i.e. the fleet lost a unit;
+  * a submitted (non-cached) unit's lineage, followed through reroutes,
+    never terminates — i.e. the service lost a job;
+  * a unit committed more than once — the exactly-once commit contract
+    a retry must never break;
+  * a unit both committed and carries a failure verdict — conflicting
+    terminal states for one lineage.
+
+The scan also requires at least one `retry` and one `quarantine` record
+across the directory, proving the committed fault plan actually fired
+(a chaos run where nothing went wrong tests nothing).
+
+Torn final lines (crash-cut journals) are tolerated the same way the
+Rust loader tolerates them.
+
+Usage: check_faults.py <fault-dir>
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+def scan(path):
+    """Parse one journal into a list of record dicts."""
+    records = []
+    with open(path, encoding="utf-8") as fh:
+        lines = fh.read().splitlines()
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            records.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                continue  # torn tail from a crash-cut append
+            raise SystemExit(f"{path}:{i + 1}: malformed mid-file journal line")
+    return records
+
+
+def fold(records):
+    """Fold records into per-(job, device) lineages.
+
+    Returns (lineages, submitted, counts) where lineages maps
+    (job, device) -> {"active": bool, "terminals": [kinds],
+    "commits": int, "rerouted_to": device | None} and submitted is the
+    set of (job, device) units admitted by non-cached submit records.
+    """
+    lineages = {}
+    submitted = set()
+    counts = {"retry": 0, "quarantine": 0, "reroute": 0, "commit": 0}
+
+    def lane(job, device):
+        return lineages.setdefault(
+            (job, device),
+            {"active": False, "terminals": [], "commits": 0, "rerouted_to": None},
+        )
+
+    for rec in records:
+        kind = rec.get("t")
+        job = rec.get("job_id")
+        if kind == "submit":
+            for unit in rec.get("units", []):
+                if not unit.get("cached"):
+                    submitted.add((job, unit["device"]))
+                    lane(job, unit["device"])
+        elif kind == "dispatch":
+            lane(job, rec["device"])["active"] = True
+        elif kind == "retry":
+            counts["retry"] += 1
+            lane(job, rec["device"])["active"] = True
+        elif kind == "reroute":
+            counts["reroute"] += 1
+            lane(job, rec["from"])["rerouted_to"] = rec["to"]
+            lane(job, rec["to"])
+        elif kind == "commit":
+            counts["commit"] += 1
+            entry = lane(job, rec["device"])
+            entry["commits"] += 1
+            entry["terminals"].append("commit")
+        elif kind == "fail":
+            lane(job, rec["device"])["terminals"].append("fail")
+        elif kind == "quarantine":
+            counts["quarantine"] += 1
+            lane(job, rec["device"])["terminals"].append("quarantine")
+        elif kind == "cancel":
+            for device in rec.get("devices", []):
+                lane(job, device)["terminals"].append("cancel")
+    return lineages, submitted, counts
+
+
+def terminates(lineages, job, device, seen=None):
+    """Whether a lineage reaches a terminal record, following reroutes."""
+    seen = seen or set()
+    if (job, device) in seen:
+        return False  # reroute cycle: nothing terminal on it
+    seen.add((job, device))
+    entry = lineages.get((job, device))
+    if entry is None:
+        return False
+    if entry["terminals"]:
+        return True
+    if entry["rerouted_to"] is not None:
+        return terminates(lineages, job, entry["rerouted_to"], seen)
+    return False
+
+
+def check(path, lineages, submitted):
+    """Return a list of invariant violations for one journal."""
+    problems = []
+    for (job, device), entry in sorted(lineages.items()):
+        where = f"{path}: job {job} unit {device}"
+        if entry["commits"] > 1:
+            problems.append(f"{where} committed {entry['commits']} times")
+        if entry["commits"] and any(
+            t in ("fail", "quarantine") for t in entry["terminals"]
+        ):
+            problems.append(
+                f"{where} has conflicting terminal records: {entry['terminals']}"
+            )
+        if (
+            entry["active"]
+            and not entry["terminals"]
+            and entry["rerouted_to"] is None
+        ):
+            problems.append(f"{where} was dispatched but never reached a verdict")
+    for job, device in sorted(submitted):
+        if not terminates(lineages, job, device):
+            problems.append(
+                f"{path}: job {job} unit {device} was submitted but its "
+                "lineage never terminates (lost job)"
+            )
+    return problems
+
+
+def main():
+    if len(sys.argv) != 2:
+        raise SystemExit(__doc__)
+    fault_dir = sys.argv[1]
+    files = sorted(glob.glob(os.path.join(fault_dir, "*.journal.jsonl")))
+    if not files:
+        raise SystemExit(f"no *.journal.jsonl files under {fault_dir}; "
+                         "was KF_E2E_FAULT_DIR exported for the chaos run?")
+    bad = []
+    units = 0
+    totals = {"retry": 0, "quarantine": 0, "reroute": 0, "commit": 0}
+    for path in files:
+        lineages, submitted, counts = fold(scan(path))
+        units += len(lineages)
+        for key in totals:
+            totals[key] += counts[key]
+        bad.extend(check(path, lineages, submitted))
+    if totals["retry"] == 0:
+        bad.append(f"{fault_dir}: no retry records — the fault plan never fired")
+    if totals["quarantine"] == 0:
+        bad.append(f"{fault_dir}: no quarantine records — the dead lane "
+                   "never poisoned a unit")
+    if bad:
+        raise SystemExit("\n".join(bad))
+    print(f"OK: {units} unit lineage(s) across {len(files)} journal(s); "
+          f"{totals['retry']} retries, {totals['reroute']} reroutes, "
+          f"{totals['quarantine']} quarantines, {totals['commit']} commits; "
+          "every lineage terminated exactly once")
+
+
+if __name__ == "__main__":
+    main()

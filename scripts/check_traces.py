@@ -40,10 +40,11 @@ def scan(path):
             if i == len(lines) - 1:
                 continue  # torn tail from a crash-cut append
             raise SystemExit(f"{path}:{i + 1}: malformed mid-file trace line")
-        # Alert transitions are mirrored into the sink as fleet-health
-        # events (job 0, stage `alert_*`) — they are not job lifecycle
-        # stages, so they never participate in the ordering invariants.
-        if str(ev["t"]).startswith("alert"):
+        # Alert transitions and lane circuit-breaker flips are mirrored
+        # into the sink as fleet-health events (job 0, stage `alert_*` /
+        # `lane_*`) — they are not job lifecycle stages, so they never
+        # participate in the ordering invariants.
+        if str(ev["t"]).startswith(("alert", "lane")):
             continue
         stages.setdefault(ev["job"], []).append(ev["t"])
     return stages
